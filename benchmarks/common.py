@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: wall-clock timing of jitted fns on CPU and
+CSV emission (name,us_per_call,derived).
+
+CPU wall time is a *trend* signal for the XLA-fused jnp ABFT paths (the
+same fusion structure XLA:TPU sees); Pallas kernels are timed in interpret
+mode only for completeness (correctness-path, not perf) and their §Perf
+claims come from the roofline model instead. Every row's `derived` column
+carries the structural metric (overhead %, flops ratio …) that transfers
+to TPU.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (µs) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def flops_of(fn, *args) -> float:
+    return float(jax.jit(fn).lower(*args).compile()
+                 .cost_analysis().get("flops", 0.0))
+
+
+def bytes_of(fn, *args) -> float:
+    return float(jax.jit(fn).lower(*args).compile()
+                 .cost_analysis().get("bytes accessed", 0.0))

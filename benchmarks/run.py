@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §7).
+
+    PYTHONPATH=src python -m benchmarks.run [--only ft_schemes]
+
+Prints ``name,us_per_call,derived`` CSV rows (us = NaN for structural-only
+rows; see benchmarks/common.py for what transfers to TPU and what is a
+CPU-trend measurement).
+"""
+import argparse
+import sys
+import traceback
+
+SUITES = ("stepwise_gemm", "ft_schemes", "codegen_shapes",
+          "error_injection", "online_vs_offline", "moe_dispatch",
+          "flash_attention")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=SUITES)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name in SUITES:
+        if args.only and name != args.only:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        try:
+            mod.run()
+        except Exception:                     # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Fig. 9 analogue — step-wise GEMM optimization ladder.
+
+The paper climbs: naive → threadblock tiling → thread tiling → warp tiling →
+vectorized → prefetch (611 → 4654 GFLOPS on a T4). The TPU ladder collapses
+several rungs into the Pallas/Mosaic model (DESIGN.md §2), so ours is:
+
+  r0  XLA jnp.dot           — the "vendor library" baseline (cuBLAS analogue)
+  r1  naive Pallas          — one output block, whole-K operands in VMEM
+  r2  tiled Pallas          — (bm,bn,bk) BlockSpec grid + f32 VMEM accumulator
+  r3  autotuned Pallas      — shape-class params (§3.2 codegen)
+
+Derived metrics that transfer to TPU: VMEM working set (must fit 16 MiB) and
+HBM traffic factor = bytes moved / minimum. Wall time is interpret-mode
+(correctness path) for kernels, XLA-CPU for r0.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune, gemm, ops
+from .common import emit, time_fn
+
+
+def hbm_traffic_factor(m, n, k, bm, bn, bk):
+    """Bytes moved from HBM relative to the compulsory minimum.
+    Tiled GEMM re-reads A once per column-block and B once per row-block."""
+    reads = m * k * (n // bn) + k * n * (m // bm) + m * n
+    return reads / (m * k + k * n + m * n)
+
+
+def run() -> None:
+    m = n = k = 512
+    a = jnp.asarray(np.random.default_rng(0).normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(np.random.default_rng(1).normal(size=(k, n)), jnp.float32)
+
+    r0 = jax.jit(lambda a, b: a @ b)
+    emit("stepwise/r0_xla_dot", time_fn(r0, a, b), "baseline")
+
+    out_naive = gemm.naive_gemm(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_naive), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-3)
+    vmem_naive = (128 * k + k * 128 + 128 * 128) * 4
+    emit("stepwise/r1_naive_pallas", float("nan"),
+         f"vmem={vmem_naive/2**20:.2f}MiB(scales with K — OOVMEM beyond "
+         f"K~16k; no k-pipeline) correct=1")
+
+    p = autotune.KernelParams(128, 128, 128)
+    out_tiled = ops.matmul(a, b, params=p, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_tiled), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-3)
+    emit("stepwise/r2_tiled_pallas", float("nan"),
+         f"vmem={p.vmem_bytes(4)/2**20:.2f}MiB traffic_x"
+         f"={hbm_traffic_factor(m, n, k, p.bm, p.bn, p.bk):.1f} correct=1")
+
+    pa = autotune.build_params(m, n, k)
+    out_auto = ops.matmul(a, b, params=pa, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_auto), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-3)
+    emit("stepwise/r3_autotuned_pallas", float("nan"),
+         f"class={pa.shape_class} vmem={pa.vmem_bytes(4)/2**20:.2f}MiB "
+         f"traffic_x={hbm_traffic_factor(m, n, k, pa.bm, pa.bn, pa.bk):.1f} "
+         f"correct=1")

@@ -1,0 +1,85 @@
+"""Quickstart — the paper's technique in four acts, on CPU, in ~a minute.
+
+  1. a fault-tolerant GEMM that detects AND corrects an injected SDC;
+  2. the fused Pallas TPU kernel doing the same (interpret mode);
+  3. a whole transformer forward pass surviving SEUs in every projection;
+  4. training-step SDC telemetry.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ft_dot, ft_verdict_dot, ONLINE_BLOCK, InjectionSpec,
+                        ft_scope)
+from repro.kernels import ops as kops
+from repro.configs import registry
+from repro.models import model_zoo
+from repro.models.blocks import Ctx
+
+print("=" * 70)
+print("1. Online ABFT on a single GEMM (jnp path)")
+print("=" * 70)
+a = jax.random.normal(jax.random.PRNGKey(0), (256, 512))
+w = jax.random.normal(jax.random.PRNGKey(1), (512, 384))
+spec = InjectionSpec(row=17, col=200, magnitude=1e4)   # a big SDC
+corrupted_then_fixed, verdict = ft_verdict_dot(a, w, ONLINE_BLOCK, spec=spec)
+err = float(jnp.max(jnp.abs(corrupted_then_fixed - a @ w)))
+print(f"injected SEU of magnitude 1e4 at (17, 200)")
+print(f"detected={bool(verdict.detected)} located=({int(verdict.row)}, "
+      f"{int(verdict.col)}) estimated magnitude={float(verdict.magnitude):.1f}")
+print(f"max |corrected - reference| = {err:.2e}  ✓ corrected online\n")
+
+print("=" * 70)
+print("2. Fused Pallas TPU kernel (validated in interpret mode)")
+print("=" * 70)
+out, report = kops.ft_matmul_report(a, w, ft=ONLINE_BLOCK, spec=spec)
+hit = np.argwhere(np.asarray(report[..., 0]) > 0)[0]
+blk = np.asarray(report[hit[0], hit[1]])
+print(f"kernel report: detections={int(report[..., 0].sum())}, "
+      f"located global=({int(blk[2])}, {int(blk[3])}), "
+      f"magnitude={blk[4]:.1f}, tau={blk[6]:.2e}")
+print(f"max err vs reference: "
+      f"{float(jnp.max(jnp.abs(out - a @ w))):.2e}\n")
+
+print("=" * 70)
+print("3. A transformer forward pass with SEUs in EVERY projection")
+print("=" * 70)
+cfg = registry.get_smoke("qwen2-7b")
+mod = model_zoo.module_for(cfg)
+params = mod.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 64), 0,
+                            cfg.vocab_size)
+clean_ctx = Ctx(ft=ONLINE_BLOCK, key=None, dtype=jnp.float32)
+hostile_ctx = Ctx(ft=ONLINE_BLOCK.replace(inject_rate=1.0),
+                  key=jax.random.PRNGKey(3), dtype=jnp.float32)
+logits_clean, _ = mod.forward(params, tokens, cfg, clean_ctx, remat=False,
+                              chunk=32)
+logits_hostile, aux = mod.forward(params, tokens, cfg, hostile_ctx,
+                                  remat=False, chunk=32)
+print(f"SEUs injected into every protected GEMM: "
+      f"{int(aux.ft.detected)} detected, {int(aux.ft.corrected)} corrected")
+print(f"max |logits_hostile - logits_clean| = "
+      f"{float(jnp.max(jnp.abs(logits_hostile - logits_clean))):.2e}\n")
+
+print("=" * 70)
+print("4. Per-step SDC telemetry under jit (what an SRE dashboards)")
+print("=" * 70)
+batch = {"tokens": tokens, "labels": tokens}
+
+
+@jax.jit
+def hostile_loss(p, key):
+    ctx = Ctx(ft=ONLINE_BLOCK.replace(inject_rate=0.5), key=key,
+              dtype=jnp.float32)
+    return mod.loss_fn(p, batch, cfg, ctx, remat=True, chunk=32)
+
+
+for step in range(3):
+    loss, metrics = hostile_loss(params, jax.random.PRNGKey(step))
+    ft = metrics["ft"]
+    print(f"step {step}: loss={float(loss):.4f} sdc_detected="
+          f"{int(ft.detected)} sdc_corrected={int(ft.corrected)} "
+          f"max_residual={float(ft.max_residual):.1f}")
+print("\nAll corrected — loss identical to a fault-free machine.")

@@ -1,0 +1,61 @@
+"""End-to-end driver: train a ~100M-parameter qwen2-family LM for a few
+hundred steps on CPU with the full production stack — online ABFT on every
+GEMM, periodic SEU injection campaigns, async checkpointing, SIGTERM-safe
+preemption, deterministic data resume, straggler watchdog.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(~100M params is CPU-trainable at batch 4 × seq 256; expect a clearly
+falling loss curve.)
+"""
+import argparse
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core.policy import ONLINE_BLOCK
+from repro.models import model_zoo
+from repro.train import train_loop
+
+#: ~100M-param dense LM (qwen2 family: GQA + SwiGLU + RoPE)
+CONFIG_100M = ModelConfig(
+    arch_id="qwen2-100m", family="dense",
+    n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+    d_ff=1536, vocab_size=32000, qkv_bias=True,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt_100m")
+    ap.add_argument("--inject-every", type=int, default=25,
+                    help="SEU injection campaign cadence (0=off)")
+    args = ap.parse_args()
+
+    cfg = CONFIG_100M
+    import jax
+    n = model_zoo.count_params(
+        jax.eval_shape(lambda: model_zoo.module_for(cfg).init(
+            cfg, jax.random.PRNGKey(0), jnp.bfloat16)))
+    print(f"model: {cfg.arch_id} — {n/1e6:.1f}M params, "
+          f"online ABFT on every GEMM (fwd+bwd)")
+
+    shape = ShapeConfig("train_cli", args.seq, args.batch, "train")
+    run = RunConfig(model=cfg, ft=ONLINE_BLOCK, dtype="float32",
+                    learning_rate=6e-4, attn_chunk=128)
+    tc = train_loop.TrainConfig(
+        total_steps=args.steps, warmup_steps=30, log_every=10,
+        ckpt_every=100, inject_every=args.inject_every)
+    out = train_loop.train(cfg, run, shape, tc, ckpt_dir=args.ckpt_dir)
+    first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
+    print(f"\nloss {first:.3f} → {last:.3f} over {out['final_step']} steps "
+          f"(checkpoints in {args.ckpt_dir}; rerun with --resume semantics "
+          f"via repro.launch.train)")
+    assert last < first, "loss should fall"
+
+
+if __name__ == "__main__":
+    main()

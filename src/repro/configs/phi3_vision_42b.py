@@ -1,0 +1,16 @@
+"""Phi-3-vision 4.2B — phi3-mini backbone + CLIP frontend (patch embeddings
+are a STUB input per the assignment). [hf:microsoft/Phi-3-vision-128k-instruct]
+32L d_model=3072 32H (MHA kv=32) d_ff=8192 vocab=32064."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi-3-vision-4.2b", family="vlm",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32, head_dim=96,
+    d_ff=8192, vocab_size=32064, n_patches=576,
+)
+
+SMOKE = ModelConfig(
+    arch_id="phi3-vision-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512, n_patches=16,
+)

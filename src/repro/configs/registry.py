@@ -1,0 +1,43 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers, tests,
+benchmarks, and the dry-run."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+
+from . import (arctic_480b, codeqwen15_7b, mamba2_780m, minitron_4b,
+               phi3_vision_42b, phi4_mini_38b, qwen2_7b, qwen3_moe_235b,
+               whisper_medium, zamba2_27b)
+
+_MODULES = {
+    "arctic-480b": arctic_480b,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b,
+    "qwen2-7b": qwen2_7b,
+    "codeqwen1.5-7b": codeqwen15_7b,
+    "phi4-mini-3.8b": phi4_mini_38b,
+    "minitron-4b": minitron_4b,
+    "mamba2-780m": mamba2_780m,
+    "phi-3-vision-4.2b": phi3_vision_42b,
+    "whisper-medium": whisper_medium,
+    "zamba2-2.7b": zamba2_27b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].CONFIG
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].SMOKE
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def all_cells() -> Tuple[Tuple[str, str], ...]:
+    """All 40 assigned (arch × shape) cells."""
+    return tuple((a, s) for a in ARCH_IDS for s in SHAPES)

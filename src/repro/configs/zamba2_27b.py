@@ -1,0 +1,19 @@
+"""Zamba2-2.7B — Mamba2 backbone + shared attention block every 6 SSM blocks.
+[arXiv:2411.15242] 54L d_model=2560 32H (MHA kv=32) d_ff=10240 ssm_state=64."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, head_dim=80,
+    d_ff=10240, vocab_size=32000, attn_every=6,
+    ssm=SSMConfig(state=64, head_dim=64, expand=2, conv_width=4, chunk=256),
+    subquadratic=True,
+)
+
+SMOKE = ModelConfig(
+    arch_id="zamba2-smoke", family="hybrid",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512, attn_every=2,
+    ssm=SSMConfig(state=16, head_dim=16, expand=2, conv_width=4, chunk=32),
+    subquadratic=True,
+)

@@ -1,0 +1,124 @@
+"""Checksum algebra for algorithm-based fault tolerance (Huang–Abraham 1984,
+as used by the paper).
+
+All functions are pure jnp and shape-polymorphic; they are used by
+  * the distributed jnp ABFT path (core/ft_gemm.py),
+  * the Pallas kernel oracles (kernels/ref.py),
+  * tests (hypothesis property tests of the checksum invariants).
+
+Conventions (paper Eq. 1–3):
+    A : (M, K)        A^c = [A ; e^T A]   — column checksum, shape (1, K)·... → (1, N) after multiply
+    B : (K, N)        B^r = [B , B e]     — row checksum
+    C = A @ B         C^c = e^T C = (e^T A) @ B   (1, N)
+                      C^r = C e   = A @ (B e)     (M, 1)
+
+Detection compares colsum(C) against C^c and rowsum(C) against C^r.
+Under the SEU model a single corrupted element (r, c, δ) shifts exactly
+C^c[c] by δ and C^r[r] by δ, so the error is located by the argmax of the
+two residuals and corrected by subtracting δ.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def encode_col(a: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """e^T A — column-checksum encoding of the left operand. (…, M, K) → (…, 1, K)."""
+    return jnp.sum(a.astype(dtype), axis=-2, keepdims=True)
+
+
+def encode_row(b: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """B e — row-checksum encoding of the right operand. (…, K, N) → (…, K, 1)."""
+    return jnp.sum(b.astype(dtype), axis=-1, keepdims=True)
+
+
+class Checksums(NamedTuple):
+    col: jax.Array   # (…, 1, N)  = (e^T A) @ B
+    row: jax.Array   # (…, M, 1)  = A @ (B e)
+
+
+def product_checksums(a: jax.Array, b: jax.Array, dtype=jnp.float32) -> Checksums:
+    """Reference checksums of C = A @ B computed from the *operands*
+    (never touching C) — this is what the fused kernel maintains online."""
+    col = jnp.matmul(encode_col(a, dtype), b.astype(dtype))
+    row = jnp.matmul(a.astype(dtype), encode_row(b, dtype))
+    return Checksums(col=col, row=row)
+
+
+def residuals(c: jax.Array, ck: Checksums, dtype=jnp.float32) -> Checksums:
+    """δ_col = colsum(C) − C^c   (…, 1, N);   δ_row = rowsum(C) − C^r   (…, M, 1)."""
+    cf = c.astype(dtype)
+    d_col = jnp.sum(cf, axis=-2, keepdims=True) - ck.col.astype(dtype)
+    d_row = jnp.sum(cf, axis=-1, keepdims=True) - ck.row.astype(dtype)
+    return Checksums(col=d_col, row=d_row)
+
+
+def threshold(a: jax.Array, b: jax.Array, rel_tau: float) -> jax.Array:
+    """Rounding-aware detection threshold (scalar per batch element):
+    tau = rel_tau · eps(f32) · K · max|A| · max|B|.
+
+    eps is that of the *accumulator/checksum* dtype (f32), not the input
+    dtype: bf16×bf16 products are exactly representable in f32 and both the
+    GEMM and its checksums accumulate in f32 (MXU semantics), so the residual
+    between colsum(C) and (e^T A)·B is pure f32 accumulation rounding.
+    Errors smaller than tau are numerically indistinguishable from rounding
+    and therefore harmless by construction (standard ABFT argument).
+    """
+    k = a.shape[-1]
+    eps = float(jnp.finfo(jnp.float32).eps)
+    amax = jnp.max(jnp.abs(a.astype(jnp.float32)), axis=(-2, -1), keepdims=True)
+    bmax = jnp.max(jnp.abs(b.astype(jnp.float32)), axis=(-2, -1), keepdims=True)
+    tau = rel_tau * eps * k * amax * bmax
+    # Floor: absolute epsilon for all-zero operands.
+    return jnp.maximum(tau[..., 0, 0], 1e-30)
+
+
+class Verdict(NamedTuple):
+    detected: jax.Array      # bool (…,) — any checksum residual above tau
+    row: jax.Array           # int32 (…,) — located row of the (single) error
+    col: jax.Array           # int32 (…,)
+    magnitude: jax.Array     # f32 (…,) — error offset δ (0 where not detected)
+
+
+def locate(res: Checksums, tau: jax.Array) -> Verdict:
+    """Locate a single error from the residuals (paper Fig. 3(e): 'fault
+    location is determined by relative positions in two checksums; the
+    correction value by the offset')."""
+    d_col = res.col[..., 0, :]          # (…, N)
+    d_row = res.row[..., :, 0]          # (…, M)
+    col = jnp.argmax(jnp.abs(d_col), axis=-1).astype(jnp.int32)
+    row = jnp.argmax(jnp.abs(d_row), axis=-1).astype(jnp.int32)
+    mag_c = jnp.take_along_axis(d_col, col[..., None], axis=-1)[..., 0]
+    mag_r = jnp.take_along_axis(d_row, row[..., None], axis=-1)[..., 0]
+    detected = jnp.maximum(jnp.abs(mag_c), jnp.abs(mag_r)) > tau
+    # Use the column residual as the canonical magnitude (both agree under SEU).
+    magnitude = jnp.where(detected, mag_c, 0.0)
+    return Verdict(detected=detected, row=row, col=col, magnitude=magnitude)
+
+
+def correct(c: jax.Array, v: Verdict) -> jax.Array:
+    """Branchless online correction: subtract δ at the located element.
+    δ = 0 when nothing was detected, so this is a no-op in the common case —
+    no lax.cond, SPMD-safe, constant cost."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, c.shape, c.ndim - 2)
+    cols = jax.lax.broadcasted_iota(jnp.int32, c.shape, c.ndim - 1)
+    hit = (rows == v.row[..., None, None]) & (cols == v.col[..., None, None])
+    delta = v.magnitude[..., None, None].astype(c.dtype)
+    return c - jnp.where(hit, delta, jnp.zeros_like(delta))
+
+
+def detect_and_correct(
+    c: jax.Array,
+    ck: Checksums,
+    tau: jax.Array,
+    corrects: bool = True,
+) -> Tuple[jax.Array, Verdict]:
+    """Full online-ABFT decode step: residuals → locate → (optionally) correct."""
+    res = residuals(c, ck)
+    v = locate(res, tau)
+    if corrects:
+        c = correct(c, v)
+    return c, v

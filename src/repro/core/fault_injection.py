@@ -1,0 +1,70 @@
+"""Fault injection — emulated SEUs for validating online ABFT.
+
+The paper (§5.3) injects errors 'at the source code level … in the register of
+the accumulated result by adding a numerical offset to emulate register bit
+flipping'. We do the same: an injector perturbs the GEMM *output accumulator*
+between compute and verification, which is exactly where a compute-unit SDC
+would land. Memory errors are out of scope (ECC-covered, per the fault model).
+
+Two injectors:
+  * `inject_spec`  — deterministic single-error injection (tests, kernel path).
+  * `Injector`     — seeded stochastic injector with a per-matmul Bernoulli
+                     rate, used by the framework-level error-injection
+                     campaigns (benchmarks/error_injection.py) and the
+                     trainer's `--inject-rate` flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .policy import InjectionSpec
+
+
+def inject_spec(c: jax.Array, spec: Optional[InjectionSpec]) -> jax.Array:
+    """Apply a single deterministic SEU to a (…, M, N) accumulator."""
+    if spec is None:
+        return c
+    rows = jax.lax.broadcasted_iota(jnp.int32, c.shape, c.ndim - 2)
+    cols = jax.lax.broadcasted_iota(jnp.int32, c.shape, c.ndim - 1)
+    hit = (rows == spec.row) & (cols == spec.col)
+    return c + jnp.where(hit, jnp.asarray(spec.magnitude, c.dtype),
+                         jnp.zeros((), c.dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class Injector:
+    """Stochastic SEU source. `rate` is the probability that a given matmul's
+    accumulator suffers one flipped element this step. Magnitude emulates a
+    high-order mantissa/exponent bit flip: the hit element is scaled by
+    2**bit_shift (default: +2^8, a large, detectable corruption)."""
+    rate: float = 0.0
+    bit_shift: int = 8
+
+    def __call__(self, key: jax.Array, c: jax.Array) -> jax.Array:
+        if self.rate <= 0.0:
+            return c
+        k_hit, k_row, k_col = jax.random.split(key, 3)
+        m, n = c.shape[-2], c.shape[-1]
+        hit_p = jax.random.bernoulli(k_hit, self.rate)
+        r = jax.random.randint(k_row, (), 0, m)
+        cc = jax.random.randint(k_col, (), 0, n)
+        rows = jax.lax.broadcasted_iota(jnp.int32, c.shape, c.ndim - 2)
+        cols = jax.lax.broadcasted_iota(jnp.int32, c.shape, c.ndim - 1)
+        sel = (rows == r) & (cols == cc) & hit_p
+        # value -> value * 2^bit_shift  ==  += value*(2^shift - 1); if the
+        # element is ~0 use an absolute offset so the flip is observable.
+        delta = c * (2.0 ** self.bit_shift - 1.0)
+        delta = jnp.where(jnp.abs(delta) > 1e-6, delta,
+                          jnp.full_like(delta, 2.0 ** self.bit_shift))
+        return jnp.where(sel, c + delta, c)
+
+
+def split_for(key: Optional[jax.Array], tag: int) -> Optional[jax.Array]:
+    """Derive a per-callsite injection key (None passes through)."""
+    if key is None:
+        return None
+    return jax.random.fold_in(key, tag)

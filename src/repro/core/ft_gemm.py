@@ -1,0 +1,251 @@
+"""`ft_dot` / `ft_batched_dot` — the paper's fault-tolerant GEMM as a
+composable JAX op.
+
+This is the framework-facing entry point: every projection in the model zoo
+routes through these functions, so online ABFT (detect **and** correct
+compute SDCs on the fly) is a first-class property of a training/serving
+step, not a demo kernel.
+
+Three execution paths, selected by `FTConfig`:
+
+  * fused jnp path (default) — checksum encode/update/verify expressed in jnp
+    and fused by XLA into the surrounding computation; GSPMD-compatible
+    (checksums inherit operand shardings; verification is shard-local, adds
+    zero collectives — see DESIGN.md §2.2).
+  * non-fused path (`fused=False`) — the Ding-2011 baseline: explicitly
+    materialized augmented matrices and a separate verification pass,
+    separated by `optimization_barrier`s so XLA cannot fuse them. This is the
+    prior-state-of-the-art baseline the paper (and our benchmarks) compare
+    against.
+  * Pallas path (`backend="pallas"`) — the fused in-kernel ABFT of
+    `repro.kernels.ftgemm`, used on real TPUs inside `shard_map` (per-shard
+    local GEMMs). Dry-run/roofline use the jnp path, which lowers the same
+    collective structure.
+
+Differentiation: `custom_vjp` — the two backward GEMMs are protected with the
+same policy (a corrupted gradient is as dangerous as a corrupted activation).
+
+Telemetry: the custom_vjp returns a (detections, max_residual) summary as
+auxiliary outputs; recording into the ambient `ft_scope` happens *outside*
+the custom_vjp boundary (recording inside would leak tracers from the
+sub-trace). Backward-pass corrections are applied but not counted — noted in
+DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import abft, telemetry
+from .fault_injection import Injector
+from .policy import FTConfig, InjectionSpec, FT_OFF
+
+
+def _inject(ft: FTConfig, spec: Optional[InjectionSpec],
+            key: Optional[jax.Array], c: jax.Array) -> jax.Array:
+    """Emulate a compute-unit SEU on the accumulator (pre-verification)."""
+    if spec is not None:
+        from .fault_injection import inject_spec
+        return inject_spec(c, spec)
+    if key is not None and ft.inject_rate > 0.0:
+        return Injector(rate=ft.inject_rate, bit_shift=ft.inject_bit_shift)(key, c)
+    return c
+
+
+def _summary(v: abft.Verdict) -> Tuple[jax.Array, jax.Array]:
+    det = jnp.sum(v.detected.astype(jnp.int32))
+    maxres = jnp.max(jnp.abs(v.magnitude)).astype(jnp.float32)
+    return det, maxres
+
+
+_ZERO_SUMMARY = lambda: (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# 2-D core (M,K) @ (K,N)
+# ---------------------------------------------------------------------------
+
+def _matmul_f32acc(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (b.ndim - 2,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _tau(ft: FTConfig, a, b):
+    if ft.static_tau is not None:
+        return jnp.asarray(ft.static_tau, jnp.float32)
+    return abft.threshold(a, b, ft.rel_tau)
+
+
+def _fused_ft_matmul_2d(ft: FTConfig, spec, a, b, key):
+    """Fused online ABFT: checksums from operands, verify, branchless correct."""
+    acc = _matmul_f32acc(a, b)                       # (M, N) f32 accumulator
+    ck = abft.product_checksums(a, b)                # from operands, f32
+    acc = _inject(ft, spec, key, acc)
+    out, v = abft.detect_and_correct(acc, ck, _tau(ft, a, b),
+                                     corrects=ft.corrects)
+    return out.astype(a.dtype), v
+
+
+def _nonfused_ft_matmul_2d(ft: FTConfig, spec, a, b, key):
+    """Ding-2011-style non-fused ABFT: materialized augmented operands,
+    separate passes. optimization_barrier pins the pass structure."""
+    m, n = a.shape[0], b.shape[1]
+    a_aug = jnp.concatenate([a.astype(jnp.float32),
+                             abft.encode_col(a)], axis=0)        # (M+1, K)
+    b_aug = jnp.concatenate([b.astype(jnp.float32),
+                             abft.encode_row(b)], axis=1)        # (K, N+1)
+    a_aug, b_aug = jax.lax.optimization_barrier((a_aug, b_aug))
+    c_f = _matmul_f32acc(a_aug, b_aug)                           # (M+1, N+1)
+    c_f = jax.lax.optimization_barrier(c_f)
+    acc = c_f[:m, :n]
+    ck = abft.Checksums(col=c_f[m:m + 1, :n], row=c_f[:m, n:n + 1])
+    acc = _inject(ft, spec, key, acc)
+    acc = jax.lax.optimization_barrier(acc)                       # verify pass
+    out, v = abft.detect_and_correct(acc, ck, _tau(ft, a, b),
+                                     corrects=ft.corrects)
+    return out.astype(a.dtype), v
+
+
+def _ft_matmul_2d(ft: FTConfig, spec, a, b, key):
+    """Returns (out, det_count:int32, max_residual:f32)."""
+    if not ft.enabled:
+        return _matmul_f32acc(a, b).astype(a.dtype), *_ZERO_SUMMARY()
+    if ft.backend == "pallas":
+        from repro.kernels import ops as kops
+        out, rep = kops.ft_matmul_report(a, b, ft=ft, spec=spec)
+        det = jnp.sum(rep[..., 0]).astype(jnp.int32)
+        maxres = jnp.max(rep[..., 5])
+        return out, det, maxres
+    fn = _fused_ft_matmul_2d if ft.fused else _nonfused_ft_matmul_2d
+    out, v = fn(ft, spec, a, b, key)
+    det, maxres = _summary(v)
+    return out, det, maxres
+
+
+# ---------------------------------------------------------------------------
+# Public API: ft_dot — (…, K) @ (K, N), custom_vjp-protected both directions
+# ---------------------------------------------------------------------------
+
+def _float0(x):
+    return np.zeros(x.shape, jax.dtypes.float0) if x is not None else None
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _ft_dot_cvjp(ft: FTConfig, spec, x, w, key):
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y2, det, maxres = _ft_matmul_2d(ft, spec, x2, w, key)
+    return y2.reshape(*lead, w.shape[-1]), det, maxres
+
+
+def _ft_dot_fwd(ft, spec, x, w, key):
+    return _ft_dot_cvjp(ft, spec, x, w, key), (x, w, key)
+
+
+def _ft_dot_bwd(ft, spec, res, cts):
+    g, _, _ = cts                      # ignore summary cotangents
+    x, w, key = res
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    g2 = g.reshape(-1, g.shape[-1]).astype(x.dtype)
+    kx = jax.random.fold_in(key, 1) if key is not None else None
+    kw = jax.random.fold_in(key, 2) if key is not None else None
+    # Backward GEMMs are ABFT-protected too (spec applies to fwd only).
+    dx2, _, _ = _ft_matmul_2d(ft, None, g2, w.T, kx)
+    dw, _, _ = _ft_matmul_2d(ft, None, x2.T, g2, kw)
+    return dx2.reshape(*lead, x.shape[-1]), dw.astype(w.dtype), _float0(key)
+
+
+_ft_dot_cvjp.defvjp(_ft_dot_fwd, _ft_dot_bwd)
+
+
+def _record(det, maxres, corrects: bool) -> None:
+    scope = telemetry.current_scope()
+    if scope is not None:
+        scope.record_summary(det, maxres, corrects)
+
+
+def ft_dot(x: jax.Array, w: jax.Array, ft: FTConfig = FT_OFF,
+           key: Optional[jax.Array] = None,
+           spec: Optional[InjectionSpec] = None) -> jax.Array:
+    """Fault-tolerant dense projection: (…, K) @ (K, N) → (…, N).
+
+    ft    — FTConfig policy (see repro.core.policy).
+    key   — optional PRNG key driving the stochastic SEU injector
+            (ft.inject_rate); None ⇒ no stochastic injection.
+    spec  — optional deterministic single-SEU injection (tests/benchmarks).
+    """
+    if not ft.enabled and key is None and spec is None:
+        # Fast path: a plain dot XLA can pattern-match without custom_vjp.
+        return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    y, det, maxres = _ft_dot_cvjp(ft, spec, x, w, key)
+    _record(det, maxres, ft.corrects)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Batched variant — attention cores (QK^T, PV) and grouped expert GEMMs
+# ---------------------------------------------------------------------------
+
+def _fused_ft_bmm(ft: FTConfig, spec, a, b, key):
+    acc = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    ck = abft.product_checksums(a, b)
+    acc = _inject(ft, spec, key, acc)
+    tau = (jnp.full(acc.shape[:-2], ft.static_tau, jnp.float32)
+           if ft.static_tau is not None else abft.threshold(a, b, ft.rel_tau))
+    out, v = abft.detect_and_correct(acc, ck, tau, corrects=ft.corrects)
+    det, maxres = _summary(v)
+    return out.astype(a.dtype), det, maxres
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _ft_bmm_cvjp(ft, spec, a, b, key):
+    return _fused_ft_bmm(ft, spec, a, b, key)
+
+
+def _ft_bmm_fwd(ft, spec, a, b, key):
+    return _ft_bmm_cvjp(ft, spec, a, b, key), (a, b, key)
+
+
+def _ft_bmm_bwd(ft, spec, res, cts):
+    g, _, _ = cts
+    a, b, key = res
+    g = g.astype(a.dtype)
+    ka = jax.random.fold_in(key, 3) if key is not None else None
+    kb = jax.random.fold_in(key, 4) if key is not None else None
+    bt = jnp.swapaxes(b, -1, -2)
+    at = jnp.swapaxes(a, -1, -2)
+    da, _, _ = _fused_ft_bmm(ft, None, g, bt, ka)
+    db, _, _ = _fused_ft_bmm(ft, None, at, g, kb)
+    return da, db.astype(b.dtype), _float0(key)
+
+
+_ft_bmm_cvjp.defvjp(_ft_bmm_fwd, _ft_bmm_bwd)
+
+
+def ft_batched_dot(a: jax.Array, b: jax.Array, ft: FTConfig = FT_OFF,
+                   key: Optional[jax.Array] = None,
+                   spec: Optional[InjectionSpec] = None) -> jax.Array:
+    """Fault-tolerant batched matmul: (…, M, K) @ (…, K, N) → (…, M, N).
+    Leading dims must match (broadcast not supported — callers reshape)."""
+    if not ft.enabled and key is None and spec is None:
+        return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+    y, det, maxres = _ft_bmm_cvjp(ft, spec, a, b, key)
+    _record(det, maxres, ft.corrects)
+    return y
+
+
+def ft_verdict_dot(a: jax.Array, b: jax.Array, ft: FTConfig,
+                   spec: Optional[InjectionSpec] = None,
+                   key: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, abft.Verdict]:
+    """2-D ft matmul that also returns the Verdict — used by the offline-ABFT
+    recompute loop (§5.5) and by tests asserting detection behaviour."""
+    a2 = a.reshape(-1, a.shape[-1]) if a.ndim != 2 else a
+    fn = _fused_ft_matmul_2d if ft.fused else _nonfused_ft_matmul_2d
+    return fn(ft, spec, a2, b, key)

@@ -1,0 +1,35 @@
+"""Scan wrapper with an ambient unroll switch.
+
+XLA's cost_analysis (and the HLO text) count a while-loop body ONCE, not
+× trip count. The dry-run therefore compiles shallow depth probes with every
+model scan *unrolled* (straight-line HLO) so per-layer FLOPs/bytes/collective
+deltas are exact; production lowering keeps rolled scans (O(1) HLO size in
+depth). Models call `loops.scan` instead of `jax.lax.scan`.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+def _unroll() -> bool:
+    return getattr(_state, "unroll", False)
+
+
+@contextlib.contextmanager
+def unrolled_scans(enable: bool = True):
+    prev = _unroll()
+    _state.unroll = enable
+    try:
+        yield
+    finally:
+        _state.unroll = prev
+
+
+def scan(f, init, xs, length=None):
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if _unroll() else 1)

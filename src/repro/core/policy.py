@@ -1,0 +1,85 @@
+"""Fault-tolerance policy configuration.
+
+Mirrors the paper's design space:
+  * level   — where checksums are maintained (paper: thread/warp/threadblock;
+              here: "inner"/"tile"/"block", see DESIGN.md §2.1). The jnp path
+              only distinguishes fused vs non-fused; the Pallas kernel
+              implements all three.
+  * action  — "correct" = online ABFT (paper §4, detect AND correct on the
+              fly); "detect" = offline ABFT (§5.5, detect-only; caller must
+              recompute); "off" = no fault tolerance.
+  * fused   — True: checksum memory traffic fused with the GEMM (the paper's
+              contribution); False: the Ding-2011-style non-fused baseline
+              (separate encode / multiply / verify passes over HBM).
+  * verify  — "step": verify every k-step (online, corrects one SEU per
+              interval → many per GEMM); "final": verify once per output tile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class FTConfig:
+    action: str = "correct"          # "off" | "detect" | "correct"
+    level: str = "block"             # "inner" | "tile" | "block"
+    fused: bool = True               # False = Ding-2011 non-fused baseline
+    verify: str = "step"             # "step" | "final"
+    # Relative checksum tolerance multiplier. The absolute threshold is
+    #   tau = rel_tau * eps(dtype) * K * max|A| * max|B|
+    # (a standard ABFT rounding bound; rel_tau absorbs the constants).
+    rel_tau: float = 64.0
+    # Accumulate checksums in f32 even for bf16 GEMMs.
+    checksum_dtype: str = "float32"
+    # Protect batched attention GEMMs (QK^T, PV) too.
+    protect_attention: bool = True
+    # Backend for the local GEMM: "xla" (jnp, GSPMD-friendly) or "pallas".
+    backend: str = "xla"
+    # Optional static detection threshold. None ⇒ dynamic rounding-aware
+    # threshold (costs a max-reduction over each operand). A hillclimb lever:
+    # a calibrated static tau removes two operand passes per GEMM.
+    static_tau: Optional[float] = None
+    # Stochastic SEU injection (error-injection campaigns; 0.0 = off).
+    # Probability that a given protected GEMM suffers one flipped accumulator
+    # element this step, when an injection key is supplied.
+    inject_rate: float = 0.0
+    inject_bit_shift: int = 8
+
+    @property
+    def enabled(self) -> bool:
+        return self.action != "off"
+
+    @property
+    def corrects(self) -> bool:
+        return self.action == "correct"
+
+    def replace(self, **kw) -> "FTConfig":
+        return dataclasses.replace(self, **kw)
+
+
+#: Paper's flagship configuration — fused threadblock-level online ABFT.
+ONLINE_BLOCK = FTConfig(action="correct", level="block", fused=True)
+#: Offline (detect-only) ABFT of §5.5.
+OFFLINE_DETECT = FTConfig(action="detect", level="block", fused=True)
+#: Prior state of the art (Ding et al. 2011): non-fused online ABFT.
+NONFUSED_BASELINE = FTConfig(action="correct", level="block", fused=False)
+#: Fault tolerance disabled.
+FT_OFF = FTConfig(action="off")
+
+
+@dataclasses.dataclass(frozen=True)
+class InjectionSpec:
+    """A single emulated SEU: flip the accumulator at (row, col) by
+    ``magnitude`` after k-step ``k_step`` (paper §5.3: 'errors are inserted in
+    the register of the accumulated result by adding a numerical offset')."""
+    row: int
+    col: int
+    magnitude: float
+    k_step: int = 0
+
+    def as_tuple(self):
+        return (self.row, self.col, self.magnitude, self.k_step)
+
+
+NO_INJECTION: Optional[InjectionSpec] = None

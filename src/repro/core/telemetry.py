@@ -1,0 +1,123 @@
+"""ABFT error telemetry.
+
+Every `ft_dot`/`ft_einsum` call site contributes a (detected, corrected)
+counter pair. Inside jit we cannot mutate Python state, so call sites return
+their verdicts and the step function aggregates them into an `FTReport` pytree
+that crosses the jit boundary once per step — at 1000+ node scale this is the
+signal SREs alert on (SDC storms on a failing part are a real phenomenon).
+"""
+from __future__ import annotations
+
+from typing import Any, List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FTReport(NamedTuple):
+    detected: jax.Array    # int32 — number of call sites that flagged an error
+    corrected: jax.Array   # int32 — number of corrections applied
+    max_residual: jax.Array  # f32 — worst |δ| observed (0 when clean)
+
+    @staticmethod
+    def empty() -> "FTReport":
+        z = jnp.zeros((), jnp.int32)
+        return FTReport(z, z, jnp.zeros((), jnp.float32))
+
+    def merge(self, other: "FTReport") -> "FTReport":
+        return FTReport(
+            detected=self.detected + other.detected,
+            corrected=self.corrected + other.corrected,
+            max_residual=jnp.maximum(self.max_residual, other.max_residual),
+        )
+
+
+class FTScope:
+    """Trace-time collector. Model code calls `scope.record(verdict,
+    corrected=...)`; the step function materializes `scope.report()`.
+
+    Thread-compatible with jit tracing: a fresh scope is created per trace.
+    """
+
+    def __init__(self) -> None:
+        self._items: List[FTReport] = []
+
+    def record(self, detected: jax.Array, magnitude: jax.Array,
+               corrected: bool) -> None:
+        det_any = jnp.any(detected)
+        d = det_any.astype(jnp.int32)
+        self._items.append(FTReport(
+            detected=d,
+            corrected=d if corrected else jnp.zeros((), jnp.int32),
+            max_residual=jnp.max(jnp.abs(magnitude)).astype(jnp.float32),
+        ))
+
+    def record_summary(self, det_count: jax.Array, max_residual: jax.Array,
+                       corrected: bool) -> None:
+        """Record a pre-reduced (count, max|δ|) summary (the form returned
+        across the custom_vjp boundary by ft_dot)."""
+        d = det_count.astype(jnp.int32)
+        self._items.append(FTReport(
+            detected=d,
+            corrected=d if corrected else jnp.zeros((), jnp.int32),
+            max_residual=max_residual.astype(jnp.float32),
+        ))
+
+    def report(self) -> FTReport:
+        rep = FTReport.empty()
+        for item in self._items:
+            rep = rep.merge(item)
+        return rep
+
+
+# A module-level "ambient" scope stack so model code doesn't need to thread
+# the scope through every layer. jit-trace-safe: push/pop happen at trace time.
+_SCOPES: List[FTScope] = []
+
+
+def push_scope() -> FTScope:
+    s = FTScope()
+    _SCOPES.append(s)
+    return s
+
+
+def pop_scope() -> FTScope:
+    return _SCOPES.pop()
+
+
+def current_scope() -> FTScope | None:
+    return _SCOPES[-1] if _SCOPES else None
+
+
+class ft_scope:
+    """Context manager: `with ft_scope() as s: ...; rep = s.report()`."""
+
+    def __enter__(self) -> FTScope:
+        return push_scope()
+
+    def __exit__(self, *exc: Any) -> None:
+        pop_scope()
+
+
+def record_report(rep: FTReport) -> None:
+    """Merge an already-materialized FTReport into the ambient scope (used
+    after a scan/remat region returns its scoped report)."""
+    s = current_scope()
+    if s is not None:
+        s._items.append(rep)
+
+
+def scoped(fn):
+    """Run `fn()` under a fresh FTScope and return (result, FTReport).
+
+    This is how telemetry crosses scan/remat boundaries: the scope lives and
+    dies *inside* the traced body (no tracers escape); the materialized
+    FTReport is threaded through the scan carry by the caller. Model layer
+    scans use this so a 94-layer model still reports per-step SDC counts.
+    """
+    s = push_scope()
+    try:
+        out = fn()
+    finally:
+        pop_scope()
+    return out, s.report()

@@ -1,0 +1,202 @@
+"""Logical-axis sharding (MaxText-style rules).
+
+Model code annotates activations with *logical* axes (`shard(x, "batch",
+None, "embed")`); the launcher installs a mesh + a logical→mesh-axis rule
+table. Outside any mesh (CPU smoke tests) the annotations are no-ops, so the
+exact same model code runs on 1 device and on the 512-chip production mesh.
+
+Parameter shardings are derived from pytree path patterns in
+`param_sharding_rules` — FSDP over "data" on the non-TP dim, tensor/expert
+parallel over "model" (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+#: logical axis → mesh axis (or tuple of mesh axes). None = replicated.
+#: Overridden per shape by the launcher (e.g. long_500k decode swaps batch
+#: sharding for head/state sharding — see launch/dryrun.py RULES_BY_SHAPE).
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),        # data parallel over pod × data
+    "embed": None,                   # d_model replicated on activations
+    "seq": "model",                  # Megatron-SP: layer-boundary activations
+                                     # sequence-sharded over "model"
+    "heads": "model",                # attention-head tensor parallel
+    "kv_heads": None,                # decode KV replicated over heads
+    "mlp": "model",                  # FFN hidden tensor parallel
+    "experts": "model",              # expert parallel
+    "vocab": "model",
+    "embed_param": "data",           # FSDP dim on weights
+    "kv_seq": None,                  # decode KV-cache sequence dim
+    "state": "model",                # SSM state heads
+    # MoE dispatch geometry (models/moe.py): flattened token-group dim
+    # carries the full activation sharding; the expert-side token dim keeps
+    # only data parallelism so "model" is free for expert parallelism
+    "tokens": ("pod", "data", "model"),
+    "exp_tokens": ("pod", "data"),
+    "moe_ff": None,                  # expert ff dim (decode: "data")
+}
+
+
+def _rules():
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[dict] = None):
+    """Install mesh + logical rules; model `shard()` calls become GSPMD
+    constraints. Composes with `jax.set_mesh`/`with mesh`."""
+    prev = (_mesh(), _rules())
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def logical_to_spec(axes: Sequence) -> P:
+    """Map logical axis names to a PartitionSpec under the current rules,
+    dropping mesh axes that don't exist on the installed mesh. A mesh axis
+    may appear only once per spec — later logical axes mapping to an
+    already-used mesh axis degrade to replicated (e.g. logits
+    (batch, seq→model, vocab→model) keeps vocab sharding on the earlier
+    dim... first occurrence wins)."""
+    rules = _rules() or {}
+    mesh = _mesh()
+    names = set(mesh.axis_names) if mesh is not None else set()
+    used: set = set()
+    out = []
+    for ax in axes:
+        mapped = rules.get(ax) if isinstance(ax, str) else ax
+        if mapped is None:
+            out.append(None)
+            continue
+        if not isinstance(mapped, tuple):
+            mapped = (mapped,)
+        keep = tuple(m for m in mapped if m in names and m not in used)
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(keep)
+    return P(*out)
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """Annotate activation x with logical axes. No-op without a mesh."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules (pytree-path regex → logical axes per dim)
+# ---------------------------------------------------------------------------
+
+#: (path regex, logical axes for each array dim). First match wins. Scanned
+#: (stacked) layer params get a leading None (layer) dim automatically.
+PARAM_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # embeddings / lm head: vocab TP + FSDP on embed dim
+    (r"embed/table$",        ("vocab", "embed_param")),
+    (r"head/table$",         ("embed_param", "vocab")),
+    # attention projections: FSDP on d_model, TP on head dim
+    (r"attn.*/w[qkv]$",      ("embed_param", "heads")),
+    (r"attn.*/wo$",          ("heads", "embed_param")),
+    (r"attn.*/b[qkv]$",      ("heads",)),
+    # MLP: TP on hidden
+    (r"mlp.*/w_(gate|up)$",  ("embed_param", "mlp")),
+    (r"mlp.*/w_down$",       ("mlp", "embed_param")),
+    # MoE: expert parallel + FSDP on d_model (train) / on the ff dim
+    # (decode override "moe_ff": "data" — 2D weight-stationary serving,
+    # partial-sum psum instead of per-step weight all-gathers)
+    (r"moe/router$",         ("embed_param", None)),
+    (r"moe/w_(gate|up)$",    ("experts", "embed_param", "moe_ff")),
+    (r"moe/w_down$",         ("experts", "moe_ff", "embed_param")),
+    # Mamba2 / SSD
+    (r"ssm/in_proj$",        ("embed_param", "mlp")),
+    (r"ssm/out_proj$",       ("mlp", "embed_param")),
+    (r"ssm/conv_w$",         (None, "mlp")),
+    (r"ssm/conv_b$",         ("mlp",)),
+    (r"ssm/(A_log|D|dt_bias)$", (None,)),
+    (r"ssm/norm_w$",         ("mlp",)),
+    # norms replicated
+    (r"(norm|ln)[^/]*$",     (None,)),
+    (r".*",                  None),   # fallback: replicate
+)
+
+
+def spec_for_path(path: str, ndim: int, n_stacked: int = 0) -> P:
+    """PartitionSpec for a parameter at pytree `path` with `ndim` dims,
+    `n_stacked` leading stacked-layer dims (unsharded)."""
+    for pat, axes in PARAM_RULES:
+        if re.search(pat, path):
+            if axes is None:
+                return P()
+            body = list(axes)
+            lead = [None] * n_stacked
+            want = lead + body
+            if len(want) < ndim:           # extra leading dims → replicate
+                want = [None] * (ndim - len(want)) + want
+            if len(want) != ndim:
+                return P()
+            return logical_to_spec(want)
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params, n_stacked_fn=None):
+    """Pytree of PartitionSpec matching `params`. `n_stacked_fn(path) → int`
+    tells how many leading dims are stacked layers (default: infer — arrays
+    under a 'layers'/'blocks' subtree get 1 stacked dim)."""
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        if n_stacked_fn is not None:
+            n_stk = n_stacked_fn(ps)
+        else:
+            n_stk = 0
+            if re.search(r"(layers|blocks|groups)/", ps):
+                n_stk = 1
+            if re.search(r"groups/.*inner/", ps):
+                n_stk = 2
+        return spec_for_path(ps, leaf.ndim, n_stk)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def named_shardings(params, mesh: Mesh, n_stacked_fn=None):
+    specs = param_specs(params, n_stacked_fn)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

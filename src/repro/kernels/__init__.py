@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: GEMM.
+
+  gemm.py     -- baseline high-performance tiled GEMM (paper section 3)
+  ftgemm.py   -- fused online-ABFT GEMM, thread/warp/threadblock analogues (section 4)
+  ops.py      -- jit'd wrappers (padding, autotuned params, CPU interpret)
+  ref.py      -- pure-jnp oracles
+  autotune.py -- template/codegen parameter selection (section 3.2, Table 1 analogue)
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are validated
+with interpret=True on CPU.
+"""
+from . import autotune, ops, ref
+
+__all__ = ["autotune", "ops", "ref"]

@@ -1,0 +1,100 @@
+"""Shape-class kernel-parameter selection — the TPU analogue of the paper's
+template-based code generation (§3.2, Table 1).
+
+The paper's code generator takes 7 tile parameters (threadblock / warp /
+thread tile sizes) and emits a CUDA kernel per input-shape class
+(small/medium/large/tall-and-skinny/huge). On TPU the corresponding degrees
+of freedom are the Pallas BlockSpec tile sizes (bm, bn, bk): they determine
+the VMEM working set (the shared-memory analogue), the MXU utilization
+(dims must be multiples of 128 to fill the 128×128 systolic array), and the
+HBM→VMEM pipeline depth. "Code generation" is JAX tracing of a parameterized
+kernel — `build_params(M, N, K)` is the generator's parameter-selection
+stage, and `kernels.gemm/ftgemm` are the template.
+
+VMEM budget model (v5e: 16 MiB/core usable):
+    2 × (bm·bk + bk·bn) · bytes(in)   — double-buffered operand tiles
+  +     bm·bn · 4                      — f32 accumulator
+  +     (bm + bn) · 4 · 2              — running checksums (FT mode)
+The table below keeps every class ≤ 8 MiB so Mosaic has slack for
+spills/semaphores, mirroring the paper's "semi-empirical" selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+MXU = 128          # systolic array edge — all tiles aligned to this
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelParams:
+    bm: int
+    bn: int
+    bk: int
+    shape_class: str = "custom"
+
+    def vmem_bytes(self, in_bytes: int = 4) -> int:
+        operands = 2 * (self.bm * self.bk + self.bk * self.bn) * in_bytes
+        acc = self.bm * self.bn * 4
+        checksums = (self.bm + self.bn) * 4 * 2
+        return operands + acc + checksums
+
+
+#: Table-1 analogue. Keys are shape classes; values are (bm, bn, bk).
+#: All multiples of the 128-wide MXU edge; chosen so small problems launch
+#: enough grid blocks to fill all cores while huge problems maximize reuse.
+TABLE = {
+    "small":       (128, 128, 256),   # M, N ≤ 256 — many small blocks
+    "medium":      (256, 256, 256),   # ≤ 512
+    "large":       (256, 512, 256),   # ≤ 2048
+    "tall_skinny": (512, 128, 512),   # M ≫ N — deep k-pipeline, narrow n
+    "wide_flat":   (128, 512, 512),   # N ≫ M
+    "huge":        (512, 512, 256),   # ≥ 2048 square — max VMEM reuse
+}
+
+
+def classify(m: int, n: int, k: int) -> str:
+    if m >= 8 * n:
+        return "tall_skinny"
+    if n >= 8 * m:
+        return "wide_flat"
+    s = max(m, n)
+    if s <= 256:
+        return "small"
+    if s <= 512:
+        return "medium"
+    if s <= 2048:
+        return "large"
+    return "huge"
+
+
+def build_params(m: int, n: int, k: int, in_bytes: int = 4) -> KernelParams:
+    """The generator's parameter-selection stage: shape → kernel params,
+    clamped to the problem size and the VMEM budget."""
+    cls = classify(m, n, k)
+    bm, bn, bk = TABLE[cls]
+    # Never exceed the (padded) problem.
+    bm = min(bm, _round_up(m, MXU))
+    bn = min(bn, _round_up(n, MXU))
+    bk = min(bk, _round_up(k, MXU))
+    p = KernelParams(bm=bm, bn=bn, bk=bk, shape_class=cls)
+    # Shrink bk first (pipeline depth) if over budget — cheapest dimension.
+    while p.vmem_bytes(in_bytes) > VMEM_BUDGET and p.bk > MXU:
+        p = dataclasses.replace(p, bk=p.bk // 2)
+    while p.vmem_bytes(in_bytes) > VMEM_BUDGET and max(p.bm, p.bn) > MXU:
+        if p.bm >= p.bn:
+            p = dataclasses.replace(p, bm=p.bm // 2)
+        else:
+            p = dataclasses.replace(p, bn=p.bn // 2)
+    return p
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def padded_shape(m: int, n: int, k: int, p: KernelParams) -> Tuple[int, int, int]:
+    """Problem size padded to tile multiples (zero padding is ABFT-neutral:
+    checksums of zero rows/cols are zero)."""
+    return _round_up(m, p.bm), _round_up(n, p.bn), _round_up(k, p.bk)

@@ -1,0 +1,104 @@
+"""Baseline high-performance GEMM Pallas kernel (paper §3 analogue).
+
+The paper builds SGEMM up through threadblock tiling (shared memory), thread
+tiling (registers), warp tiling, vectorized access, and double-buffered
+prefetching. On TPU the same ladder collapses into the Pallas/Mosaic model:
+
+  * threadblock tile  → BlockSpec (bm, bn) output block in VMEM
+  * k-loop            → third ("arbitrary") grid dimension; Mosaic
+                        multiple-buffers the HBM→VMEM operand streams across
+                        sequential grid steps — the double-buffered prefetch
+                        of §3.1.7 is the *default* here, which is exactly the
+                        hardware-adaptation point of DESIGN.md §2
+  * thread/warp tile  → MXU 128×128 systolic sub-tiles; Mosaic owns register
+                        allocation, we control it through tile alignment
+  * vectorized access → (8,128)-aligned VREG-shaped tiles
+  * accumulator       → f32 VMEM scratch that lives across the k grid steps
+
+`gemm()` is the raw kernel entry (shape must be tile-divisible; ops.py pads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .autotune import KernelParams
+
+
+def _gemm_kernel(a_ref, b_ref, out_ref, acc_ref, *, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "interpret", "out_dtype"))
+def gemm(a: jax.Array, b: jax.Array, *, params: KernelParams,
+         interpret: bool = False, out_dtype=None) -> jax.Array:
+    """C = A @ B for tile-divisible (M, K) × (K, N)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = params.bm, params.bn, params.bk
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, params)
+    out_dtype = out_dtype or a.dtype
+    grid = (m // bm, n // bn, k // bk)
+
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
+                                 pltpu.ARBITRARY),
+        ),
+        interpret=interpret,
+    )(a, b)
+
+
+def naive_gemm(a: jax.Array, b: jax.Array, *, interpret: bool = False,
+               out_dtype=None) -> jax.Array:
+    """§3.1.1 'naive' rung of the optimization ladder: one grid step per
+    (128,128) output tile with the whole K row/col streamed in one block —
+    no k-tiling, no accumulator reuse. Exists so the step-wise benchmark
+    (Fig. 9 analogue) has a bottom rung."""
+    m, k = a.shape
+    _, n = b.shape
+    out_dtype = out_dtype or a.dtype
+
+    def kernel(a_ref, b_ref, out_ref):
+        out_ref[...] = jnp.dot(a_ref[...], b_ref[...],
+                               preferred_element_type=jnp.float32
+                               ).astype(out_ref.dtype)
+
+    bm = min(m, 128)
+    bn = min(n, 128)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,117 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles: shape-class parameter selection (the codegen front-end), zero
+padding to tile multiples (ABFT-neutral: checksums of zero rows/cols are
+zero), backend fallback (interpret=True automatically off-TPU so the same
+call sites run on CPU in tests), and report plumbing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import FTConfig, InjectionSpec, ONLINE_BLOCK
+from . import autotune, ftgemm, gemm
+
+
+def _should_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def matmul(a: jax.Array, b: jax.Array, *,
+           params: Optional[autotune.KernelParams] = None,
+           interpret: Optional[bool] = None,
+           out_dtype=None) -> jax.Array:
+    """High-performance non-FT GEMM (paper §3): C = A @ B, any (M, K, N)."""
+    m, k = a.shape
+    _, n = b.shape
+    p = params or autotune.build_params(m, n, k, in_bytes=a.dtype.itemsize)
+    mp, np_, kp = autotune.padded_shape(m, n, k, p)
+    out = gemm.gemm(_pad2(a, mp, kp), _pad2(b, kp, np_), params=p,
+                    interpret=_should_interpret(interpret),
+                    out_dtype=out_dtype)
+    return out[:m, :n]
+
+
+def ft_matmul(a: jax.Array, b: jax.Array, *,
+              ft: FTConfig = ONLINE_BLOCK,
+              spec: Optional[InjectionSpec] = None,
+              params: Optional[autotune.KernelParams] = None,
+              interpret: Optional[bool] = None,
+              out_dtype=None) -> jax.Array:
+    """Fused fault-tolerant GEMM (paper §4). Returns the corrected C."""
+    out, _ = ft_matmul_report(a, b, ft=ft, spec=spec, params=params,
+                              interpret=interpret, out_dtype=out_dtype)
+    return out
+
+
+def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
+             ft: FTConfig = ONLINE_BLOCK, causal: bool = True,
+             spec: Optional[InjectionSpec] = None,
+             inj_bh: int = 0, inj_q_block: int = 0,
+             bq: int = 128, bkv: int = 128,
+             interpret: Optional[bool] = None,
+             protect_qk: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Flash attention with fused in-kernel ABFT (see kernels/flashft.py).
+    q: (BH, Sq, dh); k, v: (BH, Skv, dh). Pads dh to the 128-lane MXU edge
+    and seq dims to block multiples (zero pads are ABFT- and softmax-neutral
+    for K/V because masked; Q pads are sliced off). Returns (out, report)."""
+    from . import flashft
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    dh_p = ((dh + 127) // 128) * 128
+    bq = min(bq, ((sq + 127) // 128) * 128)
+    bkv = min(bkv, ((skv + 127) // 128) * 128)
+    sq_p = ((sq + bq - 1) // bq) * bq
+    skv_p = ((skv + bkv - 1) // bkv) * bkv
+
+    def pad3(x, s_to, d_to):
+        return jnp.pad(x, ((0, 0), (0, s_to - x.shape[1]),
+                           (0, d_to - x.shape[2])))
+
+    qp, kp, vp = pad3(q, sq_p, dh_p), pad3(k, skv_p, dh_p), pad3(v, skv_p,
+                                                                 dh_p)
+    # padded KV rows must not receive attention: causal masking covers Q
+    # pads; for KV pads beyond skv add -inf via a huge negative K? — zero K
+    # gives score 0 which *would* leak for non-causal; guard by masking in
+    # the kernel only through causal. For non-causal callers we require
+    # skv % bkv == 0 (asserted).
+    if not causal:
+        assert skv == skv_p, "non-causal flash_ft needs block-aligned Skv"
+    inj_idx, inj_mag = flashft.encode_injection(spec, inj_bh, inj_q_block)
+    out, rep = flashft.flash_ft_attention(
+        qp, kp, vp, inj_idx, inj_mag, bq=bq, bkv=bkv, causal=causal, ft=ft,
+        interpret=_should_interpret(interpret), protect_qk=protect_qk,
+        scale=dh ** -0.5)
+    return out[:, :sq, :dh], rep
+
+
+def ft_matmul_report(a: jax.Array, b: jax.Array, *,
+                     ft: FTConfig = ONLINE_BLOCK,
+                     spec: Optional[InjectionSpec] = None,
+                     params: Optional[autotune.KernelParams] = None,
+                     interpret: Optional[bool] = None,
+                     out_dtype=None) -> Tuple[jax.Array, jax.Array]:
+    """FT-GEMM returning (C, report[gm, gn, 8]) — see ftgemm.REPORT_WIDTH."""
+    m, k = a.shape
+    _, n = b.shape
+    p = params or autotune.build_params(m, n, k, in_bytes=a.dtype.itemsize)
+    mp, np_, kp = autotune.padded_shape(m, n, k, p)
+    inj_idx, inj_mag = ftgemm.encode_injection(spec)
+    out, rep = ftgemm.ft_gemm(
+        _pad2(a, mp, kp), _pad2(b, kp, np_), inj_idx, inj_mag,
+        params=p, ft=ft, interpret=_should_interpret(interpret),
+        out_dtype=out_dtype)
+    return out[:m, :n], rep

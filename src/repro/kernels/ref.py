@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+`matmul_ref`   — the GEMM oracle (f32 accumulation, like the MXU).
+`ft_matmul_ref`— the fault-tolerant GEMM oracle: mirrors the *semantics* of
+                 the fused kernel (inject → detect → locate → correct) using
+                 the shared checksum algebra in repro.core.abft, so kernel
+                 sweeps can assert_allclose against it bit-for-bit behaviour
+                 (same f32 checksum accumulation, same branchless correction).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import abft
+from repro.core.policy import FTConfig, InjectionSpec
+from repro.core.fault_injection import inject_spec
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+class FTRefOut(NamedTuple):
+    out: jax.Array
+    detected: jax.Array   # bool scalar
+    row: jax.Array        # int32 global row of the corrected element
+    col: jax.Array
+    magnitude: jax.Array  # f32
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """Plain attention oracle for the flash-FT kernel.
+    q: (BH, Sq, dh); k, v: (BH, Skv, dh)."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * dh ** -0.5
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def ft_matmul_ref(a: jax.Array, b: jax.Array, ft: FTConfig,
+                  spec: Optional[InjectionSpec] = None,
+                  out_dtype=None) -> FTRefOut:
+    """Oracle for the fused FT-GEMM kernel on a single (M, N) output tile.
+
+    The kernel verifies per k-step; under the SEU model (≤1 error per
+    verification interval) the end state is identical to verifying once at
+    the end, which is what this oracle does — tests inject exactly one error.
+    """
+    out_dtype = out_dtype or a.dtype
+    acc = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    ck = abft.product_checksums(a, b)
+    acc = inject_spec(acc, spec)
+    tau = (jnp.asarray(ft.static_tau, jnp.float32) if ft.static_tau is not None
+           else abft.threshold(a, b, ft.rel_tau))
+    out, v = abft.detect_and_correct(acc, ck, tau, corrects=ft.corrects)
+    return FTRefOut(out=out.astype(out_dtype), detected=v.detected,
+                    row=v.row, col=v.col, magnitude=v.magnitude)

@@ -1,0 +1,123 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: run named variants of the three chosen cells and
+log (hypothesis, change, before, after) to benchmarks/hillclimb_results.json.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb [--only qwen2_train]
+"""
+import argparse
+import dataclasses
+import json
+import traceback
+
+from repro.configs.base import SSMConfig
+from repro.core.policy import ONLINE_BLOCK
+from repro.launch import dryrun
+
+#: variant = (cell_key, arch, shape, run_over, cfg_over, hypothesis)
+VARIANTS = [
+    # ---- Cell A: qwen2-7b × train_4k (paper-representative, memory-bound)
+    ("qwen2_train/v1_head_shard", "qwen2-7b", "train_4k", {}, None,
+     "explicit Megatron-SP head constraints in attention remove GSPMD "
+     "reshard pathologies vs v0 propagation; collective term drops"),
+    ("qwen2_train/v2_remat_dots", "qwen2-7b", "train_4k",
+     {"remat": "dots"}, None,
+     "save GEMM outputs instead of full remat: recompute FLOPs −~30%, "
+     "bytes −~25% at higher peak memory"),
+    ("qwen2_train/v3_static_tau", "qwen2-7b", "train_4k",
+     {"remat": "dots", "ft": ONLINE_BLOCK.replace(static_tau=0.5)}, None,
+     "calibrated static ABFT threshold removes two operand max-reduction "
+     "passes per protected GEMM: memory term −few %"),
+    ("qwen2_train/v4_no_ft_reference", "qwen2-7b", "train_4k",
+     {"remat": "dots", "ft": None}, None,
+     "FT-off reference isolates the total ABFT cost at scale (paper's "
+     "8.9% overhead claim, roofline version)"),
+    ("qwen2_train/v5_no_attn_ft", "qwen2-7b", "train_4k",
+     {"ft": ONLINE_BLOCK.replace(static_tau=0.5, protect_attention=False)},
+     None,
+     "most of the jnp-path ABFT memory cost is checksum passes over the "
+     "(chunk,S) attention score matrices; keeping ABFT on every projection "
+     "but not the attention core (the paper's own scope: GEMM library "
+     "calls) recovers most of the no-FT memory term"),
+    # ---- Cell B: arctic-480b × decode_32k (most collective-bound)
+    ("arctic_decode/v1_2d_weights", "arctic-480b", "decode_32k", {}, None,
+     "2D weight-stationary serving sharding (experts ff over data, no "
+     "FSDP gather) turns 76 GB/step weight all-gathers into MB-scale "
+     "activation psums: collective term −>10×"),
+    ("arctic_decode/v2_tokens_grouping", "arctic-480b", "decode_32k",
+     {"microbatch": 0}, {"moe": None}, None),   # placeholder — filled below
+    # ---- Cell C: mamba2-780m × train_4k (worst roofline fraction)
+    ("mamba2_train/v1_baseline_fixed", "mamba2-780m", "train_4k", {}, None,
+     "re-measure under v1 code (loops/sharding fixes)"),
+    ("mamba2_train/v2_chunk128", "mamba2-780m", "train_4k", {},
+     {"ssm": SSMConfig(state=128, head_dim=64, expand=2, conv_width=4,
+                       chunk=128)},
+     "SSD chunk 256→128 halves the intra-chunk quadratic work "
+     "(decay/CBᵀ tensors scale with Q²·nc = Q·L): compute & memory drop"),
+    ("mamba2_train/v3_chunk512", "mamba2-780m", "train_4k", {},
+     {"ssm": SSMConfig(state=128, head_dim=64, expand=2, conv_width=4,
+                       chunk=512)},
+     "counter-hypothesis: bigger chunks amortize state passes better"),
+]
+# drop the placeholder
+VARIANTS = [v for v in VARIANTS if v[5] is not None]
+
+#: (cell_key, arch, shape, run_over, cfg_over, rules_over, hypothesis)
+VARIANTS_R = [
+    ("mamba2_train/v4_batch_only_shard", "mamba2-780m", "train_4k", {},
+     {"ssm": SSMConfig(state=128, head_dim=64, expand=2, conv_width=4,
+                       chunk=512)},
+     {"seq": None, "batch": ("pod", "data", "model")},
+     "the 24-28s collective term comes from SSD chunk reshapes fighting "
+     "the seq-sharding; batch=256 divides the full 256-chip mesh, so "
+     "batch-only sharding makes every SSD reshape local — collective "
+     "term should collapse to FSDP gathers + grad reduce only"),
+    ("arctic_decode/v2_capacity_floor", "arctic-480b", "decode_32k", {},
+     None, None,
+     "decode groups are 8 tokens; the old capacity floor of 4 made "
+     "n_grp·E·C = 8192 expert slots for 256 routed tokens (32× dispatch "
+     "waste) — floor 1 cuts the memory term further"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="benchmarks/hillclimb_results.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    results = {}
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    todo = [v + (None,) for v in VARIANTS] + \
+        [(k, a, s, r, c, h, ro) for k, a, s, r, c, ro, h in VARIANTS_R]
+    for key, arch, shape, run_over, cfg_over, hypo, rules_over in todo:
+        if args.only and not key.startswith(args.only):
+            continue
+        if key in results and results[key].get("status") == "ok" \
+                and not args.force:
+            print(f"[cached] {key}")
+            continue
+        ft_on = True
+        ro = dict(run_over)
+        if ro.get("ft", "unset") is None:
+            ft_on = False
+            ro.pop("ft")
+        print(f"=== {key}: {hypo}")
+        try:
+            res = dryrun.run_cell(arch, shape, multi_pod=False, ft_on=ft_on,
+                                  run_over=ro or None, cfg_over=cfg_over,
+                                  rules_over=rules_over, probes=True)
+            res["hypothesis"] = hypo
+            results[key] = res
+        except Exception as e:                    # noqa: BLE001
+            traceback.print_exc()
+            results[key] = {"status": "error", "error": str(e)[:2000],
+                            "hypothesis": hypo}
+        json.dump(results, open(args.out, "w"), indent=1)
+    print("done →", args.out)
+
+
+if __name__ == "__main__":
+    main()

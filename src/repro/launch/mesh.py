@@ -1,0 +1,24 @@
+"""Production mesh construction (assignment-mandated shapes).
+
+A FUNCTION, not a module constant — importing this module never touches JAX
+device state (device count is locked at first backend init, and only
+dryrun.py is allowed to force 512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod over ("data","model"); multi-pod adds a leading
+    pod axis: (2,16,16) = 512 chips over ("pod","data","model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Mesh over whatever devices exist (tests / single-host training)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

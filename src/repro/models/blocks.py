@@ -1,0 +1,306 @@
+"""Shared model building blocks. Every GEMM routes through repro.core.ft_dot
+/ ft_batched_dot so the paper's online ABFT protects the full model.
+
+Conventions:
+  * params are nested dicts of jnp arrays (pure-functional modules);
+  * `Ctx` carries the FT policy + per-step injection key + compute dtype;
+    call sites derive deterministic sub-keys from their name (crc32) so an
+    injection campaign exercises every GEMM in the model;
+  * attention is a flash-style query-chunked scan (jax.checkpoint'd chunk
+    body) — O(chunk × S) transient memory, never materializing S×S, in both
+    forward and backward. Required for the 32k prefill shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ft_dot, ft_batched_dot, telemetry
+from repro.core import loops
+from repro.core.policy import FTConfig, FT_OFF
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Per-call context: FT policy, injection key, activation dtype,
+    attention sharding scheme ("heads" = Megatron-SP head-TP inside the
+    attention core with seq gathered per layer; "none" = leave placement to
+    GSPMD propagation — a §Perf comparison axis)."""
+    ft: FTConfig = FT_OFF
+    key: Optional[jax.Array] = None
+    dtype: Any = jnp.bfloat16
+    attn_shard: str = "heads"
+
+    def subkey(self, name: str) -> Optional[jax.Array]:
+        if self.key is None:
+            return None
+        return jax.random.fold_in(self.key, zlib.crc32(name.encode()))
+
+    def dot(self, name: str, x: jax.Array, w: jax.Array) -> jax.Array:
+        return ft_dot(x, w, ft=self.ft, key=self.subkey(name))
+
+    def bdot(self, name: str, a: jax.Array, b: jax.Array) -> jax.Array:
+        ft = self.ft if self.ft.protect_attention else FT_OFF
+        return ft_batched_dot(a, b, ft=ft, key=self.subkey(name))
+
+    def fold(self, tag: int) -> "Ctx":
+        if self.key is None:
+            return self
+        return dataclasses.replace(self, key=jax.random.fold_in(self.key, tag))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def make_remat(fn, remat):
+    """Remat-policy dispatch (a §Perf lever):
+      False/"none" — no remat (saves everything, max memory, min recompute)
+      True/"full"  — jax.checkpoint default (saves inputs only)
+      "dots"       — save GEMM outputs, recompute elementwise only
+                     (jax.checkpoint_policies.checkpoint_dots…): trades
+                     activation memory for ~⅓ less recompute FLOPs."""
+    if not remat or remat == "none":
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * scale
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalization / rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (…, S, dh/2)
+    if angles.ndim == 2:                                # (S, dh/2) → (1,S,1,·)
+        angles = angles[None, :, None, :]
+    else:                                               # (B,S,dh/2) → (B,S,1,·)
+        angles = angles[:, :, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    qd, kvd = cfg.qkv_dims
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, qd, dtype),
+        "wk": dense_init(ks[1], d, kvd, dtype),
+        "wv": dense_init(ks[2], d, kvd, dtype),
+        "wo": dense_init(ks[3], qd, d, dtype, scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    return p
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, h, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, dh)
+                            ).reshape(b, s, h * n_rep, dh)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk: int, ctx: Ctx,
+                      q_offset: int = 0) -> jax.Array:
+    """Query-chunked attention. q: (B,Sq,H,dh); k,v: (B,Sk,KVH,dh).
+    Never materializes (Sq, Sk) scores — per chunk only — and GQA is
+    computed as a *grouped* batched matmul over (B, KVH) with the rep·chunk
+    rows folded together: KV is never repeat-materialized (the v0 baseline
+    paid n_rep× KV bytes; §Perf)."""
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    n_rep = h // kvh
+    if ctx.attn_shard == "heads":
+        # Megatron-SP: seq gathered, heads TP-sharded through the core
+        # (GSPMD pads when head count ∤ mesh — measured in §Roofline's
+        # useful ratio); o-proj reduce-scatters back to seq sharding.
+        from repro.distributed.sharding import shard as _shard
+        q = _shard(q, "batch", None, "heads", None)
+        k = _shard(k, "batch", None, "kv_heads", None)
+        v = _shard(v, "batch", None, "kv_heads", None)
+    scale = dh ** -0.5
+    kT = jnp.swapaxes(k, 1, 2).swapaxes(2, 3)           # (B, KVH, dh, Sk)
+    vT = jnp.swapaxes(v, 1, 2)                          # (B, KVH, Sk, dh)
+    kpos = jnp.arange(sk)
+
+    def chunk_fn(qc: jax.Array, qpos: jax.Array):
+        # qc: (B, C, H, dh) → grouped scores (B, KVH, rep·C, Sk). FT records
+        # are scoped inside the checkpointed body and re-emitted at the
+        # caller's trace level (telemetry can't cross remat/scan as a side
+        # channel).
+        def inner():
+            c = qc.shape[1]
+            # (B, C, KVH, rep, dh) → (B, KVH, rep·C, dh)
+            qg = qc.reshape(b, c, kvh, n_rep, dh).transpose(0, 2, 3, 1, 4)
+            qg = qg.reshape(b, kvh, n_rep * c, dh)
+            scores = ctx.bdot("attn_qk", qg, kT).astype(jnp.float32) * scale
+            if causal:
+                mask = qpos[:, None] >= kpos[None, :]   # (C, Sk)
+                maskg = jnp.tile(mask, (n_rep, 1))      # (rep·C, Sk)
+                scores = jnp.where(maskg[None, None], scores, -1e30)
+            p = jax.nn.softmax(scores, axis=-1).astype(qc.dtype)
+            out = ctx.bdot("attn_pv", p, vT)            # (B, KVH, rep·C, dh)
+            out = out.reshape(b, kvh, n_rep, c, dh).transpose(0, 3, 1, 2, 4)
+            return out.reshape(b, c, h, dh)             # (B, C, H, dh)
+        return telemetry.scoped(inner)
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+    chunk = min(chunk, sq)
+    if sq % chunk != 0:
+        chunk = sq  # ragged smoke shapes — single chunk
+    n_chunks = sq // chunk
+    if n_chunks == 1:
+        out, rep = chunk_fn(q, q_offset + jnp.arange(sq))
+        telemetry.record_report(rep)
+        return out
+
+    qs = q.reshape(b, n_chunks, chunk, h, dh).swapaxes(0, 1)
+    pos = (q_offset + jnp.arange(sq)).reshape(n_chunks, chunk)
+
+    def body(rep, qp):
+        qc, qpos = qp
+        out, rep_c = chunk_fn(qc, qpos)
+        return rep.merge(rep_c), out
+
+    rep, outs = loops.scan(body, telemetry.FTReport.empty(), (qs, pos))
+    telemetry.record_report(rep)
+    return outs.swapaxes(0, 1).reshape(b, sq, h, dh)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array, ctx: Ctx) -> jax.Array:
+    """Single-position attention against a (B, Smax, KVH, dh) cache.
+    Positions ≥ length are masked. q: (B, 1, H, dh). GQA is grouped — the
+    cache is never repeat-materialized."""
+    b, _, h, dh = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    n_rep = h // kvh
+    qg = q.reshape(b, kvh, n_rep, dh)                    # (B, KVH, rep, dh)
+    kT = jnp.swapaxes(k_cache, 1, 2).swapaxes(2, 3)      # (B, KVH, dh, S)
+    scores = ctx.bdot("dec_qk", qg, kT).astype(jnp.float32) * dh ** -0.5
+    mask = jnp.arange(s)[None, :] < length[:, None]      # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = ctx.bdot("dec_pv", p, jnp.swapaxes(v_cache, 1, 2))
+    return out.reshape(b, 1, h, dh)
+
+
+def attention(p: Dict[str, Any], x: jax.Array, cfg, ctx: Ctx, *,
+              causal: bool = True, positions: Optional[jax.Array] = None,
+              kv: Optional[jax.Array] = None,
+              chunk: int = 512) -> jax.Array:
+    """Full attention block (self- or cross-). x: (B, S, d)."""
+    b, s, d = x.shape
+    src = x if kv is None else kv
+    q = ctx.dot("wq", x, p["wq"])
+    k = ctx.dot("wk", src, p["wk"])
+    v = ctx.dot("wv", src, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, src.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, src.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    if positions is None:
+        positions = jnp.arange(s)
+    if kv is None:  # RoPE on self-attention only
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=causal, chunk=chunk, ctx=ctx)
+    return ctx.dot("wo", out.reshape(b, s, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, n_layers: int, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, d_ff, dtype),
+        "w_up": dense_init(ks[1], d, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d, dtype,
+                             scale=0.02 / (2 * n_layers) ** 0.5),
+    }
+
+
+def mlp(p: Dict[str, Any], x: jax.Array, ctx: Ctx) -> jax.Array:
+    g = ctx.dot("w_gate", x, p["w_gate"])
+    u = ctx.dot("w_up", x, p["w_up"])
+    return ctx.dot("w_down", jax.nn.silu(g) * u, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_head(x: jax.Array, table: jax.Array, ctx: Ctx) -> jax.Array:
+    return ctx.dot("lm_head", x, table)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore: int = -1) -> jax.Array:
+    """Mean CE over positions with label != ignore. logits (…, V).
+
+    GSPMD-friendly: the gold-logit gather is expressed as a masked reduction
+    over the vocab dim (fuses to an iota-compare + reduce under a
+    vocab-sharded mesh — no all-gather of the logits, no gather op)."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels != ignore)
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == safe[..., None], logits, 0.0),
+                   axis=-1)
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,373 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in JAX.
+
+Training uses the chunked SSD algorithm: intra-chunk quadratic ("attention-
+like") GEMMs + inter-chunk linear state recurrence via lax.scan. The large
+intra-chunk GEMMs (C·Bᵀ scores, state contractions) are ABFT-protected with
+ft_batched_dot — the paper's technique applied to the GEMM-shaped portion of
+an attention-free architecture (DESIGN.md §5). The diagonal decay/recurrence
+is element-wise (not a GEMM) and sits outside ABFT's natural scope.
+
+Decode is O(1) per token: h ← exp(dt·A)·h + dt·B·x, y = C·h + D·x.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.core import ft_batched_dot
+from repro.core import loops
+from repro.distributed.sharding import shard
+from .blocks import Ctx, dense_init, rmsnorm
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    n_heads = d_inner // sc.head_dim
+    return d_inner, n_heads, sc.state, sc.n_groups
+
+
+def init_block(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    sc = cfg.ssm
+    d_inner, h, n, g = dims(cfg)
+    conv_ch = d_inner + 2 * g * n
+    proj_out = 2 * d_inner + 2 * g * n + h          # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (sc.conv_width, conv_ch),
+                                     jnp.float32) * 0.02).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, cfg.d_model, dtype,
+                               scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    d_inner, h, n, g = dims(cfg)
+    z, x, b_mat, c_mat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + g * n,
+                 2 * d_inner + 2 * g * n], axis=-1)
+    return z, x, b_mat, c_mat, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: (B, L, C); w: (W, C)."""
+    wlen = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (wlen - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(wlen):           # W=4 — unrolled, fuses to one VPU chain
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, d_skip, sc: SSMConfig, ctx: Ctx,
+                h0=None):
+    """Chunked SSD scan.
+    x: (B, L, H, P); dt: (B, L, H) post-softplus; a: (H,) < 0;
+    b_mat/c_mat: (B, L, G, N). Returns (y (B,L,H,P), h_last (B,H,N,P))."""
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    q = min(sc.chunk, l)
+    if l % q != 0:
+        q = l
+    nc = l // q
+    rep = h // g
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bc = b_mat.reshape(bsz, nc, q, g, n)
+    cc = c_mat.reshape(bsz, nc, q, g, n)
+
+    dta = dtc * a                                     # (B,nc,Q,H)
+    a_cum = jnp.cumsum(dta, axis=2)                   # within-chunk cumsum
+    a_total = a_cum[:, :, -1]                         # (B,nc,H)
+
+    # --- intra-chunk (quadratic, GEMM-shaped → ABFT-protected) -----------
+    # scores[b,c,h,qi,qj] = C[qi]·B[qj] * exp(a_cum[qi]-a_cum[qj]) * dt[qj]
+    cc_h = jnp.repeat(cc, rep, axis=3)                # (B,nc,Q,H,N)
+    bc_h = jnp.repeat(bc, rep, axis=3)
+    cb = ft_batched_dot(
+        cc_h.transpose(0, 1, 3, 2, 4).reshape(-1, q, n),
+        bc_h.transpose(0, 1, 3, 4, 2).reshape(-1, n, q),
+        ft=ctx.ft, key=ctx.subkey("ssd_cb"),
+    ).reshape(bsz, nc, h, q, q).astype(jnp.float32)
+    seg = a_cum.transpose(0, 1, 3, 2)                 # (B,nc,H,Q)
+    decay = jnp.exp(jnp.clip(seg[..., :, None] - seg[..., None, :],
+                             -60.0, 0.0))
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(causal, cb * decay, 0.0)
+    l_mat = l_mat * dtc.transpose(0, 1, 3, 2)[..., None, :]   # ·dt[qj]
+    y_diag = ft_batched_dot(
+        l_mat.astype(x.dtype).reshape(-1, q, q),
+        xc.transpose(0, 1, 3, 2, 4).reshape(-1, q, p),
+        ft=ctx.ft, key=ctx.subkey("ssd_lx"),
+    ).reshape(bsz, nc, h, q, p)
+
+    # --- chunk boundary states (GEMM-shaped) ------------------------------
+    # S[b,c,h,n,p] = Σ_q B[q]·exp(a_total - a_cum[q])·dt[q]·x[q]
+    decay_end = jnp.exp(jnp.clip(a_total[:, :, None] - a_cum, -60.0, 0.0))
+    bw = (bc_h.astype(jnp.float32)
+          * (decay_end * dtc)[..., None])             # (B,nc,Q,H,N)
+    states = ft_batched_dot(
+        bw.transpose(0, 1, 3, 4, 2).astype(x.dtype).reshape(-1, n, q),
+        xc.transpose(0, 1, 3, 2, 4).reshape(-1, q, p),
+        ft=ctx.ft, key=ctx.subkey("ssd_state"),
+    ).reshape(bsz, nc, h, n, p).astype(jnp.float32)
+
+    # --- inter-chunk recurrence (element-wise scan) -----------------------
+    chunk_decay = jnp.exp(jnp.clip(a_total, -60.0, 0.0))     # (B,nc,H)
+
+    def scan_fn(h_prev, inp):
+        s_c, dec = inp                                # (B,H,N,P), (B,H)
+        h_new = h_prev * dec[:, :, None, None] + s_c
+        return h_new, h_prev
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    h_last, h_prevs = loops.scan(
+        scan_fn, h0,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                  # (B,nc,H,N,P)
+
+    # --- inter-chunk output: y_off = C·h_prev·exp(a_cum) ------------------
+    y_off = ft_batched_dot(
+        cc_h.transpose(0, 1, 3, 2, 4).astype(x.dtype).reshape(-1, q, n),
+        h_prevs.astype(x.dtype).reshape(-1, n, p),
+        ft=ctx.ft, key=ctx.subkey("ssd_ch"),
+    ).reshape(bsz, nc, h, q, p).astype(jnp.float32)
+    y_off = y_off * jnp.exp(jnp.clip(a_cum, -60.0, 0.0)
+                            ).transpose(0, 1, 3, 2)[..., None]
+
+    y = (y_diag.astype(jnp.float32) + y_off)
+    y = y.transpose(0, 1, 3, 2, 4).reshape(bsz, l, h, p)
+    y = y + d_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), h_last
+
+
+def apply_block(p: Dict[str, Any], hidden: jax.Array, cfg: ModelConfig,
+                ctx: Ctx) -> jax.Array:
+    """Full Mamba-2 block (training / prefill). hidden: (B, L, d)."""
+    sc = cfg.ssm
+    d_inner, h, n, g = dims(cfg)
+    bsz, l, _ = hidden.shape
+    zxbcdt = ctx.dot("in_proj", hidden, p["in_proj"])
+    z, x, b_mat, c_mat, dt = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([x, b_mat, c_mat], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    x, b_mat, c_mat = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    x = x.reshape(bsz, l, h, sc.head_dim)
+    x = shard(x, "batch", "seq", None, None)
+    b_mat = b_mat.reshape(bsz, l, g, n)
+    c_mat = c_mat.reshape(bsz, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(x, dt, a, b_mat, c_mat, p["D"], sc, ctx)
+    y = y.reshape(bsz, l, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_w"], cfg.norm_eps)
+    return ctx.dot("out_proj", y, p["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) state step
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    sc = cfg.ssm
+    d_inner, h, n, g = dims(cfg)
+    conv_ch = d_inner + 2 * g * n
+    return {
+        "ssm": jnp.zeros((batch, h, n, sc.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, sc.conv_width - 1, conv_ch), jnp.bfloat16),
+    }
+
+
+def decode_block(p: Dict[str, Any], hidden: jax.Array, state: Dict[str, Any],
+                 cfg: ModelConfig, ctx: Ctx):
+    """One-token step. hidden: (B, 1, d). Returns (out, new_state)."""
+    sc = cfg.ssm
+    d_inner, h, n, g = dims(cfg)
+    bsz = hidden.shape[0]
+    zxbcdt = ctx.dot("in_proj", hidden, p["in_proj"])
+    z, x, b_mat, c_mat, dt = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([x, b_mat, c_mat], axis=-1)     # (B,1,conv_ch)
+    window = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
+    conv_out = (jnp.sum(window.astype(jnp.float32)
+                        * p["conv_w"].astype(jnp.float32)[None], axis=1)
+                + p["conv_b"].astype(jnp.float32))        # (B, conv_ch)
+    xbc1 = jax.nn.silu(conv_out)
+    x1, b1, c1 = jnp.split(xbc1, [d_inner, d_inner + g * n], axis=-1)
+    x1 = x1.reshape(bsz, h, sc.head_dim)
+    b1 = jnp.repeat(b1.reshape(bsz, g, n), h // g, axis=1)    # (B,H,N)
+    c1 = jnp.repeat(c1.reshape(bsz, g, n), h // g, axis=1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * a)                                  # (B,H)
+    ssm = state["ssm"] * decay[:, :, None, None] \
+        + (dt1[:, :, None] * b1)[..., None] * x1[:, :, None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", c1, ssm) \
+        + p["D"][None, :, None] * x1
+    y = y.reshape(bsz, 1, d_inner).astype(hidden.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_w"], cfg.norm_eps)
+    out = ctx.dot("out_proj", y, p["out_proj"])
+    new_state = {"ssm": shard(ssm, "batch", "state", None, None),
+                 "conv": window[:, 1:].astype(jnp.bfloat16)}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# full LM
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    from . import blocks as B
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+
+    def one(k):
+        kb, kn = jax.random.split(k)
+        return {"ssm": init_block(kb, cfg, dtype),
+                "pre_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+
+    v = cfg.padded_vocab()
+    return {
+        "embed": {"table": B.embed_init(k_emb, v, cfg.d_model, dtype)},
+        "layers": jax.vmap(one)(keys),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "head": {"table": dense_init(k_head, cfg.d_model, v, dtype)},
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig, ctx: Ctx, *, remat=True,
+            chunk: int = 512, extra_embeds=None):
+    from . import blocks as B
+    from repro.core import telemetry
+    from .transformer import AuxOut
+    x = B.embed(tokens, params["embed"]["table"]).astype(ctx.dtype)
+    x = shard(x, "batch", "seq", "embed")
+
+    def layer_fn(lp, h, idx):
+        lctx = ctx.fold(idx)
+        return telemetry.scoped(
+            lambda: h + apply_block(lp["ssm"],
+                                    rmsnorm(h, lp["pre_norm"], cfg.norm_eps),
+                                    cfg, lctx))
+
+    from .blocks import make_remat
+    fn = make_remat(layer_fn, remat)
+
+    def body(carry, scanned):
+        h, rep = carry
+        lp, idx = scanned
+        h, rep_l = fn(lp, h, idx)
+        return (h, rep.merge(rep_l)), None
+
+    (x, rep), _ = loops.scan(
+        body, (x, telemetry.FTReport.empty()),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits, rep_h = telemetry.scoped(
+        lambda: ctx.dot("lm_head", x, params["head"]["table"]))
+    return logits, AuxOut(jnp.zeros((), jnp.float32), rep.merge(rep_h))
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: Ctx, *, remat=True,
+            chunk: int = 512):
+    from . import blocks as B
+    logits, aux = forward(params, batch["tokens"], cfg, ctx, remat=remat)
+    ce = B.cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce, "aux": aux.balance, "ft": aux.ft}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, **_) -> Dict[str, Any]:
+    """SSM 'cache' = per-layer recurrent state (O(1) in max_len)."""
+    state = init_state(cfg, batch)
+    return {
+        "ssm": jnp.zeros((cfg.n_layers,) + state["ssm"].shape, jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers,) + state["conv"].shape,
+                          jnp.bfloat16),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params, token, cache, cfg: ModelConfig, ctx: Ctx):
+    from . import blocks as B
+    x = B.embed(token, params["embed"]["table"]).astype(ctx.dtype)
+
+    def body(h, scanned):
+        lp, ssm_s, conv_s, idx = scanned
+        lctx = ctx.fold(idx)
+        out, new_s = decode_block(lp["ssm"],
+                                  rmsnorm(h, lp["pre_norm"], cfg.norm_eps),
+                                  {"ssm": ssm_s, "conv": conv_s}, cfg, lctx)
+        return h + out, (new_s["ssm"], new_s["conv"])
+
+    x, (ssm_new, conv_new) = loops.scan(
+        body, x, (params["layers"], cache["ssm"], cache["conv"],
+                  jnp.arange(cfg.n_layers)))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = ctx.dot("lm_head", x, params["head"]["table"])
+    new_cache = {"ssm": ssm_new, "conv": conv_new,
+                 "length": cache["length"] + 1}
+    return logits, new_cache
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig, ctx: Ctx, *,
+            chunk: int = 512, remat: bool = True):
+    """Prefill = full forward; final SSM states become the cache. For
+    simplicity we re-run the chunked scan keeping the last state."""
+    from . import blocks as B
+    x = B.embed(tokens, params["embed"]["table"]).astype(ctx.dtype)
+    sc = cfg.ssm
+    d_inner, h, n, g = dims(cfg)
+
+    def layer_fn(lp, hdd, idx):
+        lctx = ctx.fold(idx)
+        p = lp["ssm"]
+        hidden = rmsnorm(hdd, lp["pre_norm"], cfg.norm_eps)
+        bsz, l, _ = hidden.shape
+        zxbcdt = lctx.dot("in_proj", hidden, p["in_proj"])
+        z, xx, b_mat, c_mat, dt = _split_proj(zxbcdt, cfg)
+        xbc = jnp.concatenate([xx, b_mat, c_mat], axis=-1)
+        conv_tail = xbc[:, -(sc.conv_width - 1):, :].astype(jnp.bfloat16)
+        xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+        xx, b_mat, c_mat = jnp.split(xbc, [d_inner, d_inner + g * n], -1)
+        xx = xx.reshape(bsz, l, h, sc.head_dim)
+        b_mat = b_mat.reshape(bsz, l, g, n)
+        c_mat = c_mat.reshape(bsz, l, g, n)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        a = -jnp.exp(p["A_log"])
+        y, h_last = ssd_chunked(xx, dt, a, b_mat, c_mat, p["D"], sc, lctx)
+        y = y.reshape(bsz, l, d_inner)
+        y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                    p["norm_w"], cfg.norm_eps)
+        return hdd + lctx.dot("out_proj", y, p["out_proj"]), \
+            (h_last, conv_tail)
+
+    from .blocks import make_remat
+    fn = make_remat(layer_fn, remat)
+
+    def body(hdd, scanned):
+        lp, idx = scanned
+        hdd, states = fn(lp, hdd, idx)
+        return hdd, states
+
+    x, (ssm_s, conv_s) = loops.scan(
+        body, x, (params["layers"], jnp.arange(cfg.n_layers)))
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = ctx.dot("lm_head", x, params["head"]["table"])[:, 0]
+    b = tokens.shape[0]
+    new_cache = {"ssm": ssm_s, "conv": conv_s,
+                 "length": jnp.full((b,), tokens.shape[1], jnp.int32)}
+    return logits, new_cache

@@ -1,0 +1,141 @@
+"""Architecture dispatch + ShapeDtypeStruct input specs.
+
+`module_for(cfg)` returns the family module exposing the uniform interface:
+    init(cfg, key, dtype)                         → params
+    forward(params, tokens, cfg, ctx, …)          → (logits, aux)
+    loss_fn(params, batch, cfg, ctx, …)           → (loss, metrics)
+    init_cache(cfg, batch, max_len, dtype)        → cache
+    prefill(params, tokens, cache, cfg, ctx, …)   → (logits, cache)
+    decode_step(params, token, cache, cfg, ctx)   → (logits, cache)
+
+`input_specs(cfg, shape, kind)` builds weak-type-correct ShapeDtypeStruct
+stand-ins for every model input — the dry-run lowers against these without
+allocating anything (multi-pod requirement #2).
+"""
+from __future__ import annotations
+
+from types import ModuleType
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import hybrid, mamba2, transformer, whisper
+
+
+def module_for(cfg: ModelConfig) -> ModuleType:
+    return {
+        "dense": transformer,
+        "moe": transformer,
+        "vlm": transformer,     # phi3-vision = backbone + patch stub inputs
+        "ssm": mamba2,
+        "hybrid": hybrid,
+        "encdec": whisper,
+    }[cfg.family]
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k requires sub-quadratic attention (assignment rule)."""
+    if shape.name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      batch: int = None) -> Dict[str, Any]:
+    b = batch if batch is not None else shape.global_batch
+    s = shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig,
+                  batch: int = None) -> Dict[str, Any]:
+    b = batch if batch is not None else shape.global_batch
+    s = shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
+                 batch: int = None) -> Dict[str, Any]:
+    b = batch if batch is not None else shape.global_batch
+    return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, batch: int = None,
+                dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct pytree matching init_cache (for decode dry-runs).
+    VLM caches cover the prepended patch positions too."""
+    b = batch if batch is not None else shape.global_batch
+    max_len = shape.seq_len + (cfg.n_patches if cfg.family == "vlm" else 0)
+    mod = module_for(cfg)
+    return jax.eval_shape(
+        lambda: mod.init_cache(cfg, b, max_len, dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, kind: str = None,
+                batch: int = None) -> Dict[str, Any]:
+    kind = kind or shape.kind
+    if kind == "train":
+        return train_batch_specs(cfg, shape, batch)
+    if kind == "prefill":
+        return prefill_specs(cfg, shape, batch)
+    if kind == "decode":
+        return decode_specs(cfg, shape, batch)
+    raise ValueError(kind)
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """MODEL_FLOPS = 6·N·D with N = active params (MoE: routed top-k only) —
+    the §Roofline useful-compute yardstick."""
+    d, l = cfg.d_model, cfg.n_layers
+    qd, kvd = cfg.qkv_dims
+    attn = d * (qd + 2 * kvd) + qd * d
+    if cfg.moe is not None:
+        ffn = 3 * d * cfg.moe.expert_d_ff * cfg.moe.top_k
+        ffn += 3 * d * cfg.moe.dense_d_ff
+        ffn += d * cfg.moe.n_experts          # router
+    elif cfg.family == "ssm":
+        d_inner = cfg.ssm.expand * d
+        g, n = cfg.ssm.n_groups, cfg.ssm.state
+        ffn = d * (2 * d_inner + 2 * g * n + d_inner // cfg.ssm.head_dim) \
+            + d_inner * d
+        attn = 0
+    elif cfg.family == "encdec":
+        ffn = 2 * d * cfg.d_ff
+        attn = attn * 2                        # self + cross
+    else:
+        ffn = 3 * d * cfg.d_ff
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm.expand * d
+        g, n = cfg.ssm.n_groups, cfg.ssm.state
+        ssm_p = d * (2 * d_inner + 2 * g * n + d_inner // cfg.ssm.head_dim) \
+            + d_inner * d
+        ng = l // cfg.attn_every
+        active = l * ssm_p + ng * (attn + 3 * d * cfg.d_ff)
+    else:
+        layers = l + (cfg.enc_layers if cfg.family == "encdec" else 0)
+        active = layers * (attn + ffn)
+    active += 2 * cfg.padded_vocab() * d       # embed + head
+    return 6.0 * active

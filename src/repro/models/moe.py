@@ -1,0 +1,131 @@
+"""GShard/Switch-style Mixture-of-Experts layer with capacity-based one-hot
+dispatch — expert-parallel over the "model" mesh axis (GSPMD inserts the
+all-to-alls from the dispatch/combine einsums).
+
+Design notes (DESIGN.md §4/§5):
+  * dispatch/combine one-hot einsums are *data movement*, not protected by
+    ABFT (memory-class faults are ECC-covered per the paper's fault model);
+    expert FFN GEMMs are protected via ft-protected grouped einsums.
+  * `group_size` bounds the dispatch-einsum FLOPs overhead
+    (≈ 4·E·C·d / (6·k·d·f) of the expert FLOPs, C ∝ group_size); it is a
+    per-arch knob and a §Perf hillclimb lever.
+  * aux load-balance loss (Switch): E · Σ_e f_e · P_e.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ft_batched_dot
+from repro.configs.base import MoEConfig
+from repro.distributed.sharding import shard
+from .blocks import Ctx, dense_init
+
+
+def init_moe(key, d: int, mc: MoEConfig, n_layers: int, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    e, f = mc.n_experts, mc.expert_d_ff
+    scale = 0.02
+    down_scale = scale / (2 * n_layers) ** 0.5
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32, scale),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                   * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                 * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   * down_scale).astype(dtype),
+    }
+
+
+def capacity(group: int, mc: MoEConfig) -> int:
+    c = max(1, -(-int(group * mc.top_k * mc.capacity_factor)
+                 // mc.n_experts))
+    # lane-align only when it doesn't dominate (decode groups are tiny and
+    # a hard floor of 4 cost 32x dispatch waste at batch-128 decode — §Perf)
+    return ((c + 3) // 4) * 4 if c >= 4 else c
+
+
+def _group_geometry(b: int, s: int, mc: MoEConfig) -> int:
+    """Pick the dispatch group size. Groups are built by reshaping the
+    (B, S) token grid, so group boundaries align with the (batch→data,
+    seq→model) activation sharding: GSPMD then lowers the expert reshard as
+    one all-to-all instead of a full rematerialization (the 'involuntary
+    full remat' pathology the v0 baseline exhibited — see EXPERIMENTS §Perf).
+    Prefer ≥16 groups along seq so the group dim can carry the model axis."""
+    g = min(mc.group_size, b * s)
+    if s >= 2:
+        n_seq = s // g if g and s % g == 0 else 0
+        if n_seq == 0 or (n_seq < 16 and s >= 16 and s % 16 == 0):
+            g = max(s // 16, 1)
+        if s % g != 0:
+            g = s                       # ragged smoke shapes: 1 group/row
+    else:
+        g = min(g, b)
+        if b % g != 0:
+            g = b
+    return g
+
+
+def apply_moe(p: Dict[str, Any], x: jax.Array, mc: MoEConfig,
+              ctx: Ctx) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (y, aux_loss)."""
+    b, s, d = x.shape
+    e = mc.n_experts
+    g = _group_geometry(b, s, mc)
+    n_grp = (b * s) // g
+    # token-grid-aligned grouping: (B, S, d) → (B·S/g, g, d) keeps the
+    # merged leading dim sharded over (pod, data[, model]) with no data
+    # movement; see _group_geometry
+    xg = x.reshape(n_grp, g, d)
+    xg = shard(xg, "tokens", None, None)
+    c = capacity(g, mc)
+
+    # --- routing (f32) ----------------------------------------------------
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, mc.top_k)          # (n, g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # aux load-balance loss: fraction routed vs mean prob (Switch eq. 4)
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    onehot_top1 = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    # --- capacity-bounded one-hot dispatch/combine tensors -----------------
+    # position of each (token, k) within its expert queue
+    combine = jnp.zeros((n_grp, g, e, c), jnp.float32)
+    fill = jnp.zeros((n_grp, e), jnp.int32)
+    for k in range(mc.top_k):
+        oh = jax.nn.one_hot(idx[..., k], e, dtype=jnp.int32)   # (n, g, E)
+        pos = fill[:, None, :] + jnp.cumsum(oh, axis=1) - oh   # (n, g, E)
+        keep = (pos < c) & (oh > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, c), c,
+                                dtype=jnp.float32)             # (n, g, E, C)
+        combine = combine + (pos_oh * oh[..., None]
+                             * gate_vals[..., k][..., None, None])
+        fill = fill + jnp.sum(oh, axis=1)
+
+    dispatch = (combine > 0).astype(x.dtype)                   # (n, g, E, C)
+    dispatch = shard(dispatch, "tokens", None, None, None)
+
+    # --- dispatch → expert FFN (ABFT-protected) → combine -------------------
+    # xe constrained (data, experts→model): GSPMD lowers the token→expert
+    # reshard as one all-to-all over "model"
+    xe = jnp.einsum("ngec,ngd->necd", dispatch, xg)
+    xe = shard(xe, "exp_tokens", "experts", None, None)
+    xe2 = xe.transpose(1, 0, 2, 3).reshape(e, n_grp * c, d)
+    gate_h = ft_batched_dot(xe2, p["w_gate"], ft=ctx.ft,
+                            key=ctx.subkey("moe_gate"))
+    up_h = ft_batched_dot(xe2, p["w_up"], ft=ctx.ft, key=ctx.subkey("moe_up"))
+    yh = ft_batched_dot((jax.nn.silu(gate_h) * up_h).astype(x.dtype),
+                        p["w_down"], ft=ctx.ft, key=ctx.subkey("moe_down"))
+    ye = yh.reshape(e, n_grp, c, d).transpose(1, 0, 2, 3)      # (n, E, C, d)
+    ye = shard(ye, "exp_tokens", "experts", None, None)
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(x.dtype), ye)
+    y = shard(y, "tokens", None, None)
+    return y.reshape(b, s, d), aux

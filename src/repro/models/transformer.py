@@ -1,0 +1,288 @@
+"""Decoder-only transformer LM (dense + MoE families).
+
+Covers: qwen2-7b, codeqwen1.5-7b, phi4-mini, minitron-4b (dense);
+arctic-480b, qwen3-moe-235b (MoE — arctic additionally has a parallel dense
+residual FFN per layer). Also the backbone for phi-3-vision.
+
+Layers are scanned (stacked params) with optional per-layer remat — keeps
+the HLO size O(1) in depth, which the 512-device dry-run depends on.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import telemetry
+from repro.core import loops
+from repro.distributed.sharding import shard
+from . import blocks, moe as moe_lib
+from .blocks import Ctx
+
+
+class AuxOut(NamedTuple):
+    balance: jax.Array          # MoE load-balance loss
+    ft: telemetry.FTReport      # per-step SDC telemetry (DESIGN.md §2.3)
+
+
+def init_layer(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {
+        "attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": blocks.init_attention(ks[0], cfg, dtype),
+        "ffn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg.d_model, cfg.moe,
+                                    cfg.n_layers, dtype)
+        if cfg.moe.dense_d_ff:
+            p["mlp"] = blocks.init_mlp(ks[2], cfg.d_model, cfg.moe.dense_d_ff,
+                                       cfg.n_layers, dtype)
+    else:
+        p["mlp"] = blocks.init_mlp(ks[2], cfg.d_model, cfg.d_ff,
+                                   cfg.n_layers, dtype)
+    return p
+
+
+def apply_layer(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, ctx: Ctx,
+                *, positions: Optional[jax.Array] = None,
+                chunk: int = 512) -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm block. Returns (x, aux_loss)."""
+    x = shard(x, "batch", "seq", "embed")
+    h = blocks.rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    x = x + blocks.attention(p["attn"], h, cfg, ctx, causal=True,
+                             positions=positions, chunk=chunk)
+    h = blocks.rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        y, aux = moe_lib.apply_moe(p["moe"], h, cfg.moe, ctx)
+        if cfg.moe.dense_d_ff:
+            y = y + blocks.mlp(p["mlp"], h, ctx)   # arctic parallel residual
+        x = x + y
+    else:
+        x = x + blocks.mlp(p["mlp"], h, ctx)
+    return shard(x, "batch", "seq", "embed"), aux
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    v = cfg.padded_vocab()
+    params = {
+        "embed": {"table": blocks.embed_init(k_emb, v, cfg.d_model, dtype)},
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"table": blocks.dense_init(k_head, cfg.d_model, v,
+                                                     dtype)}
+    return params
+
+
+def _scan_layers(params, x, fn, remat: bool):
+    """Scan stacked layers carrying (activations, aux-loss, FTReport) — SDC
+    telemetry crosses the scan via the carry (telemetry.scoped)."""
+
+    def wrapped(lp, h, idx):
+        return telemetry.scoped(lambda: fn(lp, h, idx))
+
+    body_fn = blocks.make_remat(wrapped, remat)
+
+    def body(carry, scanned):
+        h, aux, rep = carry
+        lp, idx = scanned
+        (h, aux_l), rep_l = body_fn(lp, h, idx)
+        return (h, aux + aux_l, rep.merge(rep_l)), None
+
+    n = jax.tree.leaves(params)[0].shape[0]
+    (x, aux, rep), _ = loops.scan(
+        body, (x, jnp.zeros((), jnp.float32), telemetry.FTReport.empty()),
+        (params, jnp.arange(n)))
+    return x, aux, rep
+
+
+def forward(params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
+            remat: bool = True, chunk: int = 512,
+            extra_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B, S) int32 → (logits (B, S', V), aux). If `extra_embeds`
+    (B, P, d) is given (VLM patch stubs), it is prepended to the sequence."""
+    x = blocks.embed(tokens, params["embed"]["table"]).astype(ctx.dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(ctx.dtype), x], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.arange(x.shape[1])
+
+    def layer_fn(lp, h, idx):
+        return apply_layer(lp, h, cfg, ctx.fold(idx), positions=positions,
+                           chunk=chunk)
+
+    x, aux, rep = _scan_layers(params["layers"], x, layer_fn, remat)
+    x = blocks.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    table = (params["embed"]["table"].T if cfg.tie_embeddings
+             else params["head"]["table"])
+    logits, rep_h = telemetry.scoped(lambda: blocks.lm_head(x, table, ctx))
+    # "seq" claims the model axis first ⇒ logits stay sequence-sharded and
+    # the CE loss is fully local (only the head table is gathered, once).
+    return shard(logits, "batch", "seq", "vocab"), AuxOut(aux,
+                                                          rep.merge(rep_h))
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig, ctx: Ctx,
+            *, remat: bool = True, chunk: int = 512) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, batch["tokens"], cfg, ctx, remat=remat,
+                          chunk=chunk, extra_embeds=batch.get("patches"))
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:      # VLM: logits cover patches too
+        logits = logits[:, -labels.shape[1]:]
+    ce = blocks.cross_entropy(logits, labels)
+    total = ce + 0.01 * aux.balance
+    return total, {"ce": ce, "aux": aux.balance, "ft": aux.ft}
+
+
+# ---------------------------------------------------------------------------
+# serving: KV cache, prefill, decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               kv_batch_axis: str = "batch") -> Dict[str, Any]:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _shard_cache(cache):
+    cache["k"] = shard(cache["k"], None, "batch", "kv_seq", "kv_heads", None)
+    cache["v"] = shard(cache["v"], None, "batch", "kv_seq", "kv_heads", None)
+    return cache
+
+
+def _project_qkv(p, h, cfg: ModelConfig, ctx: Ctx, positions):
+    b, s, _ = h.shape
+    q = ctx.dot("wq", h, p["wq"])
+    k = ctx.dot("wk", h, p["wk"])
+    v = ctx.dot("wv", h, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = blocks.apply_rope(q, positions, cfg.rope_theta)
+    k = blocks.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def decode_step(params, token: jax.Array, cache: Dict[str, Any],
+                cfg: ModelConfig, ctx: Ctx) -> Tuple[jax.Array, Dict]:
+    """One decode step. token: (B, 1) int32; cache holds `length` tokens.
+    Returns (logits (B, 1, V), new cache)."""
+    cache = _shard_cache(dict(cache))
+    x = blocks.embed(token, params["embed"]["table"]).astype(ctx.dtype)
+    pos = cache["length"]                                  # (B,)
+
+    def layer_fn(lp, h, scanned_cache):
+        k_c, v_c, idx = scanned_cache
+        lctx = ctx.fold(idx)
+        hn = blocks.rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = _project_qkv(lp["attn"], hn, cfg, lctx,
+                                       pos[:, None])
+        # write the new kv at `pos` for every batch row
+        b = h.shape[0]
+        oh = jax.nn.one_hot(pos, k_c.shape[1], dtype=k_c.dtype)  # (B, S)
+        k_c = k_c + oh[:, :, None, None] * k_new
+        v_c = v_c + oh[:, :, None, None] * v_new
+        att = blocks.decode_attention(q, k_c, v_c, pos + 1, lctx)
+        h = h + lctx.dot("wo", att.reshape(b, 1, -1), lp["attn"]["wo"])
+        hn = blocks.rmsnorm(h, lp["ffn_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moe_lib.apply_moe(lp["moe"], hn, cfg.moe, lctx)
+            if cfg.moe.dense_d_ff:
+                y = y + blocks.mlp(lp["mlp"], hn, lctx)
+            h = h + y
+        else:
+            h = h + blocks.mlp(lp["mlp"], hn, lctx)
+        return h, (k_c, v_c)
+
+    def body(h, scanned):
+        lp, k_c, v_c, idx = scanned
+        h, (k_c, v_c) = layer_fn(lp, h, (k_c, v_c, idx))
+        return h, (k_c, v_c)
+
+    n = cfg.n_layers
+    x, (new_k, new_v) = loops.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], jnp.arange(n)))
+    x = blocks.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    table = (params["embed"]["table"].T if cfg.tie_embeddings
+             else params["head"]["table"])
+    logits = blocks.lm_head(x, table, ctx)
+    new_cache = {"k": new_k, "v": new_v, "length": cache["length"] + 1}
+    return logits, _shard_cache(new_cache)
+
+
+def prefill(params, tokens: jax.Array, cache: Dict[str, Any],
+            cfg: ModelConfig, ctx: Ctx, *, chunk: int = 512,
+            remat: bool = True,
+            extra_embeds: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Run the prompt through the model, filling the KV cache.
+    `extra_embeds` (B, P, d) — VLM patch stubs prepended to the prompt.
+    Returns (last-position logits (B, V), cache)."""
+    cache = _shard_cache(dict(cache))
+    b = tokens.shape[0]
+    x = blocks.embed(tokens, params["embed"]["table"]).astype(ctx.dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(ctx.dtype), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    def layer_fn(lp, h, idx):
+        lctx = ctx.fold(idx)
+        hn = blocks.rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _project_qkv(lp["attn"], hn, cfg, lctx, positions)
+        att = blocks.chunked_attention(q, k, v, causal=True, chunk=chunk,
+                                       ctx=lctx)
+        h = h + lctx.dot("wo", att.reshape(b, s, -1), lp["attn"]["wo"])
+        hn = blocks.rmsnorm(h, lp["ffn_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moe_lib.apply_moe(lp["moe"], hn, cfg.moe, lctx)
+            if cfg.moe.dense_d_ff:
+                y = y + blocks.mlp(lp["mlp"], hn, lctx)
+            h = h + y
+        else:
+            h = h + blocks.mlp(lp["mlp"], hn, lctx)
+        return h, (k, v)
+
+    fn = blocks.make_remat(layer_fn, remat)
+
+    def body(h, scanned):
+        lp, idx = scanned
+        h, (k, v) = fn(lp, h, idx)
+        return h, (k, v)
+
+    x, (ks, vs) = loops.scan(body, x,
+                               (params["layers"], jnp.arange(cfg.n_layers)))
+    # place prompt KV into the cache buffers
+    max_len = cache["k"].shape[2]
+    pad = max_len - s
+    k_full = jnp.pad(ks.astype(cache["k"].dtype),
+                     ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v_full = jnp.pad(vs.astype(cache["v"].dtype),
+                     ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    x = blocks.rmsnorm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    table = (params["embed"]["table"].T if cfg.tie_embeddings
+             else params["head"]["table"])
+    logits = blocks.lm_head(x, table, ctx)[:, 0]
+    new_cache = {"k": k_full, "v": v_full,
+                 "length": jnp.full((b,), s, jnp.int32)}
+    return logits, _shard_cache(new_cache)

@@ -1,0 +1,287 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356) — transformer backbone
+only; the conv/mel audio frontend is a STUB per the assignment:
+`input_specs()` supplies precomputed frame embeddings (B, n_audio_frames, d).
+
+Faithful structure: bidirectional encoder over audio frames (sinusoidal
+positions), causal decoder with learned positions, per-layer cross-attention
+into the encoder output, GELU MLPs. Norm is RMSNorm (simplification vs.
+LayerNorm — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import telemetry
+from repro.core import loops
+from repro.distributed.sharding import shard
+from . import blocks as B
+from .blocks import Ctx, rmsnorm
+
+MAX_DEC_POS = 65_536   # covers decode_32k
+
+
+def _sinusoid(length: int, d: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def init_gelu_mlp(key, d: int, d_ff: int, n_layers: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"w1": B.dense_init(k1, d, d_ff, dtype),
+            "w2": B.dense_init(k2, d_ff, d, dtype,
+                               scale=0.02 / (2 * n_layers) ** 0.5)}
+
+
+def gelu_mlp(p, x, ctx: Ctx):
+    return ctx.dot("w2", jax.nn.gelu(ctx.dot("w1", x, p["w1"])), p["w2"])
+
+
+def _init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": B.init_attention(k1, cfg, dtype),
+        "ffn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlp": init_gelu_mlp(k2, cfg.d_model, cfg.d_ff, cfg.n_layers, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": B.init_attention(k1, cfg, dtype),
+        "cross_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "cross": B.init_attention(k2, cfg, dtype),
+        "ffn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlp": init_gelu_mlp(k3, cfg.d_model, cfg.d_ff, cfg.n_layers, dtype),
+    }
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    k_emb, k_enc, k_dec, k_head, k_pos = jax.random.split(key, 5)
+    v = cfg.padded_vocab()
+    enc_keys = jax.random.split(k_enc, cfg.enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        "embed": {"table": B.embed_init(k_emb, v, cfg.d_model, dtype)},
+        "dec_pos": (jax.random.normal(k_pos, (MAX_DEC_POS, cfg.d_model),
+                                      jnp.float32) * 0.01).astype(dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype)
+                               )(enc_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype)
+                               )(dec_keys),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "head": {"table": B.dense_init(k_head, cfg.d_model, v, dtype)},
+    }
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
+           remat: bool = True, chunk: int = 512) -> jax.Array:
+    """frames: (B, T_a, d) precomputed embeddings (conv-frontend stub)."""
+    x = frames.astype(ctx.dtype) + _sinusoid(frames.shape[1], cfg.d_model
+                                             ).astype(ctx.dtype)
+    x = shard(x, "batch", "seq", "embed")
+
+    def layer_fn(lp, h, idx):
+        def inner():
+            lctx = ctx.fold(idx)
+            hn = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+            h2 = h + B.attention(lp["attn"], hn, cfg, lctx, causal=False,
+                                 chunk=chunk)
+            hn = rmsnorm(h2, lp["ffn_norm"], cfg.norm_eps)
+            return h2 + gelu_mlp(lp["mlp"], hn, lctx)
+        return telemetry.scoped(inner)
+
+    fn = B.make_remat(layer_fn, remat)
+
+    def body(carry, scanned):
+        h, rep = carry
+        lp, idx = scanned
+        h, rep_l = fn(lp, h, idx)
+        return (h, rep.merge(rep_l)), None
+
+    (x, rep), _ = loops.scan(body, (x, telemetry.FTReport.empty()),
+                               (params["enc_layers"],
+                                jnp.arange(cfg.enc_layers)))
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps), rep
+
+
+def _dec_layer(lp, h, enc_out, cfg, ctx: Ctx, chunk: int):
+    hn = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+    h = h + B.attention(lp["attn"], hn, cfg, ctx, causal=True, chunk=chunk)
+    hn = rmsnorm(h, lp["cross_norm"], cfg.norm_eps)
+    h = h + B.attention(lp["cross"], hn, cfg, ctx, causal=False,
+                        kv=enc_out, chunk=chunk)
+    hn = rmsnorm(h, lp["ffn_norm"], cfg.norm_eps)
+    return h + gelu_mlp(lp["mlp"], hn, ctx)
+
+
+def forward(params, batch_or_tokens, cfg: ModelConfig, ctx: Ctx, *,
+            remat: bool = True, chunk: int = 512, frames=None,
+            extra_embeds=None):
+    """tokens (B, S) + frames (B, T_a, d) → (logits, aux)."""
+    tokens = batch_or_tokens
+    enc_out, rep = encode(params, frames, cfg, ctx, remat=remat, chunk=chunk)
+    x = B.embed(tokens, params["embed"]["table"]).astype(ctx.dtype)
+    x = x + params["dec_pos"][:tokens.shape[1]].astype(ctx.dtype)
+    x = shard(x, "batch", "seq", "embed")
+
+    def layer_fn(lp, h, idx):
+        return telemetry.scoped(
+            lambda: _dec_layer(lp, h, enc_out, cfg, ctx.fold(100 + idx),
+                               chunk))
+
+    fn = B.make_remat(layer_fn, remat)
+
+    def body(carry, scanned):
+        h, rr = carry
+        lp, idx = scanned
+        h, rep_l = fn(lp, h, idx)
+        return (h, rr.merge(rep_l)), None
+
+    (x, rep), _ = loops.scan(body, (x, rep),
+                               (params["dec_layers"],
+                                jnp.arange(cfg.n_layers)))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits, rep_h = telemetry.scoped(
+        lambda: ctx.dot("lm_head", x, params["head"]["table"]))
+    from .transformer import AuxOut
+    return logits, AuxOut(jnp.zeros((), jnp.float32), rep.merge(rep_h))
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: Ctx, *, remat=True,
+            chunk: int = 512):
+    logits, aux = forward(params, batch["tokens"], cfg, ctx, remat=remat,
+                          chunk=chunk, frames=batch["frames"])
+    ce = B.cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce, "aux": aux.balance, "ft": aux.ft}
+
+
+# ---------------------------------------------------------------------------
+# serving: cross-KV computed at prefill; self-KV cache grows per step
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, **_) -> Dict[str, Any]:
+    kv = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    xkv = (cfg.n_layers, batch, cfg.n_audio_frames, cfg.n_kv_heads,
+           cfg.head_dim)
+    return {
+        "k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+        "xk": jnp.zeros(xkv, dtype), "xv": jnp.zeros(xkv, dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig, ctx: Ctx, *,
+            frames=None, chunk: int = 512, remat: bool = True):
+    """Encode audio, pre-compute cross-KV, run the decoder prompt."""
+    bsz, s = tokens.shape
+    enc_out, _ = encode(params, frames, cfg, ctx, remat=remat, chunk=chunk)
+    x = B.embed(tokens, params["embed"]["table"]).astype(ctx.dtype)
+    x = x + params["dec_pos"][:s].astype(ctx.dtype)
+    positions = jnp.arange(s)
+
+    def layer_fn(lp, h, idx):
+        lctx = ctx.fold(100 + idx)
+        hn = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        q = lctx.dot("wq", hn, lp["attn"]["wq"])
+        k = lctx.dot("wk", hn, lp["attn"]["wk"])
+        v = lctx.dot("wv", hn, lp["attn"]["wv"])
+        q = q.reshape(bsz, s, cfg.n_heads, cfg.head_dim)
+        k = k.reshape(bsz, s, cfg.n_kv_heads, cfg.head_dim)
+        v = v.reshape(bsz, s, cfg.n_kv_heads, cfg.head_dim)
+        q = B.apply_rope(q, positions, cfg.rope_theta)
+        k = B.apply_rope(k, positions, cfg.rope_theta)
+        att = B.chunked_attention(q, k, v, causal=True, chunk=chunk,
+                                  ctx=lctx)
+        h = h + lctx.dot("wo", att.reshape(bsz, s, -1), lp["attn"]["wo"])
+        # cross attention + its cacheable KV
+        hn = rmsnorm(h, lp["cross_norm"], cfg.norm_eps)
+        xk = lctx.dot("xwk", enc_out, lp["cross"]["wk"])
+        xv = lctx.dot("xwv", enc_out, lp["cross"]["wv"])
+        ta = enc_out.shape[1]
+        xk4 = xk.reshape(bsz, ta, cfg.n_kv_heads, cfg.head_dim)
+        xv4 = xv.reshape(bsz, ta, cfg.n_kv_heads, cfg.head_dim)
+        qx = lctx.dot("xwq", hn, lp["cross"]["wq"]
+                      ).reshape(bsz, s, cfg.n_heads, cfg.head_dim)
+        attx = B.chunked_attention(qx, xk4, xv4, causal=False, chunk=chunk,
+                                   ctx=lctx)
+        h = h + lctx.dot("xwo", attx.reshape(bsz, s, -1), lp["cross"]["wo"])
+        hn = rmsnorm(h, lp["ffn_norm"], cfg.norm_eps)
+        h = h + gelu_mlp(lp["mlp"], hn, lctx)
+        return h, (k, v, xk4, xv4)
+
+    fn = B.make_remat(layer_fn, remat)
+
+    def body(h, scanned):
+        lp, idx = scanned
+        h, kv = fn(lp, h, idx)
+        return h, kv
+
+    x, (ks, vs, xks, xvs) = loops.scan(
+        body, x, (params["dec_layers"], jnp.arange(cfg.n_layers)))
+    max_len = cache["k"].shape[2]
+    pad = max_len - s
+    k_full = jnp.pad(ks.astype(cache["k"].dtype),
+                     ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v_full = jnp.pad(vs.astype(cache["v"].dtype),
+                     ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = ctx.dot("lm_head", x, params["head"]["table"])[:, 0]
+    new_cache = {"k": k_full, "v": v_full, "xk": xks, "xv": xvs,
+                 "length": jnp.full((bsz,), s, jnp.int32)}
+    return logits, new_cache
+
+
+def decode_step(params, token, cache, cfg: ModelConfig, ctx: Ctx):
+    x = B.embed(token, params["embed"]["table"]).astype(ctx.dtype)
+    bsz = token.shape[0]
+    pos = cache["length"]
+    x = x + jnp.take(params["dec_pos"], pos, axis=0)[:, None, :
+                                                     ].astype(ctx.dtype)
+
+    def body(h, scanned):
+        lp, k_c, v_c, xk_c, xv_c, idx = scanned
+        lctx = ctx.fold(100 + idx)
+        hn = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        q = lctx.dot("wq", hn, lp["attn"]["wq"])
+        k_new = lctx.dot("wk", hn, lp["attn"]["wk"])
+        v_new = lctx.dot("wv", hn, lp["attn"]["wv"])
+        q = q.reshape(bsz, 1, cfg.n_heads, cfg.head_dim)
+        k_new = k_new.reshape(bsz, 1, cfg.n_kv_heads, cfg.head_dim)
+        v_new = v_new.reshape(bsz, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = B.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = B.apply_rope(k_new, pos[:, None], cfg.rope_theta)
+        oh = jax.nn.one_hot(pos, k_c.shape[1], dtype=k_c.dtype)
+        k_c = k_c + oh[:, :, None, None] * k_new
+        v_c = v_c + oh[:, :, None, None] * v_new
+        att = B.decode_attention(q, k_c, v_c, pos + 1, lctx)
+        h = h + lctx.dot("wo", att.reshape(bsz, 1, -1), lp["attn"]["wo"])
+        hn = rmsnorm(h, lp["cross_norm"], cfg.norm_eps)
+        qx = lctx.dot("xwq", hn, lp["cross"]["wq"]
+                      ).reshape(bsz, 1, cfg.n_heads, cfg.head_dim)
+        ta = xk_c.shape[1]
+        attx = B.decode_attention(qx, xk_c, xv_c,
+                                  jnp.full((bsz,), ta, jnp.int32), lctx)
+        h = h + lctx.dot("xwo", attx.reshape(bsz, 1, -1), lp["cross"]["wo"])
+        hn = rmsnorm(h, lp["ffn_norm"], cfg.norm_eps)
+        h = h + gelu_mlp(lp["mlp"], hn, lctx)
+        return h, (k_c, v_c)
+
+    x, (k_n, v_n) = loops.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"], jnp.arange(cfg.n_layers)))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = ctx.dot("lm_head", x, params["head"]["table"])
+    new_cache = {"k": k_n, "v": v_n, "xk": cache["xk"], "xv": cache["xv"],
+                 "length": cache["length"] + 1}
+    return logits, new_cache

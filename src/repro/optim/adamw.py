@@ -1,0 +1,154 @@
+"""AdamW in pure JAX, with an optional int8-quantized moment mode ("q8").
+
+q8 stores m and v as per-tensor absmax-scaled int8 — 4 bytes/param of
+optimizer state instead of 8 — which is what lets arctic-480b train on a
+single 256-chip v5e pod (DESIGN.md §4; the dry-run memory analysis depends
+on it). Quantization error is re-absorbed each step because the moments are
+re-quantized from the freshly updated f32 values (no error feedback needed
+at β≤0.999 for the magnitudes involved; validated by the convergence-parity
+test).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    q8: bool = False
+
+
+BLOCK = 256
+_V_FLOOR = 1e-24
+
+
+def _blocks(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def _q8_linear(x: jax.Array) -> Dict[str, jax.Array]:
+    """Block-wise signed linear int8 (first moment)."""
+    b, _ = _blocks(x)
+    scale = jnp.maximum(jnp.max(jnp.abs(b), axis=1), 1e-30) / 127.0
+    q = jnp.round(b / scale[:, None]).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def _dq8_linear(st, shape) -> jax.Array:
+    flat = (st["q"].astype(jnp.float32) * st["s"][:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def _q8_log(x: jax.Array) -> Dict[str, jax.Array]:
+    """Block-wise log-domain int8 for the (non-negative) second moment —
+    uniform *relative* error across v's huge dynamic range (a per-tensor
+    linear scale zeroes small v entries and blows up the update)."""
+    b, _ = _blocks(x)
+    b = jnp.maximum(b, _V_FLOOR)      # floor AFTER padding (pad zeros → log 0)
+    lg = jnp.log(b)
+    lo = jnp.min(lg, axis=1)
+    hi = jnp.max(lg, axis=1)
+    step = jnp.maximum(hi - lo, 1e-6) / 254.0
+    q = jnp.round((lg - lo[:, None]) / step[:, None] - 127.0
+                  ).astype(jnp.int8)
+    return {"q": q, "lo": lo.astype(jnp.float32),
+            "st": step.astype(jnp.float32)}
+
+
+def _dq8_log(st, shape) -> jax.Array:
+    lg = ((st["q"].astype(jnp.float32) + 127.0) * st["st"][:, None]
+          + st["lo"][:, None])
+    flat = jnp.exp(lg).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    v = flat[:n].reshape(shape)
+    return jnp.where(v <= _V_FLOOR * 2, 0.0, v)
+
+
+def init(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    def zeros_m(p):
+        if cfg.q8:
+            return _q8_linear(jnp.zeros(p.shape, jnp.float32))
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def zeros_v(p):
+        if cfg.q8:
+            return _q8_log(jnp.zeros(p.shape, jnp.float32))
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "m": jax.tree.map(zeros_m, params),
+        "v": jax.tree.map(zeros_v, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _read_m(st, shape, q8: bool) -> jax.Array:
+    return _dq8_linear(st, shape) if q8 else st
+
+
+def _read_v(st, shape, q8: bool) -> jax.Array:
+    return _dq8_log(st, shape) if q8 else st
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(params, grads, state, cfg: AdamWConfig,
+          lr_scale: jax.Array | float = 1.0):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m_leaf, v_leaf):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * _read_m(m_leaf, p.shape, cfg.q8) + (1 - cfg.b1) * g
+        v = cfg.b2 * _read_v(v_leaf, p.shape, cfg.q8) + (1 - cfg.b2) * g * g
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (update + wd
+                                              * p.astype(jnp.float32))
+        return (new_p.astype(p.dtype),
+                _q8_linear(m) if cfg.q8 else m,
+                _q8_log(v) if cfg.q8 else v)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def state_bytes_per_param(cfg: AdamWConfig) -> int:
+    return 2 if cfg.q8 else 8

@@ -1,0 +1,127 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from
+benchmarks/dryrun_results.json.
+
+    PYTHONPATH=src python -m repro.tools.report [--json benchmarks/dryrun_results.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 2**30:
+        return f"{b/2**30:.2f}GiB"
+    return f"{b/2**20:.1f}MiB"
+
+
+def dryrun_table(results: Dict) -> str:
+    rows = ["| arch | shape | mesh | status | compile s | mem/dev | "
+            "raw flops/dev | notes |",
+            "|---|---|---|---|---|---|---|---|"]
+    for key in sorted(results):
+        v = results[key]
+        arch, shape, mesh = key.split("|")[:3]
+        if v["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | {mesh} | SKIP | — | — | — | "
+                        f"{v['reason'][:60]} |")
+            continue
+        if v["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | {mesh} | ERROR | — | — | — | "
+                        f"{v.get('error','')[:60]} |")
+            continue
+        mem = v.get("memory", {})
+        peak = (mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0))
+        raw = v.get("cost_raw", {}).get("flops", 0)
+        rows.append(
+            f"| {arch} | {shape} | {v['mesh']} | OK | {v['compile_s']} | "
+            f"{fmt_bytes(peak)} | {raw:.2e} | |")
+    return "\n".join(rows)
+
+
+def roofline_table(results: Dict) -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | MODEL_FLOPs/dev | useful | roofline |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(results):
+        v = results[key]
+        if v.get("status") != "ok" or "roofline" not in v:
+            continue
+        if not key.endswith("|single"):
+            continue
+        arch, shape, _ = key.split("|")[:3]
+        r = v["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"**{r['bottleneck']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def summarize(results: Dict) -> str:
+    ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    skip = sum(1 for v in results.values() if v.get("status") == "skipped")
+    err = sum(1 for v in results.values() if v.get("status") == "error")
+    return f"{ok} ok / {skip} skipped / {err} errors"
+
+
+def perf_table(hc: Dict, baseline: Dict) -> str:
+    """Hillclimb variants vs their cell's baseline."""
+    rows = ["| variant | compute s | memory s | collective s | bottleneck | "
+            "roofline | Δ dominant term | hypothesis → verdict |",
+            "|---|---|---|---|---|---|---|---|"]
+    cell_of = {"qwen2_train": "qwen2-7b|train_4k|single",
+               "arctic_decode": "arctic-480b|decode_32k|single",
+               "mamba2_train": "mamba2-780m|train_4k|single"}
+    for key in sorted(hc):
+        v = hc[key]
+        if v.get("status") != "ok":
+            rows.append(f"| {key} | — | — | — | ERROR | — | — | "
+                        f"{v.get('error','')[:40]} |")
+            continue
+        r = v["roofline"]
+        cell = cell_of.get(key.split("/")[0])
+        base = baseline.get(cell, {}).get("roofline") if cell else None
+        delta = ""
+        verdict = ""
+        if base:
+            dom = base["bottleneck"]
+            b0 = base[f"{dom}_s"]
+            b1 = r[f"{dom}_s"]
+            delta = f"{100 * (b1 / b0 - 1):+.1f}% ({dom})"
+            verdict = "CONFIRMED" if b1 < b0 * 0.95 else (
+                "~neutral" if b1 < b0 * 1.05 else "REFUTED")
+        hypo = v.get("hypothesis", "")[:80]
+        rows.append(
+            f"| {key} | {r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.3f} | {r['bottleneck']} | "
+            f"{r['roofline_fraction']:.3f} | {delta} | {hypo} → {verdict} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="benchmarks/dryrun_results.json")
+    ap.add_argument("--hillclimb", default="benchmarks/hillclimb_results.json")
+    args = ap.parse_args()
+    with open(args.json) as f:
+        results = json.load(f)
+    print("## Dry-run matrix\n")
+    print(summarize(results) + "\n")
+    print(dryrun_table(results))
+    print("\n## Roofline (single-pod 16×16 = 256 chips)\n")
+    print(roofline_table(results))
+    import os
+    if os.path.exists(args.hillclimb):
+        with open(args.hillclimb) as f:
+            hc = json.load(f)
+        print("\n## Perf hillclimb\n")
+        print(perf_table(hc, results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""Training step + loop.
+
+`make_train_step` builds the jit-able pure step:
+    (params, opt_state, batch, step) → (params, opt_state, metrics)
+with — in one function — the full fault-tolerance stack:
+  * every GEMM (fwd + bwd) ABFT-protected per RunConfig.ft;
+  * per-step FTReport (SDC detections/corrections) in the metrics;
+  * optional SEU injection campaign (run.ft.inject_rate + per-step key);
+  * optional int8 error-feedback gradient compression (cross-pod sync);
+  * gradient-accumulation microbatching (memory ↔ throughput knob).
+
+`train` is the host loop: data pipeline with O(1) resume, async
+checkpointing, SIGTERM preemption save, straggler watchdog.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core import telemetry
+from repro.core.policy import FTConfig
+from repro.distributed import compress as compress_lib
+from repro.models import model_zoo
+from repro.models.blocks import Ctx
+from repro.optim import adamw, schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    total_steps: int = 1000
+    warmup_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 200
+    compress_grads: bool = False
+    inject_every: int = 0        # inject SEUs every N steps (0 = never)
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig,
+                    opt_cfg: adamw.AdamWConfig, tc: TrainConfig
+                    ) -> Callable:
+    mod = model_zoo.module_for(cfg)
+    dtype = jnp.bfloat16 if run.dtype == "bfloat16" else jnp.float32
+    remat = run.remat if run.remat != "none" else False
+
+    def train_step(params, opt_state, batch, step, inject_key=None):
+        ctx = Ctx(ft=run.ft, key=inject_key, dtype=dtype,
+                  attn_shard=run.attn_shard)
+
+        def loss_f(p, b):
+            loss, metrics = mod.loss_fn(p, b, cfg, ctx, remat=remat,
+                                        chunk=run.attn_chunk)
+            return loss, metrics
+
+        if run.microbatch and run.microbatch > 1:
+            n_micro = run.microbatch
+            split = lambda x: x.reshape((n_micro, -1) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def micro_step(carry, mb):
+                (loss, mets), g = jax.value_and_grad(loss_f, has_aux=True
+                                                     )(params, mb)
+                acc_g, acc_l = carry
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + loss), mets
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), mets = jax.lax.scan(
+                micro_step, (zero_g, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            # FT counters sum across microbatches; float metrics average
+            metrics = jax.tree.map(
+                lambda x: (jnp.sum(x) if x.dtype in (jnp.int32, jnp.int64)
+                           else jnp.mean(x)), mets)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_f, has_aux=True
+                                                        )(params, batch)
+
+        if tc.compress_grads:
+            grads, new_err = compress_lib.compress_decompress(
+                grads, opt_state["ef_error"])
+        lr_scale = schedule.warmup_cosine(
+            step, warmup=tc.warmup_steps, total=tc.total_steps)
+        new_params, new_opt, opt_metrics = adamw.apply(
+            params, grads, opt_state["adam"], opt_cfg, lr_scale)
+        new_state = {"adam": new_opt}
+        if tc.compress_grads:
+            new_state["ef_error"] = new_err
+        elif "ef_error" in opt_state:
+            new_state["ef_error"] = opt_state["ef_error"]
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def init_opt_state(params, opt_cfg: adamw.AdamWConfig,
+                   tc: TrainConfig) -> Dict[str, Any]:
+    state = {"adam": adamw.init(params, opt_cfg)}
+    if tc.compress_grads:
+        state["ef_error"] = compress_lib.init_error(params)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# host loop
+# ---------------------------------------------------------------------------
+
+class Watchdog:
+    """Step-time straggler detector: flags steps slower than
+    mean + k·std over a trailing window (the per-host signal a pod-level
+    controller aggregates to evict slow nodes)."""
+
+    def __init__(self, window: int = 50, k: float = 3.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.window, self.k, self.clock = window, k, clock
+        self.times: list = []
+        self.stragglers: list = []
+        self._t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = self.clock()
+
+    def stop(self, step: int) -> bool:
+        dt = self.clock() - self._t0
+        hist = self.times[-self.window:]
+        slow = False
+        if len(hist) >= 10:
+            mean = sum(hist) / len(hist)
+            var = sum((x - mean) ** 2 for x in hist) / len(hist)
+            slow = dt > mean + self.k * (var ** 0.5) and dt > 1.5 * mean
+            if slow:
+                self.stragglers.append((step, dt, mean))
+        self.times.append(dt)
+        return slow
+
+
+def train(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig,
+          tc: TrainConfig, *, batch_override: Optional[int] = None,
+          ckpt_dir: Optional[str] = None, resume: bool = False,
+          stop_at: Optional[int] = None,
+          log: Callable[[str], None] = print) -> Dict[str, Any]:
+    """End-to-end training entry (examples/train_lm.py and launch/train.py
+    call this). Single-host; under a mesh the same code path works with
+    jit-sharded params (see launch/train.py)."""
+    from repro.checkpoint.ckpt import Checkpointer
+    from repro.data import pipeline as data_lib
+
+    mod = model_zoo.module_for(cfg)
+    dtype = jnp.bfloat16 if run.dtype == "bfloat16" else jnp.float32
+    opt_cfg = adamw.AdamWConfig(
+        lr=run.learning_rate, weight_decay=run.weight_decay,
+        grad_clip=run.grad_clip, q8=(run.opt_state == "q8"))
+    params = mod.init(cfg, jax.random.PRNGKey(run.seed), dtype)
+    opt_state = init_opt_state(params, opt_cfg, tc)
+    start_step = 0
+    ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+    if resume and ckpt and ckpt.latest_step() is not None:
+        tree, start_step, _ = ckpt.restore(
+            {"params": params, "opt": opt_state})
+        params, opt_state = tree["params"], tree["opt"]
+        log(f"resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, run, opt_cfg, tc),
+                      donate_argnums=(0, 1))
+    pipe = data_lib.for_model(cfg, shape, seed=run.seed,
+                              batch=batch_override)
+    wd = Watchdog()
+    history = []
+    preempted = {"flag": False}
+
+    def on_sigterm(signum, frame):
+        preempted["flag"] = True
+
+    old = signal.signal(signal.SIGTERM, on_sigterm)
+    try:
+        it = pipe.iter_from(start_step)
+        end_step = min(stop_at, tc.total_steps) if stop_at else tc.total_steps
+        for step in range(start_step, end_step):
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            if "patches" in batch:
+                batch["patches"] = batch["patches"].astype(dtype)
+            if "frames" in batch:
+                batch["frames"] = batch["frames"].astype(dtype)
+            inject_key = None
+            if tc.inject_every and step % tc.inject_every == 0:
+                inject_key = jax.random.PRNGKey(step)
+            wd.start()
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch, jnp.asarray(step), inject_key)
+            jax.block_until_ready(metrics["loss"])
+            slow = wd.stop(step)
+            if step % tc.log_every == 0 or step == tc.total_steps - 1:
+                ft = metrics.get("ft")
+                msg = (f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                       f"gnorm {float(metrics['grad_norm']):.3f}")
+                if ft is not None:
+                    msg += (f" sdc_det {int(ft.detected)}"
+                            f" sdc_fix {int(ft.corrected)}")
+                if slow:
+                    msg += " [STRAGGLER]"
+                log(msg)
+                history.append({"step": step,
+                                "loss": float(metrics["loss"])})
+            if ckpt and (step + 1) % tc.ckpt_every == 0:
+                ckpt.save_async(step + 1,
+                                {"params": params, "opt": opt_state})
+            if preempted["flag"]:
+                log(f"SIGTERM at step {step}: checkpointing and exiting")
+                if ckpt:
+                    ckpt.save(step + 1, {"params": params, "opt": opt_state})
+                break
+        if ckpt:
+            ckpt.wait()
+    finally:
+        signal.signal(signal.SIGTERM, old)
+    return {"params": params, "opt_state": opt_state, "history": history,
+            "stragglers": wd.stragglers,
+            "final_step": step + 1 if "step" in dir() else start_step}

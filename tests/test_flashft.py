@@ -1,0 +1,90 @@
+"""Flash-FT attention kernel validation (interpret mode) vs the pure-jnp
+oracle, including in-kernel SEU injection + correction."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.core.policy import FTConfig, InjectionSpec, ONLINE_BLOCK
+
+
+def _qkv(bh=2, sq=256, skv=256, dh=64, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (bh, sq, dh), dtype)
+    k = jax.random.normal(ks[1], (bh, skv, dh), dtype)
+    v = jax.random.normal(ks[2], (bh, skv, dh), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("shape", [(2, 256, 256, 64), (1, 128, 384, 128),
+                                   (2, 200, 256, 80)])
+def test_flash_ft_matches_oracle(shape, causal):
+    bh, sq, skv, dh = shape
+    if not causal and skv % 128 != 0:
+        pytest.skip("non-causal needs aligned skv")
+    if causal and sq != skv:
+        pytest.skip("causal oracle assumes aligned positions")
+    q, k, v = _qkv(bh, sq, skv, dh)
+    out, rep = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert float(rep[..., 0].sum()) == 0.0, "false positive"
+
+
+def test_flash_ft_corrects_injected_seu():
+    q, k, v = _qkv(2, 256, 256, 64)
+    # SEU in the PV accumulator of head 1, q-block 1, kv-step 0, elem (7, 20)
+    spec = InjectionSpec(row=7, col=20, magnitude=1000.0, k_step=0)
+    out, rep = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK, spec=spec, inj_bh=1,
+                            inj_q_block=1)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert float(rep[..., 0].sum()) == 1.0
+    assert float(rep[1, 1, 0]) == 1.0          # right (head, q-block)
+    assert abs(float(rep[1, 1, 4]) - 1000.0) < 1.0
+
+
+def test_flash_ft_detect_only_leaves_error():
+    q, k, v = _qkv(1, 128, 128, 64)
+    spec = InjectionSpec(row=3, col=5, magnitude=100.0, k_step=0)
+    ft = FTConfig(level="block", action="detect")
+    out, rep = ops.flash_ft(q, k, v, ft=ft, spec=spec)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(out - want)))
+    assert err > 0.01                          # corruption visible
+    assert float(rep[..., 0].sum()) >= 1.0
+    assert float(rep[..., 1].sum()) == 0.0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_ft_dtypes(dtype):
+    q, k, v = _qkv(1, 128, 128, 128, dtype=dtype)
+    out, rep = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert float(rep[..., 0].sum()) == 0.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(row=st.integers(0, 127), col=st.integers(0, 63),
+       kv_step=st.integers(0, 1), mag=st.floats(10.0, 1e5),
+       sign=st.sampled_from([-1.0, 1.0]))
+def test_flash_ft_property_seu_corrected(row, col, kv_step, mag, sign):
+    # inject into q-block 1 so both kv steps are causally live
+    q, k, v = _qkv(1, 256, 256, 64, seed=3)
+    spec = InjectionSpec(row=row, col=col, magnitude=sign * mag,
+                         k_step=kv_step)
+    out, rep = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK, spec=spec,
+                            inj_q_block=1)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-3, atol=max(1e-3, 4e-7 * mag))
+    assert float(rep[..., 0].sum()) >= 1.0

@@ -1,0 +1,170 @@
+"""Pallas kernel validation: shape/dtype sweeps + property tests against the
+pure-jnp oracle (ref.py). Kernels run in interpret mode on CPU."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref, autotune
+from repro.core.policy import FTConfig, InjectionSpec, ONLINE_BLOCK
+
+P128 = autotune.KernelParams(128, 128, 128)
+
+
+def _rand(shape, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Baseline GEMM kernel vs oracle — shape & dtype sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mnk", [
+    (128, 128, 128),        # single block
+    (256, 384, 512),        # multi-block all dims
+    (100, 77, 300),         # ragged → padding path
+    (128, 1024, 128),       # wide
+    (512, 128, 256),        # tall
+])
+def test_gemm_matches_oracle(mnk, dtype):
+    m, n, k = mnk
+    a, b = _rand((m, k), dtype, 1), _rand((k, n), dtype, 2)
+    got = ops.matmul(a, b, params=P128)
+    want = ref.matmul_ref(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 50)
+
+
+def test_gemm_autotuned_params_shape_classes():
+    for m, n, k in [(64, 64, 64), (300, 300, 256), (2000, 256, 512),
+                    (64, 2048, 256)]:
+        p = autotune.build_params(m, n, k)
+        a, b = _rand((m, k), jnp.float32, 3), _rand((k, n), jnp.float32, 4)
+        got = ops.matmul(a, b, params=p)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                                   rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# FT-GEMM: clean runs have zero false positives and exact GEMM semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("level", ["block", "tile", "inner"])
+@pytest.mark.parametrize("verify", ["step", "final"])
+def test_ftgemm_clean(level, verify):
+    a, b = _rand((256, 512), jnp.float32, 5), _rand((512, 384), jnp.float32, 6)
+    ft = FTConfig(level=level, verify=verify)
+    got, rep = ops.ft_matmul_report(a, b, ft=ft, params=P128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-4)
+    assert float(rep[..., 0].sum()) == 0.0, "false positive on clean GEMM"
+
+
+# ---------------------------------------------------------------------------
+# FT-GEMM: a single injected SEU is detected, located, and corrected
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("level", ["block", "tile", "inner"])
+def test_ftgemm_corrects_injected_error(level):
+    a, b = _rand((256, 512), jnp.float32, 7), _rand((512, 384), jnp.float32, 8)
+    spec = InjectionSpec(row=130, col=200, magnitude=77.0, k_step=1)
+    ft = FTConfig(level=level, verify="step")
+    got, rep = ops.ft_matmul_report(a, b, ft=ft, spec=spec, params=P128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-4)
+    assert float(rep[..., 0].sum()) == 1.0
+    blk = np.asarray(rep[130 // 128, 200 // 128])
+    assert int(blk[2]) == 130 and int(blk[3]) == 200
+    assert abs(blk[4] - 77.0) < 1e-2
+
+
+def test_ftgemm_detect_only_flags_without_correcting():
+    a, b = _rand((256, 512), jnp.float32, 9), _rand((512, 384), jnp.float32, 10)
+    spec = InjectionSpec(row=10, col=20, magnitude=55.0, k_step=0)
+    ft = FTConfig(level="block", action="detect")
+    got, rep = ops.ft_matmul_report(a, b, ft=ft, spec=spec, params=P128)
+    err = np.asarray(got) - np.asarray(a @ b)
+    assert abs(err[10, 20] - 55.0) < 1e-3          # error left in place
+    assert float(rep[..., 0].sum()) >= 1.0          # flagged (each interval)
+    assert float(rep[..., 1].sum()) == 0.0          # never corrected
+
+
+def test_ftgemm_matches_ft_oracle_with_injection():
+    a, b = _rand((128, 256), jnp.float32, 11), _rand((256, 128), jnp.float32, 12)
+    spec = InjectionSpec(row=5, col=9, magnitude=33.0, k_step=0)
+    got, _ = ops.ft_matmul_report(a, b, ft=ONLINE_BLOCK, spec=spec, params=P128)
+    want = ref.ft_matmul_ref(a, b, ONLINE_BLOCK, spec=spec)
+    assert bool(want.detected)
+    # Kernel accumulates per k-block, the oracle in one pass — identical
+    # semantics, different f32 summation order, so rounding-level tolerance.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want.out),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ftgemm_dtype_sweep_with_injection(dtype):
+    a, b = _rand((256, 256), dtype, 13), _rand((256, 256), dtype, 14)
+    spec = InjectionSpec(row=200, col=100, magnitude=64.0, k_step=1)
+    got, rep = ops.ft_matmul_report(a, b, ft=ONLINE_BLOCK, spec=spec, params=P128)
+    want = ref.matmul_ref(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 50)
+    assert float(rep[..., 0].sum()) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis): ABFT invariants under arbitrary SEUs
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    row=st.integers(0, 127),
+    col=st.integers(0, 127),
+    k_step=st.integers(0, 1),
+    mag=st.floats(min_value=1.0, max_value=1e6).map(lambda x: float(x)),
+    sign=st.sampled_from([-1.0, 1.0]),
+)
+def test_ftgemm_property_any_seu_is_corrected(row, col, k_step, mag, sign):
+    """∀ (location, step, magnitude > τ): online ABFT restores the fault-free
+    result up to f32 rounding of the correction (relative eps of the injected
+    magnitude) — the paper's core correctness claim.
+
+    Very large magnitudes leave an eps-relative residue after the first
+    correction; per-step verification then *iteratively refines* it in the
+    next interval, so the detection count may legitimately exceed 1."""
+    a, b = _rand((128, 256), jnp.float32, 15), _rand((256, 128), jnp.float32, 16)
+    spec = InjectionSpec(row=row, col=col, magnitude=sign * mag, k_step=k_step)
+    got, rep = ops.ft_matmul_report(a, b, ft=ONLINE_BLOCK, spec=spec, params=P128)
+    atol = max(1e-4, 4e-7 * mag)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-5, atol=atol)
+    assert float(rep[..., 0].sum()) >= 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ftgemm_property_no_false_positives(seed):
+    """∀ clean inputs: no detection fires (threshold calibration)."""
+    a = _rand((128, 384), jnp.float32, seed)
+    b = _rand((384, 128), jnp.float32, seed + 1)
+    _, rep = ops.ft_matmul_report(a, b, ft=ONLINE_BLOCK, params=P128)
+    assert float(rep[..., 0].sum()) == 0.0
+
+
+def test_autotune_classes_and_vmem_budget():
+    assert autotune.classify(64, 64, 64) == "small"
+    assert autotune.classify(512, 512, 64) == "medium"
+    assert autotune.classify(4096, 4096, 64) == "huge"
+    assert autotune.classify(4096, 128, 64) == "tall_skinny"
+    assert autotune.classify(128, 4096, 64) == "wide_flat"
+    for cls, (bm, bn, bk) in autotune.TABLE.items():
+        p = autotune.KernelParams(bm, bn, bk, cls)
+        assert p.vmem_bytes(4) <= autotune.VMEM_BUDGET, cls
+        assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0

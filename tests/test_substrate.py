@@ -1,0 +1,178 @@
+"""Substrate tests: optimizer (incl. q8 states), schedule, data pipeline,
+checkpointing (atomic/async/resume), gradient compression."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw, schedule
+from repro.data.pipeline import TokenPipeline
+from repro.checkpoint.ckpt import Checkpointer
+from repro.distributed import compress
+
+
+def _toy_params(key):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (16, 8)),
+            "b": jnp.zeros((8,)),
+            "emb": jax.random.normal(k2, (32, 16)) * 0.1}
+
+
+def _toy_loss(params, x, y):
+    h = jnp.take(params["emb"], x, axis=0)
+    logits = h @ params["w"] + params["b"]
+    return jnp.mean((logits - y) ** 2)
+
+
+def _run_steps(q8: bool, n: int = 30, compress_grads: bool = False):
+    cfg = adamw.AdamWConfig(lr=1e-2, q8=q8)
+    params = _toy_params(jax.random.PRNGKey(0))
+    state = adamw.init(params, cfg)
+    err = compress.init_error(params) if compress_grads else None
+    losses = []
+    for i in range(n):
+        key = jax.random.PRNGKey(100 + i)
+        x = jax.random.randint(key, (64,), 0, 32)
+        y = jnp.sin(jnp.arange(8) + x[:, None] * 0.1)
+        loss, g = jax.value_and_grad(_toy_loss)(params, x, y)
+        if compress_grads:
+            g, err = compress.compress_decompress(g, err)
+        params, state, _ = adamw.apply(params, g, state, cfg)
+        losses.append(float(loss))
+    return losses
+
+
+def test_adamw_converges():
+    losses = _run_steps(q8=False)
+    assert losses[-1] < losses[0] * 0.5
+
+
+def test_adamw_q8_convergence_parity():
+    """int8 moment states track f32 AdamW closely (memory-fit mode for the
+    480B configs)."""
+    l32 = _run_steps(q8=False)
+    l8 = _run_steps(q8=True)
+    assert l8[-1] < l32[0] * 0.5
+    assert abs(l8[-1] - l32[-1]) < 0.2 * abs(l32[0])
+
+
+def test_compressed_grads_convergence_parity():
+    """int8 error-feedback compression must not break convergence."""
+    base = _run_steps(q8=False)
+    comp = _run_steps(q8=False, compress_grads=True)
+    assert comp[-1] < base[0] * 0.5
+
+
+def test_schedule_shape():
+    assert float(schedule.warmup_cosine(0, warmup=10, total=100)) == 0.0
+    assert abs(float(schedule.warmup_cosine(10, warmup=10, total=100)) - 1.0) < 1e-6
+    end = float(schedule.warmup_cosine(100, warmup=10, total=100))
+    assert 0.05 < end < 0.15
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_resume():
+    p = TokenPipeline(vocab_size=1000, global_batch=8, seq_len=16, seed=7)
+    b5 = p.batch_at(5)
+    b5_again = p.batch_at(5)
+    np.testing.assert_array_equal(b5["tokens"], b5_again["tokens"])
+    # iterator from step 5 yields the same batch
+    it = p.iter_from(5, prefetch=0)
+    np.testing.assert_array_equal(next(it)["tokens"], b5["tokens"])
+
+
+def test_pipeline_host_sharding_partitions_batch():
+    full = TokenPipeline(1000, 8, 16, seed=7)
+    h0 = TokenPipeline(1000, 8, 16, seed=7, host_id=0, n_hosts=2)
+    h1 = TokenPipeline(1000, 8, 16, seed=7, host_id=1, n_hosts=2)
+    assert h0.local_batch == 4 and h1.local_batch == 4
+    t0, t1 = h0.batch_at(3)["tokens"], h1.batch_at(3)["tokens"]
+    assert not np.array_equal(t0, t1)       # different host slices
+    assert full.batch_at(3)["tokens"].shape == (8, 16)
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    p = TokenPipeline(1000, 2, 16, seed=1)
+    b = p.batch_at(0)
+    assert b["tokens"].shape == (2, 16) and b["labels"].shape == (2, 16)
+
+
+def test_pipeline_prefetch_iterator():
+    p = TokenPipeline(1000, 2, 8, seed=3)
+    it = p.iter_from(0, prefetch=2)
+    a = next(it)
+    np.testing.assert_array_equal(a["tokens"], p.batch_at(0)["tokens"])
+    b = next(it)
+    np.testing.assert_array_equal(b["tokens"], p.batch_at(1)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"params": _toy_params(jax.random.PRNGKey(1)),
+            "opt": {"count": jnp.ones((), jnp.int32)}}
+    ck.save(10, tree, meta={"note": "hello"})
+    restored, step, meta = ck.restore(tree)
+    assert step == 10 and meta["note"] == "hello"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_bf16_preserved(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.asarray([[1.5, -2.25]], jnp.bfloat16)}
+    ck.save(1, tree)
+    restored, _, _ = ck.restore(tree)
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(restored["w"], np.float32),
+                                  np.asarray(tree["w"], np.float32))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_async_then_restore(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"x": jnp.arange(4.0)}
+    ck.save_async(7, tree)
+    ck.wait()
+    restored, step, _ = ck.restore(tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                  np.arange(4.0))
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"x": jnp.zeros((1,))})
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+# ---------------------------------------------------------------------------
+# compression numerics
+# ---------------------------------------------------------------------------
+
+def test_compress_error_feedback_bounds_error():
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64))}
+    err = compress.init_error(g)
+    deq, err2 = compress.compress_decompress(g, err)
+    # single-step quantization error ≤ scale/2 elementwise
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(deq["w"] - g["w"]))) <= scale * 0.51
+    # error feedback carries the residual exactly
+    np.testing.assert_allclose(np.asarray(err2["w"]),
+                               np.asarray(g["w"] - deq["w"]), rtol=1e-6)
