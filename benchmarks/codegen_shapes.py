@@ -8,13 +8,25 @@ a 160×160 problem wastes (512/160)² ≈ 10× FLOPs in padding; the generator
 picks class-fit tiles. Derived column = padded/useful FLOPs per variant and
 the resulting predicted speedup of autotuned over fixed (plus interpret-mode
 correctness of the generated kernels).
+
+Tuning
+------
+Runtime dispatch goes through `autotune.best_params`, which memoizes the
+candidate search (`kernels.search`) in a persistent JSON cache —
+``$REPRO_TUNE_CACHE`` or ``~/.cache/repro_tune.json``. To regenerate the
+cache for a device, delete that file (or point ``REPRO_TUNE_CACHE`` at a
+fresh path) and run this benchmark: every shape class below triggers a
+search (measured on TPU hardware, roofline-modeled elsewhere) and persists
+its winner; the run then re-reads the file to verify the round trip. Each
+row reports the static-table params next to the autotuned ones
+(``table=… tuned=…``) so table/search divergence is visible per class.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.kernels import autotune, ops
+from repro.kernels import autotune, ops, tune_cache
 from repro.core.policy import ONLINE_BLOCK
 from .common import emit
 
@@ -33,21 +45,36 @@ def run() -> None:
         ("tall_4096x128", 4096, 128, 1024),
         ("wide_128x4096", 128, 4096, 1024),
         ("huge_2048", 2048, 2048, 512),
+        ("ragged_100x77x300", 100, 77, 300),
     ]
     rng = np.random.default_rng(0)
+    cache = tune_cache.default_cache()
     for name, m, n, k in shapes:
-        auto = autotune.build_params(m, n, k)
+        table = autotune.build_params(m, n, k)
+        # ft_level="block" throughout: the kernel run below is ONLINE_BLOCK,
+        # so the reported params/path must come from the same tuning key.
+        tuned = autotune.best_params(m, n, k, cache=cache, ft_level="block")
         r_fixed = padded_flops_ratio(m, n, k, fixed)
-        r_auto = padded_flops_ratio(m, n, k, auto)
-        speedup = 100.0 * (r_fixed / r_auto - 1.0)
-        # correctness of the generated kernel (FT on) on this shape
+        r_table = padded_flops_ratio(m, n, k, table)
+        info = ops.dispatch_info(m, n, k, tuned, ft_level="block")
+        r_disp = (info["executed_flops"] / 2.0) / (m * n * k)
+        speedup = 100.0 * (r_fixed / r_disp - 1.0)
+        # correctness of the dispatched kernel (FT on) on this shape
         a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
         b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
-        out = ops.ft_matmul(a, b, ft=ONLINE_BLOCK, params=auto,
-                            interpret=True)
+        out = ops.ft_matmul(a, b, ft=ONLINE_BLOCK, interpret=True)
         np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
                                    rtol=1e-4, atol=1e-3)
         emit(f"codegen/{name}", float("nan"),
-             f"class={auto.shape_class} padded_x_fixed={r_fixed:.2f} "
-             f"padded_x_auto={r_auto:.2f} predicted_speedup={speedup:.0f}% "
-             f"correct=1")
+             f"class={tuned.shape_class} path={info['path']} "
+             f"table=({table.bm},{table.bn},{table.bk}) "
+             f"tuned=({tuned.bm},{tuned.bn},{tuned.bk}) "
+             f"padded_x_fixed={r_fixed:.2f} padded_x_table={r_table:.2f} "
+             f"padded_x_dispatch={r_disp:.2f} "
+             f"predicted_speedup={speedup:.0f}% correct=1")
+    # Persistent-cache round trip: what this run tuned must reload
+    # identically from disk in a fresh cache instance.
+    reloaded = tune_cache.TuneCache(cache.path)
+    assert reloaded.as_dict() == cache.as_dict(), "tuning cache round trip"
+    emit("codegen/tune_cache", float("nan"),
+         f"path={cache.path} entries={len(reloaded)} round_trip=1")

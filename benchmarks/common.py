@@ -7,6 +7,11 @@ mode only for completeness (correctness-path, not perf) and their §Perf
 claims come from the roofline model instead. Every row's `derived` column
 carries the structural metric (overhead %, flops ratio …) that transfers
 to TPU.
+
+`time_fn` is also the measurement primitive of the kernel autotuner: on
+TPU hardware `repro.kernels.search.measure_candidates` times each
+enumerated tile config through it (falling back to an internal copy when
+the benchmarks package is not importable, e.g. library-only installs).
 """
 from __future__ import annotations
 
@@ -37,10 +42,12 @@ def emit(name: str, us: float, derived: str = "") -> None:
 
 
 def flops_of(fn, *args) -> float:
-    return float(jax.jit(fn).lower(*args).compile()
-                 .cost_analysis().get("flops", 0.0))
+    from repro.tools import roofline
+    compiled = jax.jit(fn).lower(*args).compile()
+    return float(roofline.cost_dict(compiled).get("flops", 0.0))
 
 
 def bytes_of(fn, *args) -> float:
-    return float(jax.jit(fn).lower(*args).compile()
-                 .cost_analysis().get("bytes accessed", 0.0))
+    from repro.tools import roofline
+    compiled = jax.jit(fn).lower(*args).compile()
+    return float(roofline.cost_dict(compiled).get("bytes accessed", 0.0))

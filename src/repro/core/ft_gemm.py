@@ -20,7 +20,10 @@ Three execution paths, selected by `FTConfig`:
   * Pallas path (`backend="pallas"`) — the fused in-kernel ABFT of
     `repro.kernels.ftgemm`, used on real TPUs inside `shard_map` (per-shard
     local GEMMs). Dry-run/roofline use the jnp path, which lowers the same
-    collective structure.
+    collective structure. Tile parameters come from the autotuner
+    (`kernels.autotune.best_params` via `kernels.ops` — candidate search +
+    persistent tuning cache, FT-level-aware), and ragged per-shard shapes
+    take the masked-tile kernel instead of zero-padding to class tiles.
 
 Differentiation: `custom_vjp` — the two backward GEMMs are protected with the
 same policy (a corrupted gradient is as dangerous as a corrupted activation).

@@ -15,13 +15,18 @@ import jax.numpy as jnp
 
 
 class FTReport(NamedTuple):
-    detected: jax.Array    # int32 — number of call sites that flagged an error
-    corrected: jax.Array   # int32 — number of corrections applied
+    # Counters are carried as f32, not int32: reports thread through
+    # scan carries and jax.checkpoint regions inside differentiated step
+    # functions, and integer leaves there get `float0` tangents that remat's
+    # jvp instantiates and then cannot add. Float counters have ordinary
+    # zero tangents; consumers `int(...)`-cast at the edge.
+    detected: jax.Array    # f32 count — call sites that flagged an error
+    corrected: jax.Array   # f32 count — corrections applied
     max_residual: jax.Array  # f32 — worst |δ| observed (0 when clean)
 
     @staticmethod
     def empty() -> "FTReport":
-        z = jnp.zeros((), jnp.int32)
+        z = jnp.zeros((), jnp.float32)
         return FTReport(z, z, jnp.zeros((), jnp.float32))
 
     def merge(self, other: "FTReport") -> "FTReport":
@@ -45,10 +50,10 @@ class FTScope:
     def record(self, detected: jax.Array, magnitude: jax.Array,
                corrected: bool) -> None:
         det_any = jnp.any(detected)
-        d = det_any.astype(jnp.int32)
+        d = det_any.astype(jnp.float32)
         self._items.append(FTReport(
             detected=d,
-            corrected=d if corrected else jnp.zeros((), jnp.int32),
+            corrected=d if corrected else jnp.zeros((), jnp.float32),
             max_residual=jnp.max(jnp.abs(magnitude)).astype(jnp.float32),
         ))
 
@@ -56,10 +61,10 @@ class FTScope:
                        corrected: bool) -> None:
         """Record a pre-reduced (count, max|δ|) summary (the form returned
         across the custom_vjp boundary by ft_dot)."""
-        d = det_count.astype(jnp.int32)
+        d = det_count.astype(jnp.float32)
         self._items.append(FTReport(
             detected=d,
-            corrected=d if corrected else jnp.zeros((), jnp.int32),
+            corrected=d if corrected else jnp.zeros((), jnp.float32),
             max_residual=max_residual.astype(jnp.float32),
         ))
 

@@ -11,12 +11,20 @@ HBM→VMEM pipeline depth. "Code generation" is JAX tracing of a parameterized
 kernel — `build_params(M, N, K)` is the generator's parameter-selection
 stage, and `kernels.gemm/ftgemm` are the template.
 
-VMEM budget model (v5e: 16 MiB/core usable):
+VMEM budget model (v5e: 16 MiB/core usable — see KernelParams.vmem_bytes):
     2 × (bm·bk + bk·bn) · bytes(in)   — double-buffered operand tiles
   +     bm·bn · 4                      — f32 accumulator
-  +     (bm + bn) · 4 · 2              — running checksums (FT mode)
+  + n_bands·bn·4 + bm·4               — running checksums (FT modes;
+                                        n_bands = bm/128 for "tile", else 1)
 The table below keeps every class ≤ 8 MiB so Mosaic has slack for
 spills/semaphores, mirroring the paper's "semi-empirical" selection.
+
+Two selection stages live here:
+  * `build_params`  — the static Table-1 lookup (search-free baseline).
+  * `best_params`   — the autotuned path: persistent-cache lookup backed by
+    the candidate search in `kernels.search` (see that module and
+    `kernels.tune_cache`). This is what `ops.matmul` / `ops.ft_matmul*`
+    and hence `core.ft_gemm`'s Pallas backend route through.
 """
 from __future__ import annotations
 
@@ -34,11 +42,21 @@ class KernelParams:
     bk: int
     shape_class: str = "custom"
 
-    def vmem_bytes(self, in_bytes: int = 4) -> int:
+    def vmem_bytes(self, in_bytes: int = 4, ft_level: str = "block") -> int:
+        """Working-set model — the single source of truth used by the
+        static table, the candidate search, and budget clamping. FT scratch
+        depends on the level: one running (col, row) checksum pair for
+        "block"/"inner", one column-checksum row per 128-row MXU band for
+        "tile". Defaults to "block" (the flagship config) so budget checks
+        without an explicit level stay conservative for non-tile modes."""
         operands = 2 * (self.bm * self.bk + self.bk * self.bn) * in_bytes
         acc = self.bm * self.bn * 4
-        checksums = (self.bm + self.bn) * 4 * 2
-        return operands + acc + checksums
+        if ft_level == "off":
+            return operands + acc
+        n_bands = self.bm // MXU if ft_level == "tile" else 1
+        colck = max(n_bands, 1) * self.bn * 4
+        rowck = self.bm * 4
+        return operands + acc + colck + rowck
 
 
 #: Table-1 analogue. Keys are shape classes; values are (bm, bn, bk).
@@ -69,25 +87,82 @@ def classify(m: int, n: int, k: int) -> str:
     return "huge"
 
 
-def build_params(m: int, n: int, k: int, in_bytes: int = 4) -> KernelParams:
-    """The generator's parameter-selection stage: shape → kernel params,
-    clamped to the problem size and the VMEM budget."""
-    cls = classify(m, n, k)
-    bm, bn, bk = TABLE[cls]
-    # Never exceed the (padded) problem.
-    bm = min(bm, _round_up(m, MXU))
-    bn = min(bn, _round_up(n, MXU))
-    bk = min(bk, _round_up(k, MXU))
-    p = KernelParams(bm=bm, bn=bn, bk=bk, shape_class=cls)
+def clamp_params(p: KernelParams, m: int, n: int, k: int,
+                 in_bytes: int = 4, ft_level: str = "block") -> KernelParams:
+    """Clamp tile params to the (MXU-padded) problem and the VMEM budget —
+    shared by the static table and the search/cache paths, so a cached
+    class winner is always legal for the concrete shape at hand. Uses the
+    same working-set model (`KernelParams.vmem_bytes`) the search enumerates
+    under."""
+    p = dataclasses.replace(p,
+                            bm=min(p.bm, _round_up(m, MXU)),
+                            bn=min(p.bn, _round_up(n, MXU)),
+                            bk=min(p.bk, _round_up(k, MXU)))
     # Shrink bk first (pipeline depth) if over budget — cheapest dimension.
-    while p.vmem_bytes(in_bytes) > VMEM_BUDGET and p.bk > MXU:
+    while p.vmem_bytes(in_bytes, ft_level) > VMEM_BUDGET and p.bk > MXU:
         p = dataclasses.replace(p, bk=p.bk // 2)
-    while p.vmem_bytes(in_bytes) > VMEM_BUDGET and max(p.bm, p.bn) > MXU:
+    while (p.vmem_bytes(in_bytes, ft_level) > VMEM_BUDGET
+           and max(p.bm, p.bn) > MXU):
         if p.bm >= p.bn:
             p = dataclasses.replace(p, bm=p.bm // 2)
         else:
             p = dataclasses.replace(p, bn=p.bn // 2)
     return p
+
+
+def build_params(m: int, n: int, k: int, in_bytes: int = 4) -> KernelParams:
+    """The static-table selection stage: shape → TABLE params, clamped to
+    the problem size and the VMEM budget. Kept as the search-free baseline
+    (and the comparison point the codegen benchmark reports against);
+    runtime dispatch goes through `best_params` below."""
+    cls = classify(m, n, k)
+    bm, bn, bk = TABLE[cls]
+    return clamp_params(KernelParams(bm=bm, bn=bn, bk=bk, shape_class=cls),
+                        m, n, k, in_bytes)
+
+
+def device_kind() -> str:
+    """Normalized accelerator kind for tuning-cache keys ("cpu",
+    "tpu_v5_lite", …)."""
+    try:
+        import jax
+        return jax.devices()[0].device_kind.strip().lower().replace(" ", "_")
+    except Exception:
+        return "unknown"
+
+
+def best_params(m: int, n: int, k: int, in_bytes: int = 4, *,
+                ft_level: str = "off",
+                measure=None, cache=None,
+                use_cache: bool = True) -> KernelParams:
+    """Autotuned parameter selection: consult the persistent tuning cache
+    (keyed by device kind + shape class + element width + FT level); on a
+    miss run the candidate search (`kernels.search.select_best` — measured
+    on TPU hardware, roofline-modeled elsewhere), persist the winner, and
+    return it clamped to this concrete problem.
+
+    Deterministic given a warm cache: the same key always yields the same
+    stored tile, and clamping is pure. The key includes the per-dim search
+    cap, so tuning order across shapes of one class cannot pin a winner
+    searched under a smaller candidate space onto a larger problem.
+    `use_cache=False` forces a fresh search (cache regeneration, tests)."""
+    from . import search, tune_cache
+
+    if use_cache:
+        cache = cache or tune_cache.default_cache()
+        caps = (min(search.MAX_TILE, _round_up(m, MXU)),
+                min(search.MAX_TILE, _round_up(n, MXU)),
+                min(search.MAX_TILE, _round_up(k, MXU)))
+        key = tune_cache.cache_key(device_kind(), classify(m, n, k),
+                                   in_bytes, ft_level, caps)
+        hit = cache.get(key)
+        if hit is not None:
+            return clamp_params(hit, m, n, k, in_bytes, ft_level)
+    best = search.select_best(m, n, k, in_bytes=in_bytes, ft_level=ft_level,
+                              measure=measure)
+    if use_cache:
+        cache.put(key, best)
+    return clamp_params(best, m, n, k, in_bytes, ft_level)
 
 
 def _round_up(x: int, mult: int) -> int:

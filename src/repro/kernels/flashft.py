@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams as _CompilerParams
+
 from repro.core.policy import FTConfig, InjectionSpec
 
 F32EPS = float(jnp.finfo(jnp.float32).eps)
@@ -204,7 +206,7 @@ def flash_ft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
             jax.ShapeDtypeStruct((bh, sq // bq, REPORT_WIDTH), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
                                  pltpu.ARBITRARY),
         ),

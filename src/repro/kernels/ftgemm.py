@@ -39,6 +39,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams as _CompilerParams
+
 from repro.core.policy import FTConfig, InjectionSpec
 from .autotune import KernelParams, MXU
 
@@ -50,14 +52,14 @@ def _iota2(shape, dim):
     return jax.lax.broadcasted_iota(jnp.int32, shape, dim)
 
 
-def _ftgemm_kernel(inj_idx_ref, inj_mag_ref,          # scalar prefetch
+def _ftgemm_kernel(inj_idx_ref, inj_mag_ref, dims_ref,  # scalar prefetch
                    a_ref, b_ref,                      # VMEM inputs
                    out_ref, rep_ref,                  # VMEM outputs
                    acc_ref, colck_ref, rowck_ref,     # VMEM scratch
                    amax_ref, bmax_ref,                # SMEM scratch
                    *, k_steps: int, bm: int, bn: int, bk: int,
                    mode: str, verify_step: bool, corrects: bool,
-                   rel_tau: float, n_bands: int):
+                   rel_tau: float, n_bands: int, masked: bool):
     i = pl.program_id(0)
     j = pl.program_id(1)
     s = pl.program_id(2)
@@ -74,6 +76,20 @@ def _ftgemm_kernel(inj_idx_ref, inj_mag_ref,          # scalar prefetch
 
     a = a_ref[...]
     b = b_ref[...]
+    if masked:
+        # Ragged dispatch: zero everything past the true (m, n, k) carried
+        # in via scalar prefetch. The checksum math below then sees exactly
+        # zero-padding semantics (checksums of zero rows/cols are zero), so
+        # ABFT detection/correction survives the ragged edges, and garbage
+        # in the padded region (even NaN/Inf) cannot leak into either the
+        # accumulator or the running checksums.
+        tm, tn, tk = dims_ref[0], dims_ref[1], dims_ref[2]
+        a_ok = ((i * bm + _iota2((bm, bk), 0) < tm)
+                & (s * bk + _iota2((bm, bk), 1) < tk))
+        b_ok = ((s * bk + _iota2((bk, bn), 0) < tk)
+                & (j * bn + _iota2((bk, bn), 1) < tn))
+        a = jnp.where(a_ok, a, jnp.zeros_like(a))
+        b = jnp.where(b_ok, b, jnp.zeros_like(b))
     af = a.astype(jnp.float32)
     bf = b.astype(jnp.float32)
 
@@ -82,6 +98,9 @@ def _ftgemm_kernel(inj_idx_ref, inj_mag_ref,          # scalar prefetch
     amax_ref[0, 0] = jnp.maximum(amax_ref[0, 0], jnp.max(jnp.abs(af)))
     bmax_ref[0, 0] = jnp.maximum(bmax_ref[0, 0], jnp.max(jnp.abs(bf)))
     k_elapsed = (s + 1).astype(jnp.float32) * bk
+    if masked:
+        # Rounding-error accumulation stops at the true K.
+        k_elapsed = jnp.minimum(k_elapsed, dims_ref[2].astype(jnp.float32))
     tau = jnp.maximum(rel_tau * F32EPS * k_elapsed
                       * amax_ref[0, 0] * bmax_ref[0, 0], 1e-30)
 
@@ -200,26 +219,47 @@ def _record(rep_ref, det, mag, row_g, col_g, d_col, d_row, tau, k_elapsed,
                                              "out_dtype"))
 def ft_gemm(a: jax.Array, b: jax.Array,
             inj_idx: jax.Array, inj_mag: jax.Array, *,
-            params: KernelParams, ft: FTConfig,
-            interpret: bool = False, out_dtype=None):
+            params: Optional[KernelParams] = None, ft: FTConfig,
+            interpret: bool = False, out_dtype=None,
+            dims: Optional[jax.Array] = None):
     """Fused FT-GEMM on tile-divisible shapes. inj_idx: int32[4]
-    [enable,row,col,k_step]; inj_mag: f32[1]. Returns (C, report)."""
+    [enable,row,col,k_step]; inj_mag: f32[1]. Returns (C, report).
+
+    params=None routes through the autotuner (`autotune.best_params`, which
+    consults the persistent tuning cache) — the given shapes must then
+    divide the selected tiles, so `ops.ft_matmul*` (which pads/masks first)
+    is the entry for arbitrary shapes.
+
+    dims — optional int32[3] true (m, n, k) for the masked ragged path: the
+    operand arrays are padded only to the fitted tile grid and the kernel
+    masks the partial edge tiles (checksum math included) in-kernel."""
     m, k = a.shape
     _, n = b.shape
+    if params is None:
+        from . import autotune
+        params = autotune.best_params(m, n, k, a.dtype.itemsize,
+                                      ft_level=ft.level)
     bm, bn, bk = params.bm, params.bn, params.bk
+    masked = dims is not None
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, params)
-    assert bm % MXU == 0, params
+    # Unmasked tiles stay MXU-aligned; masked tiles only need hardware
+    # (sublane) alignment on bm — except "tile" mode, whose per-band
+    # checksums slice the accumulator in MXU-row bands.
+    assert bm % (MXU if (ft.level == "tile" or not masked) else 8) == 0, params
     out_dtype = out_dtype or a.dtype
     grid = (m // bm, n // bn, k // bk)
     n_bands = bm // MXU if ft.level == "tile" else 1
+    if dims is None:
+        dims = jnp.array([m, n, k], jnp.int32)
 
     kernel = functools.partial(
         _ftgemm_kernel, k_steps=grid[2], bm=bm, bn=bn, bk=bk,
         mode=ft.level, verify_step=(ft.verify == "step"),
-        corrects=ft.corrects, rel_tau=ft.rel_tau, n_bands=n_bands)
+        corrects=ft.corrects, rel_tau=ft.rel_tau, n_bands=n_bands,
+        masked=masked)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, s, *_: (i, s)),
@@ -245,12 +285,12 @@ def ft_gemm(a: jax.Array, b: jax.Array,
             jax.ShapeDtypeStruct((grid[0], grid[1], REPORT_WIDTH),
                                  jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
                                  pltpu.ARBITRARY),
         ),
         interpret=interpret,
-    )(inj_idx, inj_mag, a, b)
+    )(inj_idx, inj_mag, dims, a, b)
 
 
 def encode_injection(spec: Optional[InjectionSpec]):

@@ -1,20 +1,23 @@
 """jit'd public wrappers around the Pallas kernels.
 
-Handles: shape-class parameter selection (the codegen front-end), zero
-padding to tile multiples (ABFT-neutral: checksums of zero rows/cols are
-zero), backend fallback (interpret=True automatically off-TPU so the same
-call sites run on CPU in tests), and report plumbing.
+Handles: autotuned parameter selection (`autotune.best_params`, backed by
+the candidate search + persistent tuning cache — the codegen front-end),
+ragged-shape dispatch (tile-divisible shapes run the plain kernels; ragged
+shapes run the masked kernels padded only to a fitted tile grid instead of
+full class tiles — see `dispatch_info`), backend fallback (interpret=True
+automatically off-TPU so the same call sites run on CPU in tests), and
+report plumbing.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.policy import FTConfig, InjectionSpec, ONLINE_BLOCK
-from . import autotune, ftgemm, gemm
+from . import autotune, ftgemm, gemm, search
 
 
 def _should_interpret(interpret: Optional[bool]) -> bool:
@@ -30,19 +33,72 @@ def _pad2(x: jax.Array, rows: int, cols: int) -> jax.Array:
     return jnp.pad(x, ((0, pr), (0, pc)))
 
 
+def dispatch_info(m: int, n: int, k: int,
+                  params: Optional[autotune.KernelParams] = None, *,
+                  in_bytes: int = 4, ft_level: str = "off") -> Dict:
+    """Pure dispatch decision for a (M, N, K) GEMM.
+
+    path="padded": the shape divides the class tiles — run the plain kernel
+    (no padding at all in that case). path="masked": ragged shape — run the
+    masked kernel on a *fitted* tile grid (`search.fit_tile` per dim:
+    sublane-aligned bm, MXU-aligned bn/bk) carrying true dims via scalar
+    prefetch.
+
+    `padded_flop_ratio` is executed FLOPs over the hardware floor (the
+    sublane/lane-aligned problem no TPU kernel can go below) — 1.0 means
+    zero avoidable padding. The old full-padding path is reported alongside
+    as `padded_path_ratio` for comparison (the codegen benchmark's metric).
+    """
+    p = params or autotune.best_params(m, n, k, in_bytes, ft_level=ft_level)
+    sub = search.sublane(in_bytes)
+    align_m = autotune.MXU if ft_level == "tile" else sub
+    q = autotune.KernelParams(
+        bm=search.fit_tile(m, p.bm, align_m),
+        bn=search.fit_tile(n, p.bn, autotune.MXU),
+        bk=search.fit_tile(k, p.bk, autotune.MXU),
+        shape_class=p.shape_class)
+    mp, np_, kp = autotune.padded_shape(m, n, k, p)
+    me, ne, ke = search.executed_dims(m, n, k, q)
+    hw = (autotune._round_up(m, align_m) * autotune._round_up(n, autotune.MXU)
+          * autotune._round_up(k, autotune.MXU))
+    divisible = (m % p.bm == 0 and n % p.bn == 0 and k % p.bk == 0)
+    path = "padded" if divisible else "masked"
+    executed = mp * np_ * kp if divisible else me * ne * ke
+    return {
+        "path": path,
+        "params": p,
+        "masked_params": q,
+        "executed_shape": (mp, np_, kp) if divisible else (me, ne, ke),
+        "executed_flops": 2.0 * executed,
+        "hw_aligned_flops": 2.0 * hw,
+        "padded_flop_ratio": executed / hw,
+        "padded_path_ratio": (mp * np_ * kp) / hw,
+    }
+
+
 def matmul(a: jax.Array, b: jax.Array, *,
            params: Optional[autotune.KernelParams] = None,
            interpret: Optional[bool] = None,
            out_dtype=None) -> jax.Array:
-    """High-performance non-FT GEMM (paper §3): C = A @ B, any (M, K, N)."""
+    """High-performance non-FT GEMM (paper §3): C = A @ B, any (M, K, N).
+    Tile-divisible shapes run the plain kernel; ragged shapes dispatch to
+    the masked kernel on a fitted grid (no full-padding fallback)."""
     m, k = a.shape
     _, n = b.shape
-    p = params or autotune.build_params(m, n, k, in_bytes=a.dtype.itemsize)
-    mp, np_, kp = autotune.padded_shape(m, n, k, p)
-    out = gemm.gemm(_pad2(a, mp, kp), _pad2(b, kp, np_), params=p,
+    p = params or autotune.best_params(m, n, k, a.dtype.itemsize)
+    info = dispatch_info(m, n, k, p, in_bytes=a.dtype.itemsize)
+    if info["path"] == "masked":
+        q = info["masked_params"]
+        me, ne, ke = info["executed_shape"]
+        out = gemm.gemm_masked(_pad2(a, me, ke), _pad2(b, ke, ne),
+                               jnp.array([m, n, k], jnp.int32), params=q,
+                               interpret=_should_interpret(interpret),
+                               out_dtype=out_dtype)
+        return out[:m, :n]
+    out = gemm.gemm(a, b, params=p,
                     interpret=_should_interpret(interpret),
                     out_dtype=out_dtype)
-    return out[:m, :n]
+    return out
 
 
 def ft_matmul(a: jax.Array, b: jax.Array, *,
@@ -104,14 +160,27 @@ def ft_matmul_report(a: jax.Array, b: jax.Array, *,
                      params: Optional[autotune.KernelParams] = None,
                      interpret: Optional[bool] = None,
                      out_dtype=None) -> Tuple[jax.Array, jax.Array]:
-    """FT-GEMM returning (C, report[gm, gn, 8]) — see ftgemm.REPORT_WIDTH."""
+    """FT-GEMM returning (C, report[gm, gn, 8]) — see ftgemm.REPORT_WIDTH.
+    Ragged shapes dispatch to the masked kernel; the checksum math is
+    masked identically, so ABFT detection/correction works on the ragged
+    edge tiles."""
     m, k = a.shape
     _, n = b.shape
-    p = params or autotune.build_params(m, n, k, in_bytes=a.dtype.itemsize)
-    mp, np_, kp = autotune.padded_shape(m, n, k, p)
+    p = params or autotune.best_params(m, n, k, a.dtype.itemsize,
+                                       ft_level=ft.level)
     inj_idx, inj_mag = ftgemm.encode_injection(spec)
+    info = dispatch_info(m, n, k, p, in_bytes=a.dtype.itemsize,
+                         ft_level=ft.level)
+    if info["path"] == "masked":
+        q = info["masked_params"]
+        me, ne, ke = info["executed_shape"]
+        out, rep = ftgemm.ft_gemm(
+            _pad2(a, me, ke), _pad2(b, ke, ne), inj_idx, inj_mag,
+            params=q, ft=ft, interpret=_should_interpret(interpret),
+            out_dtype=out_dtype, dims=jnp.array([m, n, k], jnp.int32))
+        return out[:m, :n], rep
     out, rep = ftgemm.ft_gemm(
-        _pad2(a, mp, kp), _pad2(b, kp, np_), inj_idx, inj_mag,
+        a, b, inj_idx, inj_mag,
         params=p, ft=ft, interpret=_should_interpret(interpret),
         out_dtype=out_dtype)
-    return out[:m, :n], rep
+    return out, rep

@@ -1,0 +1,235 @@
+"""Search-based kernel-parameter autotuning (paper §3.2 / Fig. 10-11).
+
+The paper's code generator enumerates template parameters per input-shape
+class, benchmarks the instantiated kernels, and keeps the winner — beating
+one fixed kernel by up to 230% on irregular shapes. This module is that
+search for the Pallas GEMM template:
+
+  * `enumerate_candidates` — every MXU-aligned `(bm, bn, bk)` whose working
+    set (operand double-buffers + f32 accumulator + FT checksum scratch)
+    fits the VMEM budget and that does not exceed the padded problem.
+  * `predicted_time_s`    — the analytical fallback score: a per-kernel
+    roofline (`tools.roofline.kernel_time_s`) over executed (padded) FLOPs
+    and modeled HBM traffic with tile-reuse accounting, plus the FT
+    checksum-update FLOPs for the requested level.
+  * `measure_candidates`  — the empirical score: wall-clock timing of each
+    instantiated kernel via `benchmarks.common.time_fn` — only meaningful
+    on real hardware, so `select_best` uses it only when the backend is a
+    TPU (or when forced), and otherwise falls back to the model.
+  * `fit_tile`            — ragged-dispatch helper: the block edge (aligned
+    to hardware granularity) that minimizes executed work on a dimension
+    that does not divide the class tile, used by the masked kernels.
+
+Everything here is deterministic given the same inputs: candidate order is
+sorted, the model is closed-form, and ties break toward larger tiles
+(more VMEM reuse), so a warm cache and a cold cache agree on hardware-free
+hosts.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.tools import roofline
+from .autotune import MXU, VMEM_BUDGET, KernelParams, classify, _round_up
+
+#: Largest tile edge the search considers (matches the static TABLE's max).
+MAX_TILE = 512
+
+#: Sublane granularity of the (8, 128) VREG by element width — the minimum
+#: legal second-to-last block-dim multiple on TPU.
+_SUBLANE = {8: 8, 4: 8, 2: 16, 1: 32}
+
+
+def sublane(in_bytes: int) -> int:
+    return _SUBLANE.get(in_bytes, 8)
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration
+# ---------------------------------------------------------------------------
+
+def vmem_bytes(p: KernelParams, in_bytes: int = 4,
+               ft_level: str = "off") -> int:
+    """FT-level-aware working set — delegates to the single model on
+    `KernelParams.vmem_bytes` so search legality and budget clamping can
+    never disagree."""
+    return p.vmem_bytes(in_bytes, ft_level)
+
+
+def _tile_range(dim: int, max_tile: int = MAX_TILE) -> List[int]:
+    upper = min(max_tile, _round_up(dim, MXU))
+    return list(range(MXU, upper + 1, MXU))
+
+
+def enumerate_candidates(m: int, n: int, k: int, *, in_bytes: int = 4,
+                         ft_level: str = "off",
+                         max_tile: int = MAX_TILE) -> List[KernelParams]:
+    """All legal tile configs for the problem: MXU-aligned in every dim,
+    no larger than the MXU-padded problem, within the VMEM budget."""
+    cls = classify(m, n, k)
+    out = []
+    for bm in _tile_range(m, max_tile):
+        for bn in _tile_range(n, max_tile):
+            for bk in _tile_range(k, max_tile):
+                p = KernelParams(bm=bm, bn=bn, bk=bk, shape_class=cls)
+                if vmem_bytes(p, in_bytes, ft_level) <= VMEM_BUDGET:
+                    out.append(p)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytical scoring (roofline fallback)
+# ---------------------------------------------------------------------------
+
+def executed_dims(m: int, n: int, k: int,
+                  p: KernelParams) -> Tuple[int, int, int]:
+    """Problem size the kernel actually executes under tiling (grid of
+    whole tiles covering the problem)."""
+    return (_round_up(m, p.bm), _round_up(n, p.bn), _round_up(k, p.bk))
+
+
+def ft_overhead_flops(p: KernelParams, ft_level: str, k_steps: int,
+                      blocks: int) -> float:
+    """Checksum-maintenance FLOPs across the whole launch. Per k-step per
+    block: column checksum = reduce A tile (bm·bk) + GEMV (bk·bn MACs → 2×),
+    row checksum = reduce B tile (bk·bn) + GEMV (bm·bk MACs → 2×); "inner"
+    additionally reduces the materialized Δ both ways every step."""
+    if ft_level == "off":
+        return 0.0
+    per_step = (p.bm * p.bk + 2 * p.bk * p.bn) + (p.bk * p.bn + 2 * p.bm * p.bk)
+    if ft_level == "tile":
+        per_step += p.bm * p.bn            # per-band verify reductions
+    if ft_level == "inner":
+        per_step += 2 * p.bm * p.bn        # Δ reduced along both axes
+    return float(per_step) * k_steps * blocks
+
+
+def predicted_time_s(m: int, n: int, k: int, p: KernelParams, *,
+                     in_bytes: int = 4, ft_level: str = "off") -> float:
+    """Roofline score of one candidate on the (padded) problem.
+
+    HBM traffic model: each A tile is streamed once per output-column of
+    tiles and each B tile once per output-row of tiles (no cross-block L2
+    reuse on TPU — VMEM is the only cache we control), plus one output
+    write. Compute: 2·M·N·K MACs on executed dims + checksum updates."""
+    me, ne, ke = executed_dims(m, n, k, p)
+    gm, gn, gk = me // p.bm, ne // p.bn, ke // p.bk
+    flops = 2.0 * me * ne * ke + ft_overhead_flops(p, ft_level, gk, gm * gn)
+    a_bytes = gn * me * ke * in_bytes
+    b_bytes = gm * ke * ne * in_bytes
+    c_bytes = me * ne * in_bytes
+    return roofline.kernel_time_s(flops, a_bytes + b_bytes + c_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Empirical scoring (hardware measurement)
+# ---------------------------------------------------------------------------
+
+def _time_fn_fallback(fn: Callable, *args, warmup: int = 2,
+                      iters: int = 5) -> float:
+    import time
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _timer() -> Callable:
+    try:                                   # shared benchmark harness when
+        from benchmarks.common import time_fn  # run from the repo root
+        return time_fn
+    except ImportError:
+        return _time_fn_fallback
+
+
+def can_measure() -> bool:
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def measure_candidates(m: int, n: int, k: int,
+                       candidates: Sequence[KernelParams], *,
+                       in_bytes: int = 4, ft_level: str = "off",
+                       interpret: bool = False) -> List[float]:
+    """Wall-clock each candidate (µs) on the padded problem. Compiles one
+    kernel per candidate — intended for offline cache regeneration, not the
+    request path."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.policy import FTConfig
+    from . import ftgemm, gemm
+
+    dtype = {4: jnp.float32, 2: jnp.bfloat16}.get(in_bytes, jnp.float32)
+    time_fn = _timer()
+    rng = np.random.default_rng(0)
+    times = []
+    for p in candidates:
+        me, ne, ke = executed_dims(m, n, k, p)
+        a = jnp.asarray(rng.normal(size=(me, ke)), dtype)
+        b = jnp.asarray(rng.normal(size=(ke, ne)), dtype)
+        if ft_level == "off":
+            times.append(time_fn(
+                lambda a, b, p=p: gemm.gemm(a, b, params=p,
+                                            interpret=interpret), a, b))
+        else:
+            ft = FTConfig(level=ft_level)
+            idx, mag = ftgemm.encode_injection(None)
+            times.append(time_fn(
+                lambda a, b, p=p, ft=ft: ftgemm.ft_gemm(
+                    a, b, idx, mag, params=p, ft=ft, interpret=interpret),
+                a, b))
+    return times
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+def select_best(m: int, n: int, k: int, *, in_bytes: int = 4,
+                ft_level: str = "off", measure: Optional[bool] = None,
+                max_tile: int = MAX_TILE,
+                candidates: Optional[Sequence[KernelParams]] = None
+                ) -> KernelParams:
+    """The search: enumerate → score (hardware when available, roofline
+    model otherwise) → deterministic winner (ties → larger tiles)."""
+    cands = list(candidates if candidates is not None else
+                 enumerate_candidates(m, n, k, in_bytes=in_bytes,
+                                      ft_level=ft_level, max_tile=max_tile))
+    if not cands:
+        raise ValueError(f"no legal tile candidates for {(m, n, k)}")
+    if measure is None:
+        measure = can_measure()
+    if measure:
+        scores = [t * 1e-6 for t in measure_candidates(
+            m, n, k, cands, in_bytes=in_bytes, ft_level=ft_level)]
+    else:
+        scores = [predicted_time_s(m, n, k, p, in_bytes=in_bytes,
+                                   ft_level=ft_level) for p in cands]
+    return min(zip(scores, cands),
+               key=lambda sp: (sp[0], -sp[1].bm * sp[1].bn, -sp[1].bk))[1]
+
+
+# ---------------------------------------------------------------------------
+# Ragged-tile fitting (masked dispatch)
+# ---------------------------------------------------------------------------
+
+def fit_tile(dim: int, max_tile: int, align: int) -> int:
+    """Block edge for a ragged dimension: among multiples of `align` up to
+    `max_tile`, minimize executed work `ceil(dim/c)·c`; break ties toward
+    the larger tile. `fit_tile(100, 128, 8) == 104` — one masked tile
+    instead of a zero-padded 128."""
+    assert max_tile >= align > 0
+    best = None
+    for c in range(align, max_tile + 1, align):
+        waste = math.ceil(dim / c) * c
+        key = (waste, -c)
+        if best is None or key < best[0]:
+            best = (key, c)
+    return best[1]

@@ -282,7 +282,7 @@ def _cell_cost(arch, shape_name, mesh, cfg_override, *, ft_on, run_over,
                                       cfg_override=cfg_override,
                                       rules_over=rules_over)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = roofline.cost_dict(compiled)
     cb, breakdown = roofline.collective_bytes(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)), float(cb), breakdown)
@@ -359,7 +359,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                  "alias_size_in_bytes"):
         if mem is not None and hasattr(mem, attr):
             mem_d[attr] = int(getattr(mem, attr))
-    cost_raw = compiled.cost_analysis() or {}
+    cost_raw = roofline.cost_dict(compiled)
     result = {
         "status": "ok",
         "arch": arch, "shape": shape_name,

@@ -117,6 +117,26 @@ class Roofline:
         }
 
 
+def cost_dict(compiled) -> Dict:
+    """`compiled.cost_analysis()` normalized across jax versions: some
+    return a flat dict, others a one-element list of dicts."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+def kernel_time_s(flops: float, hbm_bytes: float,
+                  peak_flops: float = PEAK_FLOPS,
+                  hbm_bw: float = HBM_BW) -> float:
+    """Single-kernel roofline: perfect-overlap time for a kernel that
+    executes `flops` and moves `hbm_bytes` through HBM. This is the
+    analytical scoring model the autotuner (`kernels.search`) falls back to
+    when candidates cannot be timed on hardware — same constants as the
+    whole-model roofline above, so benchmark and tuner numbers agree."""
+    return max(flops / peak_flops, hbm_bytes / hbm_bw)
+
+
 def analyze(cost: Dict, hlo_text: str, model_flops_per_device: float
             ) -> Roofline:
     flops = float(cost.get("flops", 0.0))

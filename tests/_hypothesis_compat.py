@@ -1,0 +1,77 @@
+"""Optional-import shim around `hypothesis` so the suite is self-contained.
+
+When `hypothesis` is installed, re-exports the real `given` / `settings` /
+`strategies as st` untouched. When it is absent, degrades every `@given`
+property test into a *seeded* `pytest.mark.parametrize` sweep: each strategy
+draws `FALLBACK_EXAMPLES` deterministic samples from one shared NumPy
+generator, so a clean environment still runs a meaningful (if shallower)
+randomized sweep instead of failing collection.
+
+Only the strategy surface actually used by this suite is implemented:
+`st.integers`, `st.floats` (with `min_value`/`max_value`, positional or
+keyword), `st.sampled_from`, and `Strategy.map`.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+    import pytest as _pytest
+
+    FALLBACK_EXAMPLES = 12
+    _SEED = 0xF7B1A5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            # Log-uniform when the range spans decades (mirrors how these
+            # tests use floats: injection magnitudes from 1 to 1e6).
+            lo, hi = float(min_value), float(max_value)
+            if lo > 0 and hi / lo > 1e3:
+                return _Strategy(lambda rng: float(
+                    _np.exp(rng.uniform(_np.log(lo), _np.log(hi)))))
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(
+                lambda rng: options[int(rng.integers(len(options)))])
+
+    st = _Strategies()
+
+    def settings(*_a, **_kw):
+        """No-op in fallback mode (sweep size is FALLBACK_EXAMPLES)."""
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        names = sorted(strategies)
+        def deco(fn):
+            rng = _np.random.default_rng(_SEED)
+            cases = [tuple(strategies[n].draw(rng) for n in names)
+                     for _ in range(FALLBACK_EXAMPLES)]
+            if len(names) == 1:      # pytest wants scalars, not 1-tuples
+                cases = [c[0] for c in cases]
+            return _pytest.mark.parametrize(",".join(names), cases)(fn)
+        return deco

@@ -69,7 +69,7 @@ def test_small_mesh_train_lowering_compiles_with_shardings():
                                       jax.ShapeDtypeStruct((), jnp.int32))
             compiled = lowered.compile()
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = roofline.cost_dict(compiled)
             cb, per = roofline.collective_bytes(compiled.as_text())
         assert cost.get("flops", 0) > 0
         assert cb > 0, "sharded train step must contain collectives"
@@ -104,7 +104,8 @@ def test_small_mesh_decode_lowering_compiles():
                 lambda p, tok, c: mod.decode_step(p, tok, c, cfg, ctx)
             ).lower(p_struct, t, c_struct)
             compiled = lowered.compile()
-        print("OK", compiled.cost_analysis().get("flops"))
+        from repro.tools import roofline
+        print("OK", roofline.cost_dict(compiled).get("flops"))
     """)
     assert "OK" in out
 

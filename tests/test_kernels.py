@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref, autotune
 from repro.core.policy import FTConfig, InjectionSpec, ONLINE_BLOCK
@@ -156,6 +156,147 @@ def test_ftgemm_property_no_false_positives(seed):
     b = _rand((384, 128), jnp.float32, seed + 1)
     _, rep = ops.ft_matmul_report(a, b, ft=ONLINE_BLOCK, params=P128)
     assert float(rep[..., 0].sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Ragged-shape conformance: masked dispatch vs oracle (no full-padding path)
+# ---------------------------------------------------------------------------
+
+RAGGED_SHAPES = [
+    (100, 77, 300),      # the flagship irregular shape
+    (97, 101, 103),      # all prime
+    (1, 129, 257),       # 1-row edge
+    (130, 1, 259),       # 1-col edge
+    (127, 255, 63),      # k < MXU
+    (255, 383, 130),     # just under tile multiples
+    (129, 257, 129),     # just over tile multiples
+    (313, 241, 521),     # larger primes, multi-tile every dim
+    (40, 24, 8),         # tiny, far below one MXU tile
+]
+
+
+@pytest.mark.parametrize("mnk", RAGGED_SHAPES)
+def test_masked_gemm_ragged_conformance(mnk):
+    m, n, k = mnk
+    a, b = _rand((m, k), jnp.float32, m + n), _rand((k, n), jnp.float32, k)
+    got = ops.matmul(a, b, interpret=True)
+    want = ref.matmul_ref(a, b)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=5e-4)
+
+
+@pytest.mark.parametrize("mnk", RAGGED_SHAPES)
+def test_masked_ft_gemm_ragged_conformance(mnk):
+    m, n, k = mnk
+    a, b = _rand((m, k), jnp.float32, m), _rand((k, n), jnp.float32, n)
+    got, rep = ops.ft_matmul_report(a, b, ft=ONLINE_BLOCK, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul_ref(a, b)),
+                               rtol=1e-5, atol=5e-4)
+    assert float(rep[..., 0].sum()) == 0.0, "false positive on ragged clean GEMM"
+
+
+@pytest.mark.parametrize("level", ["block", "tile", "inner"])
+def test_masked_ft_gemm_ragged_corrects_injection(level):
+    """Checksums must survive masking: one SEU on a ragged shape is still
+    detected, located, and corrected — per FT level."""
+    m, n, k = 100, 77, 300
+    a, b = _rand((m, k), jnp.float32, 21), _rand((k, n), jnp.float32, 22)
+    spec = InjectionSpec(row=63, col=50, magnitude=44.0, k_step=0)
+    ft = FTConfig(level=level, verify="step")
+    got, rep = ops.ft_matmul_report(a, b, ft=ft, spec=spec, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-3)
+    assert float(rep[..., 0].sum()) == 1.0
+    blk = np.asarray(rep).reshape(-1, 8)[np.asarray(rep).reshape(-1, 8)[:, 0] > 0][0]
+    assert int(blk[2]) == 63 and int(blk[3]) == 50
+    assert abs(blk[4] - 44.0) < 1e-2
+
+
+def test_masked_kernel_ignores_garbage_padding():
+    """The masked kernels must be driven by the scalar-prefetched true dims,
+    not by zero padding: fill the padded region with NaN and the result must
+    still match the oracle (both non-FT and FT paths)."""
+    from repro.kernels import gemm as gemm_mod, ftgemm, search
+    m, n, k = 100, 77, 300
+    a, b = _rand((m, k), jnp.float32, 31), _rand((k, n), jnp.float32, 32)
+    info = ops.dispatch_info(m, n, k, in_bytes=4)
+    q = info["masked_params"]
+    me, ne, ke = info["executed_shape"]
+
+    def nan_pad(x, rows, cols):
+        return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])),
+                       constant_values=np.nan)
+
+    dims = jnp.array([m, n, k], jnp.int32)
+    got = gemm_mod.gemm_masked(nan_pad(a, me, ke), nan_pad(b, ke, ne), dims,
+                               params=q, interpret=True)[:m, :n]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-5, atol=5e-4)
+
+    idx, mag = ftgemm.encode_injection(None)
+    out, rep = ftgemm.ft_gemm(nan_pad(a, me, ke), nan_pad(b, ke, ne), idx, mag,
+                              params=q, ft=ONLINE_BLOCK, interpret=True,
+                              dims=dims)
+    np.testing.assert_allclose(np.asarray(out[:m, :n]), np.asarray(a @ b),
+                               rtol=1e-5, atol=5e-4)
+    assert float(rep[..., 0].sum()) == 0.0
+
+
+def test_ragged_dispatch_avoids_padding_flops():
+    """Acceptance: (100, 77, 300) takes the masked path at ≤ 1.25× the
+    hardware-aligned FLOP floor, where the seed's full-padding path paid
+    ≥ 1.6× — no full-padding fallback."""
+    m, n, k = 100, 77, 300
+    info = ops.dispatch_info(m, n, k, in_bytes=4)
+    assert info["path"] == "masked"
+    assert info["padded_flop_ratio"] <= 1.25
+    # the seed behaviour: static-table params + zero padding to class tiles
+    seed_p = autotune.build_params(m, n, k)
+    mp, np_, kp = autotune.padded_shape(m, n, k, seed_p)
+    hw = info["hw_aligned_flops"] / 2.0
+    assert (mp * np_ * kp) / hw >= 1.6
+
+
+# ---------------------------------------------------------------------------
+# Injection encoding → kernel → report round-trip (per FT level)
+# ---------------------------------------------------------------------------
+
+def test_encode_injection_none_is_noop():
+    from repro.kernels import ftgemm
+    idx, mag = ftgemm.encode_injection(None)
+    assert idx.shape == (4,) and mag.shape == (1,)
+    assert int(idx[0]) == 0 and float(mag[0]) == 0.0
+    # and the kernel treats it as a clean run
+    a, b = _rand((128, 128), jnp.float32, 41), _rand((128, 128), jnp.float32, 42)
+    out, rep = ftgemm.ft_gemm(a, b, idx, mag, params=P128, ft=ONLINE_BLOCK,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-4)
+    assert float(rep.sum(axis=(0, 1))[0]) == 0.0
+
+
+@pytest.mark.parametrize("level", ["block", "tile", "inner"])
+def test_injection_report_round_trip(level):
+    """encode_injection → ft_gemm → report: [detected, corrected, row, col,
+    magnitude] reproduce the spec exactly for every FT level."""
+    from repro.kernels import ftgemm
+    spec = InjectionSpec(row=140, col=210, magnitude=-66.0, k_step=1)
+    idx, mag = ftgemm.encode_injection(spec)
+    assert [int(v) for v in idx] == [1, 140, 210, 1]
+    assert float(mag[0]) == -66.0
+
+    a, b = _rand((256, 384), jnp.float32, 43), _rand((384, 256), jnp.float32, 44)
+    ft = FTConfig(level=level, verify="step")
+    out, rep = ftgemm.ft_gemm(a, b, idx, mag, params=P128, ft=ft,
+                              interpret=True)
+    blk = np.asarray(rep[140 // 128, 210 // 128])
+    assert float(rep[..., 0].sum()) == 1.0          # detected exactly once
+    assert float(rep[..., 1].sum()) == 1.0          # corrected exactly once
+    assert int(blk[2]) == 140 and int(blk[3]) == 210  # located globally
+    assert abs(blk[4] - (-66.0)) < 1e-2             # signed magnitude
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-3)
 
 
 def test_autotune_classes_and_vmem_budget():
