@@ -11,15 +11,32 @@ correctness of the generated kernels).
 
 Tuning
 ------
-Runtime dispatch goes through `autotune.best_params`, which memoizes the
-candidate search (`kernels.search`) in a persistent JSON cache —
-``$REPRO_TUNE_CACHE`` or ``~/.cache/repro_tune.json``. To regenerate the
-cache for a device, delete that file (or point ``REPRO_TUNE_CACHE`` at a
-fresh path) and run this benchmark: every shape class below triggers a
-search (measured on TPU hardware, roofline-modeled elsewhere) and persists
-its winner; the run then re-reads the file to verify the round trip. Each
-row reports the static-table params next to the autotuned ones
-(``table=… tuned=…``) so table/search divergence is visible per class.
+Runtime dispatch is the spec → template → autotune pipeline (see the
+`repro.kernels` package docstring): a `templates.KernelSpec` names the
+kernel variant (FT level × epilogue chain × dtypes), `templates.emit`
+renders it into one Pallas body, and `autotune.best_params` picks the tile
+parameters — memoizing the candidate search (`kernels.search`) in a
+persistent JSON cache, ``$REPRO_TUNE_CACHE`` or ``~/.cache/repro_tune.json``.
+
+Cache keys are ``device/class/caps/bytes/ft_level[/v_variant]``: element
+width comes from the *actual operand dtype* (bf16 gets its own entries and
+sublane floor), and the variant component (`KernelSpec.variant_key()`, e.g.
+``v_bias+gelu``) separates fused-epilogue chains, whose aux-operand VMEM
+and roofline intensity legitimately move the winner. Plain f32 GEMM keeps
+the bare key, so PR-1 caches stay valid.
+
+To regenerate the cache for a device, delete that file (or point
+``REPRO_TUNE_CACHE`` at a fresh path) and run this benchmark: every shape
+class below triggers a search (measured on TPU hardware, roofline-modeled
+elsewhere) and persists its winner; the run then re-reads the file to
+verify the round trip. Each row reports the static-table params next to
+the autotuned ones (``table=… tuned=…``) so table/search divergence is
+visible per class. Fused-variant rows live in `benchmarks.fused_epilogue`;
+to tune a *new* epilogue (after `templates.epilogues.register` — worked
+example in the `repro.kernels` docstring) just call
+``best_params(m, n, k, dtype.itemsize, ft_level=…, spec=your_spec)`` once:
+the miss searches under the variant's working-set model and persists under
+its own key.
 """
 from __future__ import annotations
 
@@ -50,13 +67,17 @@ def run() -> None:
     rng = np.random.default_rng(0)
     cache = tune_cache.default_cache()
     for name, m, n, k in shapes:
-        table = autotune.build_params(m, n, k)
+        dtype = jnp.float32
+        in_bytes = jnp.dtype(dtype).itemsize      # width from the real dtype
+        table = autotune.build_params(m, n, k, in_bytes)
         # ft_level="block" throughout: the kernel run below is ONLINE_BLOCK,
         # so the reported params/path must come from the same tuning key.
-        tuned = autotune.best_params(m, n, k, cache=cache, ft_level="block")
+        tuned = autotune.best_params(m, n, k, in_bytes, cache=cache,
+                                     ft_level="block")
         r_fixed = padded_flops_ratio(m, n, k, fixed)
         r_table = padded_flops_ratio(m, n, k, table)
-        info = ops.dispatch_info(m, n, k, tuned, ft_level="block")
+        info = ops.dispatch_info(m, n, k, tuned, dtype=dtype,
+                                 ft_level="block")
         r_disp = (info["executed_flops"] / 2.0) / (m * n * k)
         speedup = 100.0 * (r_fixed / r_disp - 1.0)
         # correctness of the dispatched kernel (FT on) on this shape

@@ -1,0 +1,103 @@
+"""Fused-epilogue variants vs the unfused two-pass composition.
+
+The fusion claim (FT-BLAS applied to the whole epilogue): running
+bias/activation/residual inside the GEMM kernel removes a full HBM
+round-trip over C — the unfused composition writes the (M, N) product out
+and reads it back for the elementwise pass. Two signals per chain:
+
+  * roofline — modeled kernel time of the fused variant
+    (`search.predicted_time_s` with the spec's aux-operand bytes) vs the
+    unfused pipeline (base GEMM + an elementwise pass that re-reads and
+    re-writes C); `derived` reports the modeled speedup and the saved HBM
+    bytes. This is the number that transfers to TPU.
+  * interpret-mode wall time — a correctness-path trend only (Pallas
+    interpret on CPU), plus an allclose check of fused vs unfused so a
+    variant regression fails the suite at PR time.
+
+Run directly or via `python -m benchmarks.run --only fused_epilogue`;
+``REPRO_BENCH_SMOKE=1`` (set in CI) shrinks shapes/iterations to smoke
+scale.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import autotune, ops, ref, search
+from repro.kernels.templates import KernelSpec
+from repro.core.policy import FTConfig
+from repro.tools import roofline
+from .common import emit, time_fn
+
+CHAINS = [
+    ("bias",),
+    ("bias", "gelu"),
+    ("bias", "silu"),
+    ("bias", "gelu", "residual"),
+]
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def unfused_time_s(m, n, k, p, in_bytes, ft_level, spec: KernelSpec) -> float:
+    """Modeled unfused pipeline: the base GEMM kernel followed by one
+    elementwise pass that reads C (+ aux operands) and writes C again."""
+    base = search.predicted_time_s(m, n, k, p, in_bytes=in_bytes,
+                                   ft_level=ft_level)
+    me, ne, _ = search.executed_dims(m, n, k, p)
+    c_bytes = me * ne * in_bytes
+    epi_bytes = 2 * c_bytes + spec.extra_hbm_bytes(me, ne, in_bytes)
+    epi = roofline.kernel_time_s(spec.epilogue_flops(me, ne), epi_bytes)
+    return base + epi
+
+
+def run() -> None:
+    smoke = _smoke()
+    shapes = ([("smoke_256", 256, 256, 256)] if smoke else
+              [("medium_512", 512, 512, 512),
+               ("large_1024", 1024, 2048, 1024),
+               ("ragged_300x200x520", 300, 200, 520)])
+    iters = 1 if smoke else 3
+    rng = np.random.default_rng(0)
+    for name, m, n, k in shapes:
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        bias = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        res = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        for chain in CHAINS:
+            for ft_level in ("off", "block"):
+                spec = KernelSpec(ft_level=ft_level, epilogue=chain)
+                ft = FTConfig(level=ft_level) if ft_level != "off" else None
+                kw = dict(
+                    bias=bias if "bias" in chain else None,
+                    residual=res if "residual" in chain else None)
+                p = autotune.best_params(m, n, k, 4, ft_level=ft_level,
+                                        spec=spec, measure=False)
+                t_fused = search.predicted_time_s(
+                    m, n, k, p, in_bytes=4, ft_level=ft_level, spec=spec)
+                t_unfused = unfused_time_s(m, n, k, p, 4, ft_level, spec)
+                me, ne, _ = search.executed_dims(m, n, k, p)
+                saved = 2 * me * ne * 4  # the avoided C round-trip
+
+                # correctness + interpret-mode trend timing
+                out, rep = ops.gemm_call(spec, a, b, ft=ft, interpret=True,
+                                         **kw)
+                want = ref.fused_matmul_ref(a, b, chain=chain, **kw)
+                np.testing.assert_allclose(np.asarray(out),
+                                           np.asarray(want),
+                                           rtol=1e-4, atol=1e-3)
+                if rep is not None:
+                    assert float(np.asarray(rep)[..., 0].sum()) == 0.0
+                us = time_fn(
+                    lambda a, b: ops.gemm_call(spec, a, b, ft=ft,
+                                               interpret=True, **kw)[0],
+                    a, b, warmup=1, iters=iters)
+                tag = "+".join(chain)
+                emit(f"fused_epilogue/{name}/{tag}/ft_{ft_level}", us,
+                     f"roofline_speedup={t_unfused / t_fused:.3f}x "
+                     f"saved_hbm_mb={saved / 2**20:.2f} "
+                     f"tile=({p.bm},{p.bn},{p.bk}) correct=1")

@@ -11,8 +11,8 @@ import sys
 import traceback
 
 SUITES = ("stepwise_gemm", "ft_schemes", "codegen_shapes",
-          "error_injection", "online_vs_offline", "moe_dispatch",
-          "flash_attention")
+          "fused_epilogue", "error_injection", "online_vs_offline",
+          "moe_dispatch", "flash_attention")
 
 
 def main() -> None:

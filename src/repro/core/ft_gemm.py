@@ -192,6 +192,123 @@ def ft_dot(x: jax.Array, w: jax.Array, ft: FTConfig = FT_OFF,
 
 
 # ---------------------------------------------------------------------------
+# Fused-epilogue variant — y = act(x @ w + bias), one pass
+# ---------------------------------------------------------------------------
+#
+# The model blocks' matmul→bias→activation sequences route through here as
+# *fused specs*: on the Pallas backend the epilogue runs inside the GEMM
+# kernel (templates subsystem — bias/activation applied to the VMEM-resident
+# accumulator before the single HBM writeback, linear ops folded into the
+# checksum comparison); on the jnp path XLA fuses the same composition. ABFT
+# semantics are unchanged: verification/correction happen on the GEMM
+# accumulator at the last point where the linear checksum invariant holds.
+
+
+def _epilogue_fn(act: Optional[str]):
+    from repro.kernels.templates import epilogues
+    return epilogues.activation(act) if act is not None else (lambda y: y)
+
+
+def _fused_epilogue_2d(ft: FTConfig, spec, act, x2, w, bias, key):
+    """(out, det, maxres) for y = act(x2 @ w + bias) with policy `ft`."""
+    if ft.enabled and ft.backend == "pallas":
+        from repro.kernels import ops as kops
+        out, rep = kops.fused_matmul(x2, w, bias=bias, act=act, ft=ft,
+                                     inject=spec)
+        det = jnp.sum(rep[..., 0]).astype(jnp.int32)
+        maxres = jnp.max(rep[..., 5])
+        return out, det, maxres
+    if not ft.enabled:
+        # Like _ft_matmul_2d with FT off: no injection either — the two
+        # sibling entry points must agree on FT-off semantics.
+        acc = _matmul_f32acc(x2, w)
+        det, maxres = _ZERO_SUMMARY()
+    else:
+        fn = _fused_ft_matmul_2d if ft.fused else _nonfused_ft_matmul_2d
+        out, v = fn(ft, spec, x2, w, key)
+        acc = out.astype(jnp.float32)
+        det, maxres = _summary(v)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    acc = _epilogue_fn(act)(acc)
+    return acc.astype(x2.dtype), det, maxres
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _ft_fused_cvjp(ft: FTConfig, spec, act, x, w, bias, key):
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y2, det, maxres = _fused_epilogue_2d(ft, spec, act, x2, w, bias, key)
+    return y2.reshape(*lead, w.shape[-1]), det, maxres
+
+
+def _ft_fused_fwd(ft, spec, act, x, w, bias, key):
+    return _ft_fused_cvjp(ft, spec, act, x, w, bias, key), (x, w, bias, key)
+
+
+def _ft_fused_bwd(ft, spec, act, res, cts):
+    g, _, _ = cts                      # ignore summary cotangents
+    x, w, bias, key = res
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    g2 = g.reshape(-1, g.shape[-1])
+    kx = jax.random.fold_in(key, 1) if key is not None else None
+    kw = jax.random.fold_in(key, 2) if key is not None else None
+    kp = jax.random.fold_in(key, 5) if key is not None else None
+    if act is not None:
+        # The fused kernel never writes the pre-activation to HBM (that is
+        # the point), so it cannot be saved as a residual — recompute it
+        # here, ABFT-protected like every other backward GEMM (remat-style;
+        # "dots" remat policies recompute this product anyway).
+        pre, _, _ = _ft_matmul_2d(ft, None, x2, w, kp)
+        pre = pre.astype(jnp.float32)
+        if bias is not None:
+            pre = pre + bias.astype(jnp.float32)
+        _, act_vjp = jax.vjp(_epilogue_fn(act), pre)
+        dpre = act_vjp(g2.astype(jnp.float32))[0].astype(x.dtype)
+    else:
+        dpre = g2.astype(x.dtype)
+    dbias = (None if bias is None
+             else jnp.sum(dpre.astype(jnp.float32), axis=0).astype(bias.dtype)
+             .reshape(bias.shape))
+    # Backward GEMMs are ABFT-protected too (spec applies to fwd only).
+    dx2, _, _ = _ft_matmul_2d(ft, None, dpre, w.T, kx)
+    dw, _, _ = _ft_matmul_2d(ft, None, x2.T, dpre, kw)
+    return (dx2.reshape(*lead, x.shape[-1]), dw.astype(w.dtype), dbias,
+            _float0(key))
+
+
+_ft_fused_cvjp.defvjp(_ft_fused_fwd, _ft_fused_bwd)
+
+
+def ft_dot_fused(x: jax.Array, w: jax.Array,
+                 bias: Optional[jax.Array] = None,
+                 act: Optional[str] = None,
+                 ft: FTConfig = FT_OFF,
+                 key: Optional[jax.Array] = None,
+                 spec: Optional[InjectionSpec] = None) -> jax.Array:
+    """Fault-tolerant fused-epilogue projection:
+    (…, K) @ (K, N) → act((…, N) + bias).
+
+    The matmul→bias→activation sequence as ONE spec: no separate bias /
+    activation passes over the output (the Pallas backend fuses them into
+    the GEMM epilogue before the HBM writeback; XLA fuses the jnp path).
+    `act` is a registered elementwise epilogue name ("relu"/"gelu"/"silu");
+    both directions are custom_vjp-protected like `ft_dot`."""
+    if bias is None and act is None:
+        return ft_dot(x, w, ft=ft, key=key, spec=spec)
+    if not ft.enabled and key is None and spec is None:
+        # Fast path: plain fused composition XLA pattern-matches.
+        y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+        if bias is not None:
+            y = y + bias.astype(jnp.float32)
+        return _epilogue_fn(act)(y).astype(x.dtype)
+    y, det, maxres = _ft_fused_cvjp(ft, spec, act, x, w, bias, key)
+    _record(det, maxres, ft.corrects)
+    return y
+
+
+# ---------------------------------------------------------------------------
 # Batched variant — attention cores (QK^T, PV) and grouped expert GEMMs
 # ---------------------------------------------------------------------------
 

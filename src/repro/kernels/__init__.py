@@ -1,14 +1,66 @@
 """Pallas TPU kernels for the paper's compute hot-spot: GEMM.
 
-  gemm.py     -- baseline high-performance tiled GEMM (paper section 3)
-  ftgemm.py   -- fused online-ABFT GEMM, thread/warp/threadblock analogues (section 4)
-  ops.py      -- jit'd wrappers (padding, autotuned params, CPU interpret)
-  ref.py      -- pure-jnp oracles
-  autotune.py -- template/codegen parameter selection (section 3.2, Table 1 analogue)
+Since PR 2 the kernel layer is a *generator*, not a collection of
+hand-written bodies — the paper's template-based code generation (§3.2)
+grown into a declarative pipeline:
 
-Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are validated
-with interpret=True on CPU.
+    spec  →  template  →  autotune  →  launch
+
+  1. **spec** (`templates/spec.py`) — a `KernelSpec` names one variant:
+     FT level (off/inner/tile/block) × masked-vs-plain dispatch × an
+     epilogue chain (bias-add, activation, residual-add from the
+     `templates/epilogues.py` registry) × accumulate/output dtypes.
+  2. **template** (`templates/emit.py`) — `render(spec, …)` composes the
+     staged emitter (prologue / K-loop MAC + running checksums / fused
+     epilogue + writeback) into ONE Pallas kernel body. The four formerly
+     duplicated plain/masked × FT/non-FT bodies are all points in this
+     space; fused epilogues apply to the VMEM-resident accumulator before
+     the single HBM writeback, with linear ops folded into the ABFT
+     checksum comparison so detection/correction still works post-epilogue.
+  3. **autotune** (`autotune.py` + `search.py` + `tune_cache.py`) — the
+     candidate search enumerates MXU-aligned tiles under the
+     variant-aware VMEM model (fused epilogues add aux-operand buffers and
+     shift roofline intensity), and the persistent cache keys include the
+     variant (`KernelSpec.variant_key()`).
+  4. **launch** (`templates/registry.py`, `ops.py`) — `ops.gemm_call(spec,
+     a, b, …)` is the front door: variant-aware params, ragged masked
+     dispatch, operand padding, interpret fallback off-TPU.
+     `ops.matmul` / `ops.ft_matmul_report` / `ops.fused_matmul` are thin
+     specializations; `gemm.py` / `ftgemm.py` keep their public signatures
+     as registry lookups.
+
+Worked example — registering a new epilogue op and running it::
+
+    from repro.kernels.templates import epilogues, KernelSpec
+    from repro.kernels import ops
+
+    # 1. register: a leaky-relu epilogue (elementwise → aux=None;
+    #    nonlinear → linear=False, so it ends the checksum-fold prefix)
+    epilogues.register(epilogues.EpilogueOp(
+        "leaky_relu", linear=False,
+        apply=lambda y, aux: jnp.where(y > 0, y, 0.01 * y)))
+
+    # 2. spec it — chains compose; tuning auto-keys the new variant
+    spec = KernelSpec(ft_level="block", epilogue=("bias", "leaky_relu"))
+
+    # 3. run: one kernel, bias+activation fused, online ABFT verifying
+    #    post-bias (the linear prefix folds into the comparison)
+    out, report = ops.gemm_call(spec, a, b, bias=bias)
+
+    Linear ops with an aux operand additionally provide a `fold` rule
+    (see `epilogues._bias_fold`) so ABFT verification can run after them.
+
+Other modules:
+
+  gemm.py     -- plain/masked non-FT entries + the naive ladder rung (§3)
+  ftgemm.py   -- fused online-ABFT GEMM entry, 3 granularities (§4)
+  flashft.py  -- flash attention with fused ABFT + ragged seq masking
+  ops.py      -- dispatching front door (padding, autotune, interpret)
+  ref.py      -- pure-jnp oracles (incl. the unfused epilogue composition)
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated with interpret=True on CPU.
 """
-from . import autotune, ops, ref
+from . import autotune, ops, ref, templates
 
-__all__ = ["autotune", "ops", "ref"]
+__all__ = ["autotune", "ops", "ref", "templates"]

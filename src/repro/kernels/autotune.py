@@ -88,20 +88,27 @@ def classify(m: int, n: int, k: int) -> str:
 
 
 def clamp_params(p: KernelParams, m: int, n: int, k: int,
-                 in_bytes: int = 4, ft_level: str = "block") -> KernelParams:
+                 in_bytes: int = 4, ft_level: str = "block",
+                 spec=None) -> KernelParams:
     """Clamp tile params to the (MXU-padded) problem and the VMEM budget —
     shared by the static table and the search/cache paths, so a cached
     class winner is always legal for the concrete shape at hand. Uses the
     same working-set model (`KernelParams.vmem_bytes`) the search enumerates
-    under."""
+    under; a `templates.KernelSpec` adds its fused-epilogue aux-operand
+    buffers (`spec.extra_vmem_bytes`) on top."""
+
+    def _ws(q: KernelParams) -> int:
+        extra = spec.extra_vmem_bytes(q.bm, q.bn, in_bytes) if spec else 0
+        return q.vmem_bytes(in_bytes, ft_level) + extra
+
     p = dataclasses.replace(p,
                             bm=min(p.bm, _round_up(m, MXU)),
                             bn=min(p.bn, _round_up(n, MXU)),
                             bk=min(p.bk, _round_up(k, MXU)))
     # Shrink bk first (pipeline depth) if over budget — cheapest dimension.
-    while p.vmem_bytes(in_bytes, ft_level) > VMEM_BUDGET and p.bk > MXU:
+    while _ws(p) > VMEM_BUDGET and p.bk > MXU:
         p = dataclasses.replace(p, bk=p.bk // 2)
-    while (p.vmem_bytes(in_bytes, ft_level) > VMEM_BUDGET
+    while (_ws(p) > VMEM_BUDGET
            and max(p.bm, p.bn) > MXU):
         if p.bm >= p.bn:
             p = dataclasses.replace(p, bm=p.bm // 2)
@@ -132,14 +139,21 @@ def device_kind() -> str:
 
 
 def best_params(m: int, n: int, k: int, in_bytes: int = 4, *,
-                ft_level: str = "off",
+                ft_level: str = "off", spec=None,
                 measure=None, cache=None,
                 use_cache: bool = True) -> KernelParams:
     """Autotuned parameter selection: consult the persistent tuning cache
-    (keyed by device kind + shape class + element width + FT level); on a
-    miss run the candidate search (`kernels.search.select_best` — measured
-    on TPU hardware, roofline-modeled elsewhere), persist the winner, and
-    return it clamped to this concrete problem.
+    (keyed by device kind + shape class + element width + FT level + kernel
+    variant); on a miss run the candidate search
+    (`kernels.search.select_best` — measured on TPU hardware,
+    roofline-modeled elsewhere), persist the winner, and return it clamped
+    to this concrete problem.
+
+    `spec` — optional `templates.KernelSpec`. Fused epilogues shift the
+    VMEM budget (aux-operand buffers) and the roofline intensity (aux HBM
+    reads + elementwise FLOPs), so the variant is part of the cache key
+    (`spec.variant_key()`) and of the candidate space: two variants of one
+    shape class can legitimately tune to different tiles.
 
     Deterministic given a warm cache: the same key always yields the same
     stored tile, and clamping is pure. The key includes the per-dim search
@@ -148,21 +162,25 @@ def best_params(m: int, n: int, k: int, in_bytes: int = 4, *,
     `use_cache=False` forces a fresh search (cache regeneration, tests)."""
     from . import search, tune_cache
 
+    if spec is not None and spec.ft_level != ft_level:
+        raise ValueError(f"spec.ft_level={spec.ft_level!r} disagrees with "
+                         f"ft_level={ft_level!r}")
     if use_cache:
         cache = cache or tune_cache.default_cache()
         caps = (min(search.MAX_TILE, _round_up(m, MXU)),
                 min(search.MAX_TILE, _round_up(n, MXU)),
                 min(search.MAX_TILE, _round_up(k, MXU)))
         key = tune_cache.cache_key(device_kind(), classify(m, n, k),
-                                   in_bytes, ft_level, caps)
+                                   in_bytes, ft_level, caps,
+                                   variant=spec.variant_key() if spec else "")
         hit = cache.get(key)
         if hit is not None:
-            return clamp_params(hit, m, n, k, in_bytes, ft_level)
+            return clamp_params(hit, m, n, k, in_bytes, ft_level, spec)
     best = search.select_best(m, n, k, in_bytes=in_bytes, ft_level=ft_level,
-                              measure=measure)
+                              spec=spec, measure=measure)
     if use_cache:
         cache.put(key, best)
-    return clamp_params(best, m, n, k, in_bytes, ft_level)
+    return clamp_params(best, m, n, k, in_bytes, ft_level, spec)
 
 
 def _round_up(x: int, mult: int) -> int:

@@ -21,6 +21,13 @@ k-loop. The HBM traffic is exactly flash attention's (Q, K, V, O — no S×S
 materialization), so the memory-roofline term for attention drops from
 O(S²)-scaled to O(S)-scaled; checksum traffic is VMEM-only.
 
+Ragged sequence lengths take the masked dispatch of the GEMM kernels: the
+true (Sq, Skv) ride in via scalar prefetch, kv blocks wholly past the true
+Skv are skipped, and padded KV positions are masked to -inf after the
+(linear) score verification and before softmax — so the ops wrapper fits
+the seq blocks to the ragged lengths instead of padding to full class
+tiles, and non-causal ragged Skv is exact.
+
 Validated in interpret mode against ref.flash_ft_ref (tests/test_flashft.py).
 """
 from __future__ import annotations
@@ -63,7 +70,7 @@ def _verify_correct(mat, d_col, d_row, tau, corrects):
     return mat, detected, mag
 
 
-def _flash_ft_kernel(inj_ref, mag_ref,
+def _flash_ft_kernel(inj_ref, mag_ref, dims_ref,
                      q_ref, k_ref, v_ref,
                      o_ref, rep_ref,
                      acc_ref, m_ref, l_ref,
@@ -83,9 +90,14 @@ def _flash_ft_kernel(inj_ref, mag_ref,
 
     q_start = qi * bq
     kv_start = s * bkv
-    run = (kv_start <= q_start + bq - 1) if causal else True
+    true_skv = dims_ref[1]
+    # Ragged dispatch: kv blocks wholly past the true Skv are skipped
+    # (scalar-prefetched seq lens, not padded shapes, drive the loop).
+    run = kv_start < true_skv
+    if causal:
+        run = run & (kv_start <= q_start + bq - 1)
 
-    @pl.when(run if causal else (s >= 0))
+    @pl.when(run)
     def _step():
         q = q_ref[0].astype(jnp.float32)                 # (bq, dh)
         k = k_ref[0].astype(jnp.float32)                 # (bkv, dh)
@@ -113,9 +125,16 @@ def _flash_ft_kernel(inj_ref, mag_ref,
         hit = ((enable == 1) & (g_h == h) & (g_qi == qi) & (g_s == s))
         # injection lands in the Δ=PV accumulator below (paper §5.3 semantics)
 
+        # Ragged edge masking: padded KV positions (past the true Skv) must
+        # not receive attention — masked to -inf *after* the linear-GEMM
+        # checksum verification above (zero-padded K rows are
+        # checksum-neutral) and *before* softmax, exactly like the causal
+        # mask. This is what lets the ops wrapper fit bkv to the ragged
+        # length instead of requiring block-aligned Skv for non-causal.
+        kpos = kv_start + _iota2((bq, bkv), 1)
+        scores = jnp.where(kpos < true_skv, scores, NEG_INF)
         if causal:
             qpos = q_start + _iota2((bq, bkv), 0)
-            kpos = kv_start + _iota2((bq, bkv), 1)
             scores = jnp.where(qpos >= kpos, scores, NEG_INF)
 
         m_prev = m_ref[...]                               # (bq, 1)
@@ -133,7 +152,12 @@ def _flash_ft_kernel(inj_ref, mag_ref,
         ck_row = jnp.dot(p, jnp.sum(v, 1, keepdims=True))          # (bq, 1)
         d_col = jnp.sum(delta, 0, keepdims=True) - ck_col
         d_row = jnp.sum(delta, 1, keepdims=True) - ck_row
-        tau = jnp.maximum(rel_tau * F32EPS * bkv * jnp.max(jnp.abs(v)),
+        # Rounding-error accumulation stops at the true Skv: on a ragged
+        # edge block only the live kv positions contribute to the p·V
+        # reduction, so the threshold must not inflate to the full bkv
+        # (same clamp as the masked GEMM template's k_elapsed).
+        eff_kv = jnp.minimum(true_skv - kv_start, bkv).astype(jnp.float32)
+        tau = jnp.maximum(rel_tau * F32EPS * eff_kv * jnp.max(jnp.abs(v)),
                           1e-30)
         delta, det_pv, mag_pv = _verify_correct(delta, d_col, d_row, tau,
                                                 corrects)
@@ -162,17 +186,22 @@ def _flash_ft_kernel(inj_ref, mag_ref,
                                              "interpret", "protect_qk",
                                              "scale"))
 def flash_ft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                       inj_idx: jax.Array, inj_mag: jax.Array, *,
+                       inj_idx: jax.Array, inj_mag: jax.Array,
+                       dims: Optional[jax.Array] = None, *,
                        bq: int = 128, bkv: int = 128, causal: bool = True,
                        ft: FTConfig, interpret: bool = False,
                        protect_qk: bool = True, scale: float = None):
     """q: (BH, Sq, dh); k, v: (BH, Skv, dh); dh lane-aligned (pad to 128 in
     the ops wrapper). inj_idx int32[6] = [enable, bh, q_block, kv_step, row,
-    col]; inj_mag f32[1]. Returns (out (BH, Sq, dh), report)."""
+    col]; inj_mag f32[1]; dims int32[2] true (Sq, Skv) for the masked
+    ragged path (None → the padded shapes are the true lengths). Returns
+    (out (BH, Sq, dh), report)."""
     bh, sq, dh = q.shape
     _, skv, _ = k.shape
     assert sq % bq == 0 and skv % bkv == 0, (q.shape, k.shape, bq, bkv)
     grid = (bh, sq // bq, skv // bkv)
+    if dims is None:
+        dims = jnp.array([sq, skv], jnp.int32)
     # dh here may be the 128-padded width; callers pass the true-dh scale
     scale = scale if scale is not None else dh ** -0.5
 
@@ -182,7 +211,7 @@ def flash_ft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         rel_tau=ft.rel_tau, protect_qk=protect_qk)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, dh), lambda b, i, s, *_: (b, i, 0)),
@@ -211,7 +240,7 @@ def flash_ft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                                  pltpu.ARBITRARY),
         ),
         interpret=interpret,
-    )(inj_idx, inj_mag, q, k, v)
+    )(inj_idx, inj_mag, dims, q, k, v)
 
 
 def encode_injection(spec: Optional[InjectionSpec], bh: int = 0,

@@ -1,4 +1,4 @@
-"""Fused fault-tolerant GEMM Pallas kernel — the paper's core contribution
+"""Fused fault-tolerant GEMM entry point — the paper's core contribution
 (§4) adapted to TPU (DESIGN.md §2).
 
 Checksum encodings (Huang–Abraham) are maintained **inside the kernel** from
@@ -26,197 +26,29 @@ the given global coordinates after k-step `k_step` — emulating a compute-unit
 SEU in the accumulation registers. Detection → location → **branchless
 correction** happen in-kernel, on-line.
 
+Since PR 2 the kernel body is *generated*: `ft_gemm` is a registry lookup
+(`templates.registry.kernel_call`) on the FT `KernelSpec` for the requested
+level/masking — the same single-source template that also emits the non-FT
+and fused-epilogue variants (epilogue chains ride `ops.gemm_call`; this
+entry keeps the bare-FT signature).
+
 Outputs: (C, report) where report[i, j] = [detected, corrected, row, col,
 magnitude, max_residual, tau, k_elapsed] per output block (f32).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from .pallas_compat import CompilerParams as _CompilerParams
 
 from repro.core.policy import FTConfig, InjectionSpec
-from .autotune import KernelParams, MXU
-
-F32EPS = float(jnp.finfo(jnp.float32).eps)
-REPORT_WIDTH = 8
-
-
-def _iota2(shape, dim):
-    return jax.lax.broadcasted_iota(jnp.int32, shape, dim)
+from .autotune import KernelParams
+from .templates import registry
+from .templates.emit import F32EPS, REPORT_WIDTH          # noqa: F401 (re-export)
+from .templates.spec import KernelSpec
 
 
-def _ftgemm_kernel(inj_idx_ref, inj_mag_ref, dims_ref,  # scalar prefetch
-                   a_ref, b_ref,                      # VMEM inputs
-                   out_ref, rep_ref,                  # VMEM outputs
-                   acc_ref, colck_ref, rowck_ref,     # VMEM scratch
-                   amax_ref, bmax_ref,                # SMEM scratch
-                   *, k_steps: int, bm: int, bn: int, bk: int,
-                   mode: str, verify_step: bool, corrects: bool,
-                   rel_tau: float, n_bands: int, masked: bool):
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    s = pl.program_id(2)
-    last = s == k_steps - 1
-
-    @pl.when(s == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        colck_ref[...] = jnp.zeros_like(colck_ref)
-        rowck_ref[...] = jnp.zeros_like(rowck_ref)
-        amax_ref[0, 0] = 0.0
-        bmax_ref[0, 0] = 0.0
-        rep_ref[...] = jnp.zeros_like(rep_ref)
-
-    a = a_ref[...]
-    b = b_ref[...]
-    if masked:
-        # Ragged dispatch: zero everything past the true (m, n, k) carried
-        # in via scalar prefetch. The checksum math below then sees exactly
-        # zero-padding semantics (checksums of zero rows/cols are zero), so
-        # ABFT detection/correction survives the ragged edges, and garbage
-        # in the padded region (even NaN/Inf) cannot leak into either the
-        # accumulator or the running checksums.
-        tm, tn, tk = dims_ref[0], dims_ref[1], dims_ref[2]
-        a_ok = ((i * bm + _iota2((bm, bk), 0) < tm)
-                & (s * bk + _iota2((bm, bk), 1) < tk))
-        b_ok = ((s * bk + _iota2((bk, bn), 0) < tk)
-                & (j * bn + _iota2((bk, bn), 1) < tn))
-        a = jnp.where(a_ok, a, jnp.zeros_like(a))
-        b = jnp.where(b_ok, b, jnp.zeros_like(b))
-    af = a.astype(jnp.float32)
-    bf = b.astype(jnp.float32)
-
-    # Running operand-magnitude bounds for the rounding-aware threshold —
-    # free: the tiles are already in VMEM (the "fused with prefetch" point).
-    amax_ref[0, 0] = jnp.maximum(amax_ref[0, 0], jnp.max(jnp.abs(af)))
-    bmax_ref[0, 0] = jnp.maximum(bmax_ref[0, 0], jnp.max(jnp.abs(bf)))
-    k_elapsed = (s + 1).astype(jnp.float32) * bk
-    if masked:
-        # Rounding-error accumulation stops at the true K.
-        k_elapsed = jnp.minimum(k_elapsed, dims_ref[2].astype(jnp.float32))
-    tau = jnp.maximum(rel_tau * F32EPS * k_elapsed
-                      * amax_ref[0, 0] * bmax_ref[0, 0], 1e-30)
-
-    delta = jnp.dot(a, b, preferred_element_type=jnp.float32)
-
-    # ---- emulated SEU (scalar-prefetched spec) --------------------------
-    enable, g_row, g_col, inj_k = (inj_idx_ref[0], inj_idx_ref[1],
-                                   inj_idx_ref[2], inj_idx_ref[3])
-    r_loc = g_row - i * bm
-    c_loc = g_col - j * bn
-    hit_now = ((enable == 1) & (s == inj_k)
-               & (r_loc >= 0) & (r_loc < bm) & (c_loc >= 0) & (c_loc < bn))
-    hit_mask = ((_iota2((bm, bn), 0) == r_loc)
-                & (_iota2((bm, bn), 1) == c_loc)
-                & hit_now)
-    delta = delta + jnp.where(hit_mask, inj_mag_ref[0], 0.0)
-
-    # ---- checksum maintenance + verification ----------------------------
-    if mode == "inner":
-        # Verify this step's contribution in isolation (thread-level
-        # analogue: smallest protected unit, no cross-step state).
-        ck_col = jnp.dot(jnp.sum(af, axis=0, keepdims=True), bf)      # (1,bn)
-        ck_row = jnp.dot(af, jnp.sum(bf, axis=1, keepdims=True))      # (bm,1)
-        d_col = jnp.sum(delta, axis=0, keepdims=True) - ck_col
-        d_row = jnp.sum(delta, axis=1, keepdims=True) - ck_row
-        delta, det, mag, row_l, col_l = _locate_correct_full(
-            delta, d_col, d_row, tau, corrects, bm, bn)
-        acc_ref[...] += delta
-        _record(rep_ref, det, mag, row_l + i * bm, col_l + j * bn,
-                d_col, d_row, tau, k_elapsed, corrects)
-    else:
-        acc_ref[...] += delta
-        if mode == "block":
-            colck_ref[...] += jnp.dot(jnp.sum(af, axis=0, keepdims=True), bf)
-        else:  # mode == "tile": one running column checksum per MXU band
-            for t in range(n_bands):
-                colck_ref[t:t + 1, :] += jnp.dot(
-                    jnp.sum(af[t * MXU:(t + 1) * MXU], axis=0, keepdims=True),
-                    bf)
-        rowck_ref[...] += jnp.dot(af, jnp.sum(bf, axis=1, keepdims=True))
-
-        do_verify = verify_step or (k_steps == 1)
-
-        def _verify():
-            acc = acc_ref[...]
-            d_row = jnp.sum(acc, axis=1, keepdims=True) - rowck_ref[...]
-            if mode == "block":
-                d_col = (jnp.sum(acc, axis=0, keepdims=True)
-                         - colck_ref[0:1, :])
-                new_acc, det, mag, row_l, col_l = _locate_correct_full(
-                    acc, d_col, d_row, tau, corrects, bm, bn)
-                acc_ref[...] = new_acc
-                _record(rep_ref, det, mag, row_l + i * bm, col_l + j * bn,
-                        d_col, d_row, tau, k_elapsed, corrects)
-            else:
-                # Per-band verification & correction (one SEU per band).
-                for t in range(n_bands):
-                    band = acc[t * MXU:(t + 1) * MXU]
-                    d_col = (jnp.sum(band, axis=0, keepdims=True)
-                             - colck_ref[t:t + 1, :])
-                    d_row_b = d_row[t * MXU:(t + 1) * MXU]
-                    new_band, det, mag, row_l, col_l = _locate_correct_full(
-                        band, d_col, d_row_b, tau, corrects, MXU, bn)
-                    acc_ref[t * MXU:(t + 1) * MXU, :] = new_band
-                    _record(rep_ref, det, mag,
-                            row_l + i * bm + t * MXU, col_l + j * bn,
-                            d_col, d_row_b, tau, k_elapsed, corrects)
-
-        if do_verify:
-            _verify()
-        else:
-            pl.when(last)(_verify)
-
-    @pl.when(last)
-    def _flush():
-        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
-
-
-def _locate_correct_full(acc, d_col, d_row, tau, corrects, bm, bn):
-    """Locate a single error from checksum residuals and (optionally) apply
-    the branchless correction. Returns (acc', detected, magnitude, row, col)."""
-    dc = d_col[0, :]
-    dr = d_row[:, 0]
-    col = jnp.argmax(jnp.abs(dc)).astype(jnp.int32)
-    row = jnp.argmax(jnp.abs(dr)).astype(jnp.int32)
-    mag_c = jnp.max(jnp.abs(dc))
-    mag_r = jnp.max(jnp.abs(dr))
-    detected = jnp.maximum(mag_c, mag_r) > tau
-    # Canonical magnitude from the column residual (signed).
-    mag = jnp.where(detected, jnp.sum(jnp.where(
-        jax.lax.iota(jnp.int32, bn) == col, dc, 0.0)), 0.0)
-    if corrects:
-        hit = ((_iota2((bm, bn), 0) == row) & (_iota2((bm, bn), 1) == col)
-               & detected)
-        acc = acc - jnp.where(hit, mag, 0.0)
-    return acc, detected, mag, row, col
-
-
-def _record(rep_ref, det, mag, row_g, col_g, d_col, d_row, tau, k_elapsed,
-            corrects):
-    detf = det.astype(jnp.float32)
-    resid = jnp.maximum(jnp.max(jnp.abs(d_col)), jnp.max(jnp.abs(d_row)))
-    rep_ref[0, 0, 0] += detf
-    rep_ref[0, 0, 1] += detf if corrects else 0.0
-    rep_ref[0, 0, 2] = jnp.where(det, row_g.astype(jnp.float32),
-                                 rep_ref[0, 0, 2])
-    rep_ref[0, 0, 3] = jnp.where(det, col_g.astype(jnp.float32),
-                                 rep_ref[0, 0, 3])
-    rep_ref[0, 0, 4] = jnp.where(det, mag, rep_ref[0, 0, 4])
-    rep_ref[0, 0, 5] = jnp.maximum(rep_ref[0, 0, 5], resid)
-    rep_ref[0, 0, 6] = tau
-    rep_ref[0, 0, 7] = k_elapsed
-
-
-@functools.partial(jax.jit, static_argnames=("params", "ft", "interpret",
-                                             "out_dtype"))
 def ft_gemm(a: jax.Array, b: jax.Array,
             inj_idx: jax.Array, inj_mag: jax.Array, *,
             params: Optional[KernelParams] = None, ft: FTConfig,
@@ -239,58 +71,10 @@ def ft_gemm(a: jax.Array, b: jax.Array,
         from . import autotune
         params = autotune.best_params(m, n, k, a.dtype.itemsize,
                                       ft_level=ft.level)
-    bm, bn, bk = params.bm, params.bn, params.bk
-    masked = dims is not None
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, params)
-    # Unmasked tiles stay MXU-aligned; masked tiles only need hardware
-    # (sublane) alignment on bm — except "tile" mode, whose per-band
-    # checksums slice the accumulator in MXU-row bands.
-    assert bm % (MXU if (ft.level == "tile" or not masked) else 8) == 0, params
-    out_dtype = out_dtype or a.dtype
-    grid = (m // bm, n // bn, k // bk)
-    n_bands = bm // MXU if ft.level == "tile" else 1
-    if dims is None:
-        dims = jnp.array([m, n, k], jnp.int32)
-
-    kernel = functools.partial(
-        _ftgemm_kernel, k_steps=grid[2], bm=bm, bn=bn, bk=bk,
-        mode=ft.level, verify_step=(ft.verify == "step"),
-        corrects=ft.corrects, rel_tau=ft.rel_tau, n_bands=n_bands,
-        masked=masked)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, s, *_: (i, s)),
-            pl.BlockSpec((bk, bn), lambda i, j, s, *_: (s, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j, s, *_: (i, j)),
-            pl.BlockSpec((1, 1, REPORT_WIDTH), lambda i, j, s, *_: (i, j, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((bm, bn), jnp.float32),
-            pltpu.VMEM((n_bands, bn), jnp.float32),
-            pltpu.VMEM((bm, 1), jnp.float32),
-            pltpu.SMEM((1, 1), jnp.float32),
-            pltpu.SMEM((1, 1), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((m, n), out_dtype),
-            jax.ShapeDtypeStruct((grid[0], grid[1], REPORT_WIDTH),
-                                 jnp.float32),
-        ],
-        compiler_params=_CompilerParams(
-            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
-                                 pltpu.ARBITRARY),
-        ),
-        interpret=interpret,
-    )(inj_idx, inj_mag, dims, a, b)
+    spec = KernelSpec(ft_level=ft.level, masked=dims is not None)
+    return registry.kernel_call(a, b, inj_idx=inj_idx, inj_mag=inj_mag,
+                                dims=dims, spec=spec, params=params, ft=ft,
+                                interpret=interpret, out_dtype=out_dtype)
 
 
 def encode_injection(spec: Optional[InjectionSpec]):

@@ -1,4 +1,4 @@
-"""Baseline high-performance GEMM Pallas kernel (paper §3 analogue).
+"""Baseline high-performance GEMM entry points (paper §3 analogue).
 
 The paper builds SGEMM up through threadblock tiling (shared memory), thread
 tiling (registers), warp tiling, vectorized access, and double-buffered
@@ -15,143 +15,47 @@ prefetching. On TPU the same ladder collapses into the Pallas/Mosaic model:
   * vectorized access → (8,128)-aligned VREG-shaped tiles
   * accumulator       → f32 VMEM scratch that lives across the k grid steps
 
-`gemm()` is the raw kernel entry (shape must be tile-divisible; ops.py pads).
+Since PR 2 the kernel bodies are *generated*: `gemm()` and `gemm_masked()`
+are registry lookups (`templates.registry.kernel_call`) on the plain and
+masked non-FT `KernelSpec`s — the same single-source template that also
+emits every FT and fused-epilogue variant. Only `naive_gemm` (the bottom
+rung of the step-wise benchmark ladder) stays hand-written.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from .pallas_compat import CompilerParams as _CompilerParams
 
 from .autotune import KernelParams
+from .templates import registry
+from .templates.spec import KernelSpec
+
+_PLAIN = KernelSpec(ft_level="off", masked=False)
+_MASKED = KernelSpec(ft_level="off", masked=True)
 
 
-def _gemm_kernel(a_ref, b_ref, out_ref, acc_ref, *, k_steps: int):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
-                            preferred_element_type=jnp.float32)
-
-    @pl.when(k == k_steps - 1)
-    def _flush():
-        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("params", "interpret", "out_dtype"))
 def gemm(a: jax.Array, b: jax.Array, *, params: KernelParams,
          interpret: bool = False, out_dtype=None) -> jax.Array:
     """C = A @ B for tile-divisible (M, K) × (K, N)."""
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
-    bm, bn, bk = params.bm, params.bn, params.bk
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, params)
-    out_dtype = out_dtype or a.dtype
-    grid = (m // bm, n // bn, k // bk)
-
-    return pl.pallas_call(
-        functools.partial(_gemm_kernel, k_steps=grid[2]),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
-            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=_CompilerParams(
-            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
-                                 pltpu.ARBITRARY),
-        ),
-        interpret=interpret,
-    )(a, b)
+    out, _ = registry.kernel_call(a, b, spec=_PLAIN, params=params,
+                                  interpret=interpret, out_dtype=out_dtype)
+    return out
 
 
-def _gemm_masked_kernel(dims_ref,                    # scalar prefetch
-                        a_ref, b_ref, out_ref, acc_ref,
-                        *, k_steps: int, bm: int, bn: int, bk: int):
-    """Ragged-shape GEMM: the true (m, n, k) arrive via scalar prefetch and
-    the final partial row/col/k tiles are masked in-kernel, so callers pad
-    only to the fitted tile grid (≈ hardware alignment) instead of to full
-    class tiles — irregular shapes stop paying padding FLOPs. Masking both
-    operands (not just one) also makes the kernel indifferent to *garbage*
-    in the padded region (NaN/Inf-safe), which the conformance tests
-    exploit."""
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    s = pl.program_id(2)
-    tm, tn, tk = dims_ref[0], dims_ref[1], dims_ref[2]
-
-    @pl.when(s == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    def _iota(shape, d):
-        return jax.lax.broadcasted_iota(jnp.int32, shape, d)
-
-    a = a_ref[...]
-    b = b_ref[...]
-    a_ok = ((i * bm + _iota((bm, bk), 0) < tm)
-            & (s * bk + _iota((bm, bk), 1) < tk))
-    b_ok = ((s * bk + _iota((bk, bn), 0) < tk)
-            & (j * bn + _iota((bk, bn), 1) < tn))
-    a = jnp.where(a_ok, a, jnp.zeros_like(a))
-    b = jnp.where(b_ok, b, jnp.zeros_like(b))
-    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
-
-    @pl.when(s == k_steps - 1)
-    def _flush():
-        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("params", "interpret",
-                                             "out_dtype"))
 def gemm_masked(a: jax.Array, b: jax.Array, dims: jax.Array, *,
                 params: KernelParams, interpret: bool = False,
                 out_dtype=None) -> jax.Array:
-    """C = A @ B where A/B are padded only to the fitted tile grid and
-    `dims` = int32[3] true (m, n, k). Tile constraints are the hardware
-    ones — bm multiple of the sublane count (8 for f32), bn/bk multiples of
-    the 128-lane MXU edge — not the class-tile multiples `gemm` needs."""
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
-    bm, bn, bk = params.bm, params.bn, params.bk
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape,
-                                                        params)
-    out_dtype = out_dtype or a.dtype
-    grid = (m // bm, n // bn, k // bk)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, s, *_: (i, s)),
-            pl.BlockSpec((bk, bn), lambda i, j, s, *_: (s, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, *_: (i, j)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-    )
-    return pl.pallas_call(
-        functools.partial(_gemm_masked_kernel, k_steps=grid[2],
-                          bm=bm, bn=bn, bk=bk),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=_CompilerParams(
-            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
-                                 pltpu.ARBITRARY),
-        ),
-        interpret=interpret,
-    )(dims, a, b)
+    """Ragged-shape GEMM: A/B are padded only to the fitted tile grid and
+    `dims` = int32[3] true (m, n, k); the kernel masks the partial
+    row/col/k edge tiles in-kernel (NaN/Inf-safe in the padded region).
+    Tile constraints are the hardware ones — bm a multiple of the sublane
+    count (8 for f32), bn/bk multiples of the 128-lane MXU edge — not the
+    class-tile multiples `gemm` needs."""
+    out, _ = registry.kernel_call(a, b, dims=dims, spec=_MASKED,
+                                  params=params, interpret=interpret,
+                                  out_dtype=out_dtype)
+    return out
 
 
 def naive_gemm(a: jax.Array, b: jax.Array, *, interpret: bool = False,

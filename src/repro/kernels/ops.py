@@ -1,23 +1,32 @@
 """jit'd public wrappers around the Pallas kernels.
 
-Handles: autotuned parameter selection (`autotune.best_params`, backed by
-the candidate search + persistent tuning cache — the codegen front-end),
-ragged-shape dispatch (tile-divisible shapes run the plain kernels; ragged
-shapes run the masked kernels padded only to a fitted tile grid instead of
-full class tiles — see `dispatch_info`), backend fallback (interpret=True
-automatically off-TPU so the same call sites run on CPU in tests), and
-report plumbing.
+`gemm_call` is the front door of the template subsystem: it resolves a
+`templates.KernelSpec` (FT level × epilogue chain × dtypes) against the
+concrete problem — variant-aware autotuned parameters (`autotune.best_params`,
+backed by the candidate search + persistent tuning cache), ragged-shape
+dispatch (tile-divisible shapes run the plain variant; ragged shapes run the
+masked variant padded only to a fitted tile grid instead of full class tiles
+— see `dispatch_info`), backend fallback (interpret=True automatically
+off-TPU so the same call sites run on CPU in tests), operand padding for the
+fused epilogue aux inputs, and report plumbing. `matmul`, `ft_matmul*` and
+`fused_matmul` are thin specializations of it.
+
+Element widths are always derived from the *actual operand dtype*
+(`a.dtype.itemsize`) — never assumed 4 — so bf16/fp16 problems get the
+correct sublane alignment, fitted tiles, and VMEM budgets.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import FTConfig, InjectionSpec, ONLINE_BLOCK
+from repro.core.policy import FTConfig, InjectionSpec, ONLINE_BLOCK, FT_OFF
 from . import autotune, ftgemm, gemm, search
+from .templates import KernelSpec, registry
+from .templates import spec as spec_mod
 
 
 def _should_interpret(interpret: Optional[bool]) -> bool:
@@ -35,8 +44,16 @@ def _pad2(x: jax.Array, rows: int, cols: int) -> jax.Array:
 
 def dispatch_info(m: int, n: int, k: int,
                   params: Optional[autotune.KernelParams] = None, *,
-                  in_bytes: int = 4, ft_level: str = "off") -> Dict:
+                  in_bytes: Optional[int] = None, dtype=None,
+                  ft_level: str = "off",
+                  spec: Optional[KernelSpec] = None) -> Dict:
     """Pure dispatch decision for a (M, N, K) GEMM.
+
+    Element width comes from `dtype` (preferred) or `in_bytes`; pass the
+    actual operand dtype — bf16/fp16 problems have a different sublane floor
+    (16/32 rows) and VMEM budget than f32, so a defaulted width would fit
+    wrong tiles. (Falls back to 4 bytes with neither given, for
+    structural-only queries.)
 
     path="padded": the shape divides the class tiles — run the plain kernel
     (no padding at all in that case). path="masked": ragged shape — run the
@@ -49,7 +66,10 @@ def dispatch_info(m: int, n: int, k: int,
     zero avoidable padding. The old full-padding path is reported alongside
     as `padded_path_ratio` for comparison (the codegen benchmark's metric).
     """
-    p = params or autotune.best_params(m, n, k, in_bytes, ft_level=ft_level)
+    if in_bytes is None:
+        in_bytes = jnp.dtype(dtype).itemsize if dtype is not None else 4
+    p = params or autotune.best_params(m, n, k, in_bytes, ft_level=ft_level,
+                                       spec=spec)
     sub = search.sublane(in_bytes)
     align_m = autotune.MXU if ft_level == "tile" else sub
     q = autotune.KernelParams(
@@ -76,6 +96,75 @@ def dispatch_info(m: int, n: int, k: int,
     }
 
 
+def gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
+              bias: Optional[jax.Array] = None,
+              residual: Optional[jax.Array] = None,
+              ft: Optional[FTConfig] = None,
+              inject: Optional[InjectionSpec] = None,
+              params: Optional[autotune.KernelParams] = None,
+              interpret: Optional[bool] = None,
+              out_dtype=None) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """The template subsystem's front door: run any registered kernel
+    variant on an arbitrary (M, K) × (K, N) problem.
+
+    spec      — the variant: FT level, epilogue chain, dtypes. `spec.masked`
+                is advisory; the dispatcher re-resolves it from the shape
+                (tile-divisible → plain, ragged → masked fitted grid).
+    bias      — (N,) or (1, N) vector when the chain contains "bias".
+    residual  — (M, N) array when the chain contains "residual".
+    ft        — FTConfig for FT specs (verify schedule, correction, τ);
+                defaults to online-correcting at `spec.ft_level`.
+    inject    — optional deterministic SEU (tests/benchmarks).
+
+    Returns (C, report) — report is None for non-FT specs, else the
+    per-block [detected, corrected, row, col, magnitude, max_residual, τ,
+    k_elapsed] array of `ftgemm`.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    in_bytes = a.dtype.itemsize
+    ft_level = spec.ft_level
+    if ft is None:
+        ft = FTConfig(level=ft_level) if spec.ft else FT_OFF
+    if spec.ft != ft.enabled or (spec.ft and ft.level != ft_level):
+        raise ValueError(f"FTConfig(level={ft.level!r}, action={ft.action!r})"
+                         f" disagrees with spec.ft_level={ft_level!r}")
+
+    p = params or autotune.best_params(m, n, k, in_bytes, ft_level=ft_level,
+                                       spec=spec)
+    info = dispatch_info(m, n, k, p, in_bytes=in_bytes, ft_level=ft_level,
+                         spec=spec)
+    masked = info["path"] == "masked"
+    rspec = dataclasses.replace(spec, masked=masked)
+    rp = info["masked_params"] if masked else p
+    me, ne, ke = info["executed_shape"]
+
+    if bias is not None:
+        bias = bias.reshape(1, -1)
+        assert bias.shape[1] == n, (bias.shape, n)
+        bias = _pad2(bias, 1, ne)       # zero pads keep the checksum fold exact
+    if residual is not None:
+        assert residual.shape == (m, n), (residual.shape, (m, n))
+        residual = _pad2(residual, me, ne)
+
+    inj_idx = inj_mag = dims = None
+    if rspec.ft:
+        inj_idx, inj_mag = ftgemm.encode_injection(inject)
+    if masked:
+        dims = jnp.array([m, n, k], jnp.int32)
+        a = _pad2(a, me, ke)
+        b = _pad2(b, ke, ne)
+
+    out, rep = registry.kernel_call(
+        a, b, bias=bias, residual=residual, inj_idx=inj_idx,
+        inj_mag=inj_mag, dims=dims, spec=rspec, params=rp, ft=ft,
+        interpret=_should_interpret(interpret), out_dtype=out_dtype)
+    if masked:
+        out = out[:m, :n]
+    return out, rep
+
+
 def matmul(a: jax.Array, b: jax.Array, *,
            params: Optional[autotune.KernelParams] = None,
            interpret: Optional[bool] = None,
@@ -83,22 +172,31 @@ def matmul(a: jax.Array, b: jax.Array, *,
     """High-performance non-FT GEMM (paper §3): C = A @ B, any (M, K, N).
     Tile-divisible shapes run the plain kernel; ragged shapes dispatch to
     the masked kernel on a fitted grid (no full-padding fallback)."""
-    m, k = a.shape
-    _, n = b.shape
-    p = params or autotune.best_params(m, n, k, a.dtype.itemsize)
-    info = dispatch_info(m, n, k, p, in_bytes=a.dtype.itemsize)
-    if info["path"] == "masked":
-        q = info["masked_params"]
-        me, ne, ke = info["executed_shape"]
-        out = gemm.gemm_masked(_pad2(a, me, ke), _pad2(b, ke, ne),
-                               jnp.array([m, n, k], jnp.int32), params=q,
-                               interpret=_should_interpret(interpret),
-                               out_dtype=out_dtype)
-        return out[:m, :n]
-    out = gemm.gemm(a, b, params=p,
-                    interpret=_should_interpret(interpret),
-                    out_dtype=out_dtype)
+    out, _ = gemm_call(KernelSpec(), a, b, params=params,
+                       interpret=interpret, out_dtype=out_dtype)
     return out
+
+
+def fused_matmul(a: jax.Array, b: jax.Array, *,
+                 bias: Optional[jax.Array] = None,
+                 act: Optional[str] = None,
+                 residual: Optional[jax.Array] = None,
+                 ft: FTConfig = FT_OFF,
+                 inject: Optional[InjectionSpec] = None,
+                 params: Optional[autotune.KernelParams] = None,
+                 interpret: Optional[bool] = None,
+                 out_dtype=None) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Canonical fused-epilogue GEMM: C = act(A·B + bias) + residual in one
+    kernel — the matmul→bias→activation sequence without the second HBM
+    round-trip. With an enabled `ft`, the linear epilogue prefix is folded
+    into the checksum comparison so online ABFT verifies (and corrects)
+    post-epilogue. Returns (C, report|None)."""
+    spec = spec_mod.fused(bias=bias is not None, act=act,
+                          residual=residual is not None,
+                          ft_level=ft.level if ft.enabled else "off")
+    return gemm_call(spec, a, b, bias=bias, residual=residual, ft=ft,
+                     inject=inject, params=params, interpret=interpret,
+                     out_dtype=out_dtype)
 
 
 def ft_matmul(a: jax.Array, b: jax.Array, *,
@@ -113,47 +211,6 @@ def ft_matmul(a: jax.Array, b: jax.Array, *,
     return out
 
 
-def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
-             ft: FTConfig = ONLINE_BLOCK, causal: bool = True,
-             spec: Optional[InjectionSpec] = None,
-             inj_bh: int = 0, inj_q_block: int = 0,
-             bq: int = 128, bkv: int = 128,
-             interpret: Optional[bool] = None,
-             protect_qk: bool = True) -> Tuple[jax.Array, jax.Array]:
-    """Flash attention with fused in-kernel ABFT (see kernels/flashft.py).
-    q: (BH, Sq, dh); k, v: (BH, Skv, dh). Pads dh to the 128-lane MXU edge
-    and seq dims to block multiples (zero pads are ABFT- and softmax-neutral
-    for K/V because masked; Q pads are sliced off). Returns (out, report)."""
-    from . import flashft
-    bh, sq, dh = q.shape
-    skv = k.shape[1]
-    dh_p = ((dh + 127) // 128) * 128
-    bq = min(bq, ((sq + 127) // 128) * 128)
-    bkv = min(bkv, ((skv + 127) // 128) * 128)
-    sq_p = ((sq + bq - 1) // bq) * bq
-    skv_p = ((skv + bkv - 1) // bkv) * bkv
-
-    def pad3(x, s_to, d_to):
-        return jnp.pad(x, ((0, 0), (0, s_to - x.shape[1]),
-                           (0, d_to - x.shape[2])))
-
-    qp, kp, vp = pad3(q, sq_p, dh_p), pad3(k, skv_p, dh_p), pad3(v, skv_p,
-                                                                 dh_p)
-    # padded KV rows must not receive attention: causal masking covers Q
-    # pads; for KV pads beyond skv add -inf via a huge negative K? — zero K
-    # gives score 0 which *would* leak for non-causal; guard by masking in
-    # the kernel only through causal. For non-causal callers we require
-    # skv % bkv == 0 (asserted).
-    if not causal:
-        assert skv == skv_p, "non-causal flash_ft needs block-aligned Skv"
-    inj_idx, inj_mag = flashft.encode_injection(spec, inj_bh, inj_q_block)
-    out, rep = flashft.flash_ft_attention(
-        qp, kp, vp, inj_idx, inj_mag, bq=bq, bkv=bkv, causal=causal, ft=ft,
-        interpret=_should_interpret(interpret), protect_qk=protect_qk,
-        scale=dh ** -0.5)
-    return out[:, :sq, :dh], rep
-
-
 def ft_matmul_report(a: jax.Array, b: jax.Array, *,
                      ft: FTConfig = ONLINE_BLOCK,
                      spec: Optional[InjectionSpec] = None,
@@ -164,23 +221,46 @@ def ft_matmul_report(a: jax.Array, b: jax.Array, *,
     Ragged shapes dispatch to the masked kernel; the checksum math is
     masked identically, so ABFT detection/correction works on the ragged
     edge tiles."""
-    m, k = a.shape
-    _, n = b.shape
-    p = params or autotune.best_params(m, n, k, a.dtype.itemsize,
-                                       ft_level=ft.level)
-    inj_idx, inj_mag = ftgemm.encode_injection(spec)
-    info = dispatch_info(m, n, k, p, in_bytes=a.dtype.itemsize,
-                         ft_level=ft.level)
-    if info["path"] == "masked":
-        q = info["masked_params"]
-        me, ne, ke = info["executed_shape"]
-        out, rep = ftgemm.ft_gemm(
-            _pad2(a, me, ke), _pad2(b, ke, ne), inj_idx, inj_mag,
-            params=q, ft=ft, interpret=_should_interpret(interpret),
-            out_dtype=out_dtype, dims=jnp.array([m, n, k], jnp.int32))
-        return out[:m, :n], rep
-    out, rep = ftgemm.ft_gemm(
-        a, b, inj_idx, inj_mag,
-        params=p, ft=ft, interpret=_should_interpret(interpret),
-        out_dtype=out_dtype)
-    return out, rep
+    return gemm_call(KernelSpec(ft_level=ft.level), a, b, ft=ft,
+                     inject=spec, params=params, interpret=interpret,
+                     out_dtype=out_dtype)
+
+
+def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
+             ft: FTConfig = ONLINE_BLOCK, causal: bool = True,
+             spec: Optional[InjectionSpec] = None,
+             inj_bh: int = 0, inj_q_block: int = 0,
+             bq: int = 128, bkv: int = 128,
+             interpret: Optional[bool] = None,
+             protect_qk: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Flash attention with fused in-kernel ABFT (see kernels/flashft.py).
+    q: (BH, Sq, dh); k, v: (BH, Skv, dh). Pads dh to the 128-lane MXU edge;
+    the sequence dims take the masked ragged path: true (Sq, Skv) ride in
+    via scalar prefetch, blocks are *fitted* to the ragged lengths
+    (sublane-aligned bq, lane-aligned bkv — no padding to full class
+    tiles), and padded KV positions are masked to -inf in-kernel, so
+    non-causal ragged Skv is exact too. Returns (out, report)."""
+    from . import flashft
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    sub = search.sublane(q.dtype.itemsize)
+    dh_p = ((dh + 127) // 128) * 128
+    bq = search.fit_tile(sq, min(bq, ((sq + 127) // 128) * 128), sub)
+    bkv = search.fit_tile(skv, min(bkv, ((skv + 127) // 128) * 128),
+                          autotune.MXU)
+    sq_p = ((sq + bq - 1) // bq) * bq
+    skv_p = ((skv + bkv - 1) // bkv) * bkv
+
+    def pad3(x, s_to, d_to):
+        return jnp.pad(x, ((0, 0), (0, s_to - x.shape[1]),
+                           (0, d_to - x.shape[2])))
+
+    qp, kp, vp = pad3(q, sq_p, dh_p), pad3(k, skv_p, dh_p), pad3(v, skv_p,
+                                                                 dh_p)
+    inj_idx, inj_mag = flashft.encode_injection(spec, inj_bh, inj_q_block)
+    dims = jnp.array([sq, skv], jnp.int32)
+    out, rep = flashft.flash_ft_attention(
+        qp, kp, vp, inj_idx, inj_mag, dims, bq=bq, bkv=bkv, causal=causal,
+        ft=ft, interpret=_should_interpret(interpret),
+        protect_qk=protect_qk, scale=dh ** -0.5)
+    return out[:, :sq, :dh], rep

@@ -24,6 +24,30 @@ def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
     return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
 
 
+def fused_matmul_ref(a: jax.Array, b: jax.Array,
+                     bias: Optional[jax.Array] = None,
+                     residual: Optional[jax.Array] = None,
+                     chain: Optional[tuple] = None,
+                     out_dtype=None) -> jax.Array:
+    """Unfused two-pass oracle for the fused-epilogue kernel variants: the
+    f32 GEMM accumulator followed by the epilogue chain applied as separate
+    jnp ops (`templates.epilogues.reference_apply` — the same formulas the
+    emitter inlines, so fused and unfused agree to rounding). `chain=None`
+    derives the canonical bias→(no act)→residual order from the operands;
+    pass an explicit chain (e.g. ("bias", "gelu")) to mirror a spec."""
+    from .templates import epilogues
+    out_dtype = out_dtype or a.dtype
+    if chain is None:
+        chain = ((("bias",) if bias is not None else ())
+                 + (("residual",) if residual is not None else ()))
+    acc = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    acc = epilogues.reference_apply(
+        chain, acc,
+        bias=None if bias is None else bias.reshape(1, -1),
+        residual=residual)
+    return acc.astype(out_dtype)
+
+
 class FTRefOut(NamedTuple):
     out: jax.Array
     detected: jax.Array   # bool scalar

@@ -50,11 +50,13 @@ def sublane(in_bytes: int) -> int:
 # ---------------------------------------------------------------------------
 
 def vmem_bytes(p: KernelParams, in_bytes: int = 4,
-               ft_level: str = "off") -> int:
-    """FT-level-aware working set — delegates to the single model on
-    `KernelParams.vmem_bytes` so search legality and budget clamping can
+               ft_level: str = "off", spec=None) -> int:
+    """FT-level-and-variant-aware working set — delegates to the single
+    model on `KernelParams.vmem_bytes` (plus the fused-epilogue aux buffers
+    of a `templates.KernelSpec`) so search legality and budget clamping can
     never disagree."""
-    return p.vmem_bytes(in_bytes, ft_level)
+    extra = spec.extra_vmem_bytes(p.bm, p.bn, in_bytes) if spec else 0
+    return p.vmem_bytes(in_bytes, ft_level) + extra
 
 
 def _tile_range(dim: int, max_tile: int = MAX_TILE) -> List[int]:
@@ -63,17 +65,18 @@ def _tile_range(dim: int, max_tile: int = MAX_TILE) -> List[int]:
 
 
 def enumerate_candidates(m: int, n: int, k: int, *, in_bytes: int = 4,
-                         ft_level: str = "off",
+                         ft_level: str = "off", spec=None,
                          max_tile: int = MAX_TILE) -> List[KernelParams]:
     """All legal tile configs for the problem: MXU-aligned in every dim,
-    no larger than the MXU-padded problem, within the VMEM budget."""
+    no larger than the MXU-padded problem, within the VMEM budget (fused
+    epilogue aux buffers included when a `spec` is given)."""
     cls = classify(m, n, k)
     out = []
     for bm in _tile_range(m, max_tile):
         for bn in _tile_range(n, max_tile):
             for bk in _tile_range(k, max_tile):
                 p = KernelParams(bm=bm, bn=bn, bk=bk, shape_class=cls)
-                if vmem_bytes(p, in_bytes, ft_level) <= VMEM_BUDGET:
+                if vmem_bytes(p, in_bytes, ft_level, spec) <= VMEM_BUDGET:
                     out.append(p)
     return out
 
@@ -106,20 +109,29 @@ def ft_overhead_flops(p: KernelParams, ft_level: str, k_steps: int,
 
 
 def predicted_time_s(m: int, n: int, k: int, p: KernelParams, *,
-                     in_bytes: int = 4, ft_level: str = "off") -> float:
+                     in_bytes: int = 4, ft_level: str = "off",
+                     spec=None) -> float:
     """Roofline score of one candidate on the (padded) problem.
 
     HBM traffic model: each A tile is streamed once per output-column of
     tiles and each B tile once per output-row of tiles (no cross-block L2
     reuse on TPU — VMEM is the only cache we control), plus one output
-    write. Compute: 2·M·N·K MACs on executed dims + checksum updates."""
+    write. Compute: 2·M·N·K MACs on executed dims + checksum updates. A
+    fused-epilogue `spec` adds its aux-operand reads and elementwise FLOPs
+    (`KernelSpec.extra_hbm_bytes` / `epilogue_flops`) — the variant shifts
+    the roofline intensity, which is why it is part of the tuning key."""
     me, ne, ke = executed_dims(m, n, k, p)
     gm, gn, gk = me // p.bm, ne // p.bn, ke // p.bk
     flops = 2.0 * me * ne * ke + ft_overhead_flops(p, ft_level, gk, gm * gn)
     a_bytes = gn * me * ke * in_bytes
     b_bytes = gm * ke * ne * in_bytes
     c_bytes = me * ne * in_bytes
-    return roofline.kernel_time_s(flops, a_bytes + b_bytes + c_bytes)
+    extra_bytes = 0.0
+    if spec is not None:
+        flops += spec.epilogue_flops(me, ne)
+        extra_bytes = spec.extra_hbm_bytes(me, ne, in_bytes)
+    return roofline.kernel_time_s(flops,
+                                  a_bytes + b_bytes + c_bytes + extra_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -193,15 +205,20 @@ def measure_candidates(m: int, n: int, k: int,
 # ---------------------------------------------------------------------------
 
 def select_best(m: int, n: int, k: int, *, in_bytes: int = 4,
-                ft_level: str = "off", measure: Optional[bool] = None,
+                ft_level: str = "off", spec=None,
+                measure: Optional[bool] = None,
                 max_tile: int = MAX_TILE,
                 candidates: Optional[Sequence[KernelParams]] = None
                 ) -> KernelParams:
     """The search: enumerate → score (hardware when available, roofline
-    model otherwise) → deterministic winner (ties → larger tiles)."""
+    model otherwise) → deterministic winner (ties → larger tiles). The
+    measured path times the base kernel of the requested FT level (epilogue
+    chains perturb runtime well under timer noise on hardware; the modeled
+    path accounts them exactly)."""
     cands = list(candidates if candidates is not None else
                  enumerate_candidates(m, n, k, in_bytes=in_bytes,
-                                      ft_level=ft_level, max_tile=max_tile))
+                                      ft_level=ft_level, spec=spec,
+                                      max_tile=max_tile))
     if not cands:
         raise ValueError(f"no legal tile candidates for {(m, n, k)}")
     if measure is None:
@@ -211,7 +228,8 @@ def select_best(m: int, n: int, k: int, *, in_bytes: int = 4,
             m, n, k, cands, in_bytes=in_bytes, ft_level=ft_level)]
     else:
         scores = [predicted_time_s(m, n, k, p, in_bytes=in_bytes,
-                                   ft_level=ft_level) for p in cands]
+                                   ft_level=ft_level, spec=spec)
+                  for p in cands]
     return min(zip(scores, cands),
                key=lambda sp: (sp[0], -sp[1].bm * sp[1].bn, -sp[1].bk))[1]
 

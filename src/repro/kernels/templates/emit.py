@@ -1,0 +1,325 @@
+"""Kernel-body emitter: `render(spec, …)` → one parameterized Pallas kernel.
+
+This is the template engine the paper's code generator maps onto (§3.2): a
+single source body, specialized at trace time by a `KernelSpec`, replaces
+the four hand-duplicated plain/masked × FT/non-FT kernels the repo used to
+carry. The body is composed of stages:
+
+  prologue  — scratch init on the first k-step (accumulator, running
+              checksums, operand-magnitude trackers, report block);
+  mac       — operand load (+ ragged masking from scalar-prefetched true
+              dims), the MXU MAC, the emulated-SEU hook, and the running
+              column/row checksum updates for the requested FT level (the
+              paper's "fuse ABFT memory ops with the prefetching stage" —
+              checksums ride the operand tiles already in VMEM);
+  verify    — per-k-step detection/location/branchless correction
+              (verify="step") on intermediate steps;
+  epilogue  — on the last k-step: the *linear prefix* of the epilogue chain
+              is applied to the accumulator and folded into the checksum
+              comparison (so the final verification — and hence detection
+              AND correction — runs post-epilogue), then the nonlinear
+              suffix, the out-dtype cast, and the single HBM writeback.
+
+Fusing the chain here is what keeps ABFT (and bias/activation/residual)
+from costing a second HBM round-trip over C — FT-BLAS's fusion argument
+applied to the whole epilogue.
+
+Layout of the generated kernel's positional refs (see `Layout`):
+
+    [inj_idx, inj_mag, dims]?  scalar prefetch   (FT: all 3; masked-only: dims)
+    a, b [, bias][, residual]  VMEM inputs
+    out [, report]             VMEM outputs
+    acc [, colck, rowck]       VMEM scratch
+    [amax, bmax]               SMEM scratch      (FT threshold trackers)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import epilogues
+from .spec import KernelSpec
+
+F32EPS = float(jnp.finfo(jnp.float32).eps)
+REPORT_WIDTH = 8
+MXU = 128
+
+
+def _iota2(shape, dim):
+    return jax.lax.broadcasted_iota(jnp.int32, shape, dim)
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Ref-list layout of a rendered kernel — shared contract between the
+    emitter (which unpacks) and the registry (which builds the specs)."""
+    n_prefetch: int
+    n_inputs: int
+    n_outputs: int
+    n_vmem_scratch: int
+    n_smem_scratch: int
+
+
+def layout(spec: KernelSpec) -> Layout:
+    aux = int(spec.needs_bias) + int(spec.needs_residual)
+    if spec.ft:
+        return Layout(3, 2 + aux, 2, 3, 2)
+    return Layout(1 if spec.masked else 0, 2 + aux, 1, 1, 0)
+
+
+# ---------------------------------------------------------------------------
+# shared FT primitives (moved from kernels/ftgemm.py — single-sourced here)
+# ---------------------------------------------------------------------------
+
+def _locate_correct_full(acc, d_col, d_row, tau, corrects, bm, bn):
+    """Locate a single error from checksum residuals and (optionally) apply
+    the branchless correction. Returns (acc', detected, magnitude, row, col)."""
+    dc = d_col[0, :]
+    dr = d_row[:, 0]
+    col = jnp.argmax(jnp.abs(dc)).astype(jnp.int32)
+    row = jnp.argmax(jnp.abs(dr)).astype(jnp.int32)
+    mag_c = jnp.max(jnp.abs(dc))
+    mag_r = jnp.max(jnp.abs(dr))
+    detected = jnp.maximum(mag_c, mag_r) > tau
+    # Canonical magnitude from the column residual (signed).
+    mag = jnp.where(detected, jnp.sum(jnp.where(
+        jax.lax.iota(jnp.int32, bn) == col, dc, 0.0)), 0.0)
+    if corrects:
+        hit = ((_iota2((bm, bn), 0) == row) & (_iota2((bm, bn), 1) == col)
+               & detected)
+        acc = acc - jnp.where(hit, mag, 0.0)
+    return acc, detected, mag, row, col
+
+
+def _record(rep_ref, det, mag, row_g, col_g, d_col, d_row, tau, k_elapsed,
+            corrects):
+    detf = det.astype(jnp.float32)
+    resid = jnp.maximum(jnp.max(jnp.abs(d_col)), jnp.max(jnp.abs(d_row)))
+    rep_ref[0, 0, 0] += detf
+    rep_ref[0, 0, 1] += detf if corrects else 0.0
+    rep_ref[0, 0, 2] = jnp.where(det, row_g.astype(jnp.float32),
+                                 rep_ref[0, 0, 2])
+    rep_ref[0, 0, 3] = jnp.where(det, col_g.astype(jnp.float32),
+                                 rep_ref[0, 0, 3])
+    rep_ref[0, 0, 4] = jnp.where(det, mag, rep_ref[0, 0, 4])
+    rep_ref[0, 0, 5] = jnp.maximum(rep_ref[0, 0, 5], resid)
+    rep_ref[0, 0, 6] = tau
+    rep_ref[0, 0, 7] = k_elapsed
+
+
+# ---------------------------------------------------------------------------
+# the template
+# ---------------------------------------------------------------------------
+
+def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
+           n_bands: int = 1, verify_step: bool = True, corrects: bool = True,
+           rel_tau: float = 64.0):
+    """Instantiate the kernel body for `spec` with the given static
+    parameters. Returns a function matching `layout(spec)`'s ref list."""
+    ft = spec.ft
+    mode = spec.ft_level
+    masked = spec.masked
+    chain = [epilogues.get(n) for n in spec.epilogue]
+    # Linear-prefix fold is a block-mode feature: tile/inner keep their
+    # per-band / per-step verification on the raw accumulator and apply the
+    # whole chain afterwards (correction has already happened by then).
+    split = spec.fold_split() if (ft and mode == "block") else 0
+    acc_dt = jnp.dtype(spec.acc_dtype)
+
+    def kernel(*refs):
+        refs = list(refs)
+        if ft:
+            inj_idx_ref, inj_mag_ref, dims_ref = refs[:3]
+            del refs[:3]
+        else:
+            inj_idx_ref = inj_mag_ref = None
+            dims_ref = refs.pop(0) if masked else None
+        a_ref = refs.pop(0)
+        b_ref = refs.pop(0)
+        bias_ref = refs.pop(0) if spec.needs_bias else None
+        res_ref = refs.pop(0) if spec.needs_residual else None
+        out_ref = refs.pop(0)
+        rep_ref = refs.pop(0) if ft else None
+        acc_ref = refs.pop(0)
+        colck_ref = rowck_ref = amax_ref = bmax_ref = None
+        if ft:
+            colck_ref, rowck_ref, amax_ref, bmax_ref = refs
+
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        s = pl.program_id(2)
+        last = s == k_steps - 1
+
+        def _aux(op):
+            if op.aux == "vector":
+                return bias_ref[...].astype(jnp.float32)
+            if op.aux == "tile":
+                return res_ref[...].astype(jnp.float32)
+            return None
+
+        # ---- prologue: first-step scratch init ---------------------------
+        @pl.when(s == 0)
+        def _prologue():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            if ft:
+                colck_ref[...] = jnp.zeros_like(colck_ref)
+                rowck_ref[...] = jnp.zeros_like(rowck_ref)
+                amax_ref[0, 0] = 0.0
+                bmax_ref[0, 0] = 0.0
+                rep_ref[...] = jnp.zeros_like(rep_ref)
+
+        # ---- mac: load (+ragged mask), MAC, checksums --------------------
+        a = a_ref[...]
+        b = b_ref[...]
+        if masked:
+            # Ragged dispatch: zero everything past the true (m, n, k)
+            # carried in via scalar prefetch. The checksum math then sees
+            # exactly zero-padding semantics (checksums of zero rows/cols
+            # are zero), so ABFT survives the ragged edges and garbage in
+            # the padded region (even NaN/Inf) cannot leak into the
+            # accumulator or the running checksums.
+            tm, tn, tk = dims_ref[0], dims_ref[1], dims_ref[2]
+            a_ok = ((i * bm + _iota2((bm, bk), 0) < tm)
+                    & (s * bk + _iota2((bm, bk), 1) < tk))
+            b_ok = ((s * bk + _iota2((bk, bn), 0) < tk)
+                    & (j * bn + _iota2((bk, bn), 1) < tn))
+            a = jnp.where(a_ok, a, jnp.zeros_like(a))
+            b = jnp.where(b_ok, b, jnp.zeros_like(b))
+
+        if not ft:
+            acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32
+                                    ).astype(acc_dt)
+
+            @pl.when(last)
+            def _flush_plain():
+                y = acc_ref[...].astype(jnp.float32)
+                for op in chain:
+                    y = op.apply(y, _aux(op))
+                out_ref[...] = y.astype(out_ref.dtype)
+            return
+
+        af = a.astype(jnp.float32)
+        bf = b.astype(jnp.float32)
+
+        # Running operand-magnitude bounds for the rounding-aware threshold
+        # — free: the tiles are already in VMEM (the fused-with-prefetch
+        # point).
+        amax_ref[0, 0] = jnp.maximum(amax_ref[0, 0], jnp.max(jnp.abs(af)))
+        bmax_ref[0, 0] = jnp.maximum(bmax_ref[0, 0], jnp.max(jnp.abs(bf)))
+        k_elapsed = (s + 1).astype(jnp.float32) * bk
+        if masked:
+            # Rounding-error accumulation stops at the true K.
+            k_elapsed = jnp.minimum(k_elapsed,
+                                    dims_ref[2].astype(jnp.float32))
+        tau = jnp.maximum(rel_tau * F32EPS * k_elapsed
+                          * amax_ref[0, 0] * bmax_ref[0, 0], 1e-30)
+
+        delta = jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+        # ---- emulated SEU (scalar-prefetched spec) -----------------------
+        enable, g_row, g_col, inj_k = (inj_idx_ref[0], inj_idx_ref[1],
+                                       inj_idx_ref[2], inj_idx_ref[3])
+        r_loc = g_row - i * bm
+        c_loc = g_col - j * bn
+        hit_now = ((enable == 1) & (s == inj_k)
+                   & (r_loc >= 0) & (r_loc < bm)
+                   & (c_loc >= 0) & (c_loc < bn))
+        hit_mask = ((_iota2((bm, bn), 0) == r_loc)
+                    & (_iota2((bm, bn), 1) == c_loc)
+                    & hit_now)
+        delta = delta + jnp.where(hit_mask, inj_mag_ref[0], 0.0)
+
+        # ---- checksum maintenance + intermediate verification ------------
+        if mode == "inner":
+            # Verify this step's contribution in isolation (thread-level
+            # analogue: smallest protected unit, no cross-step state).
+            ck_col = jnp.dot(jnp.sum(af, axis=0, keepdims=True), bf)
+            ck_row = jnp.dot(af, jnp.sum(bf, axis=1, keepdims=True))
+            d_col = jnp.sum(delta, axis=0, keepdims=True) - ck_col
+            d_row = jnp.sum(delta, axis=1, keepdims=True) - ck_row
+            delta, det, mag, row_l, col_l = _locate_correct_full(
+                delta, d_col, d_row, tau, corrects, bm, bn)
+            acc_ref[...] += delta
+            _record(rep_ref, det, mag, row_l + i * bm, col_l + j * bn,
+                    d_col, d_row, tau, k_elapsed, corrects)
+        else:
+            acc_ref[...] += delta
+            if mode == "block":
+                colck_ref[...] += jnp.dot(jnp.sum(af, axis=0, keepdims=True),
+                                          bf)
+            else:  # mode == "tile": one running column checksum per MXU band
+                for t in range(n_bands):
+                    colck_ref[t:t + 1, :] += jnp.dot(
+                        jnp.sum(af[t * MXU:(t + 1) * MXU], axis=0,
+                                keepdims=True), bf)
+            rowck_ref[...] += jnp.dot(af, jnp.sum(bf, axis=1, keepdims=True))
+
+            def _verify_raw():
+                acc = acc_ref[...]
+                d_row = (jnp.sum(acc, axis=1, keepdims=True)
+                         - rowck_ref[...])
+                if mode == "block":
+                    d_col = (jnp.sum(acc, axis=0, keepdims=True)
+                             - colck_ref[0:1, :])
+                    new_acc, det, mag, row_l, col_l = _locate_correct_full(
+                        acc, d_col, d_row, tau, corrects, bm, bn)
+                    acc_ref[...] = new_acc
+                    _record(rep_ref, det, mag, row_l + i * bm,
+                            col_l + j * bn, d_col, d_row, tau, k_elapsed,
+                            corrects)
+                else:
+                    # Per-band verification & correction (one SEU per band).
+                    for t in range(n_bands):
+                        band = acc[t * MXU:(t + 1) * MXU]
+                        d_col = (jnp.sum(band, axis=0, keepdims=True)
+                                 - colck_ref[t:t + 1, :])
+                        d_row_b = d_row[t * MXU:(t + 1) * MXU]
+                        new_band, det, mag, row_l, col_l = \
+                            _locate_correct_full(band, d_col, d_row_b, tau,
+                                                 corrects, MXU, bn)
+                        acc_ref[t * MXU:(t + 1) * MXU, :] = new_band
+                        _record(rep_ref, det, mag,
+                                row_l + i * bm + t * MXU, col_l + j * bn,
+                                d_col, d_row_b, tau, k_elapsed, corrects)
+
+            if verify_step:
+                pl.when(jnp.logical_not(last))(_verify_raw)
+
+        # ---- epilogue: fold, final verify, chain, cast, writeback --------
+        @pl.when(last)
+        def _flush():
+            if mode == "block":
+                acc = acc_ref[...]
+                colck = colck_ref[0:1, :]
+                rowck = rowck_ref[...]
+                # Fold the linear prefix into the checksum comparison: the
+                # final verification (and the branchless correction it
+                # drives) runs on the post-epilogue values.
+                for op in chain[:split]:
+                    aux = _aux(op)
+                    acc = op.apply(acc, aux)
+                    colck, rowck = op.fold(colck, rowck, aux, bm)
+                d_col = jnp.sum(acc, axis=0, keepdims=True) - colck
+                d_row = jnp.sum(acc, axis=1, keepdims=True) - rowck
+                acc, det, mag, row_l, col_l = _locate_correct_full(
+                    acc, d_col, d_row, tau, corrects, bm, bn)
+                _record(rep_ref, det, mag, row_l + i * bm, col_l + j * bn,
+                        d_col, d_row, tau, k_elapsed, corrects)
+                for op in chain[split:]:
+                    acc = op.apply(acc, _aux(op))
+                out_ref[...] = acc.astype(out_ref.dtype)
+            else:
+                if mode == "tile":
+                    _verify_raw()          # corrects acc_ref in place
+                # "inner" verified every step already.
+                y = acc_ref[...]
+                for op in chain:
+                    y = op.apply(y, _aux(op))
+                out_ref[...] = y.astype(out_ref.dtype)
+
+    kernel.__name__ = f"gemm_{spec.ft_level}" + ("_masked" if masked else "") \
+        + ("".join("_" + n for n in spec.epilogue))
+    return kernel

@@ -1,0 +1,157 @@
+"""Registered epilogue operations for the kernel-template subsystem.
+
+An *epilogue op* is one step of the fused post-GEMM chain a `KernelSpec`
+requests (bias-add, activation, residual-add, …). Each op carries everything
+the emitter (`templates.emit`) and the autotuner (`kernels.search`) need to
+reason about it:
+
+  * ``apply(y, aux)``       — the math, on the f32 accumulator tile. The
+    same callable is used by the generated Pallas kernel body and by the
+    pure-jnp oracle (`kernels.ref.fused_matmul_ref`), so fused and unfused
+    compositions agree by construction.
+  * ``linear``              — whether the op commutes with the Huang–Abraham
+    checksum algebra. Linear ops in the leading prefix of a chain are folded
+    *into* the final checksum comparison (`fold`), so ABFT verification runs
+    post-epilogue; the first nonlinear op ends the foldable prefix and
+    verification happens just before it (the latest point where the linear
+    invariant still holds — same reasoning as flashft verifying scores
+    before softmax).
+  * ``fold(colck, rowck, aux, rows)`` — the checksum shift of a linear op:
+    returns the (column, row) checksums of ``apply(y, aux)`` given those of
+    ``y``. ``rows`` is the static tile row count (every tile row receives a
+    broadcast bias, including masked padding rows — zero-padded aux operands
+    keep the algebra exact on ragged tiles).
+  * ``aux``                 — the streamed operand the op needs: ``None``
+    (pure elementwise), ``"vector"`` (a (1, bn) slice of an N-vector, e.g.
+    bias), or ``"tile"`` (a (bm, bn) slice of an (M, N) array, e.g.
+    residual).
+
+New ops are added with `register` — see the worked example in the
+`repro.kernels` package docstring.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+_SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueOp:
+    name: str
+    linear: bool
+    apply: Callable            # (y, aux) -> y'   (aux is None for elementwise)
+    aux: Optional[str] = None  # None | "vector" | "tile"
+    fold: Optional[Callable] = None  # (colck, rowck, aux, rows) -> (colck, rowck)
+
+    def __post_init__(self):
+        if self.linear and self.fold is None:
+            raise ValueError(
+                f"linear epilogue '{self.name}' needs a checksum fold rule "
+                f"(block-mode FT folds every linear-prefix op into the "
+                f"final comparison); register ops without one as "
+                f"linear=False to end the foldable prefix instead")
+
+
+REGISTRY: Dict[str, EpilogueOp] = {}
+
+
+def register(op: EpilogueOp, overwrite: bool = False) -> EpilogueOp:
+    """Add an epilogue op to the registry (it becomes legal in any
+    `KernelSpec.epilogue` chain and is picked up by the conformance sweep in
+    tests/test_templates.py)."""
+    if op.name in REGISTRY and not overwrite:
+        raise ValueError(f"epilogue '{op.name}' already registered")
+    REGISTRY[op.name] = op
+    return op
+
+
+def get(name: str) -> EpilogueOp:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown epilogue '{name}'; registered: "
+                       f"{sorted(REGISTRY)}") from None
+
+
+def names():
+    return sorted(REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# activations (elementwise, nonlinear)
+# ---------------------------------------------------------------------------
+# Explicit formulas (not jax.nn.*) so the generated kernel body lowers
+# through Mosaic with no surprises and the oracle uses bit-identical math.
+
+def _relu(y, aux):
+    return jnp.maximum(y, 0.0)
+
+
+def _silu(y, aux):
+    return y * (1.0 / (1.0 + jnp.exp(-y)))
+
+
+def _gelu(y, aux):
+    # tanh approximation — matches jax.nn.gelu(approximate=True).
+    return 0.5 * y * (1.0 + jnp.tanh(_SQRT_2_OVER_PI
+                                     * (y + 0.044715 * y * y * y)))
+
+
+def activation(name: str) -> Callable:
+    """The unary activation function of a registered elementwise op —
+    shared by the jnp ABFT path (core.ft_gemm) and the oracles."""
+    op = get(name)
+    if op.aux is not None:
+        raise ValueError(f"'{name}' is not an elementwise activation")
+    return lambda y: op.apply(y, None)
+
+
+# ---------------------------------------------------------------------------
+# linear ops with aux operands + their checksum folds
+# ---------------------------------------------------------------------------
+
+def _bias_apply(y, aux):
+    return y + aux                      # aux: (1, bn), broadcasts over rows
+
+
+def _bias_fold(colck, rowck, aux, rows):
+    # Every tile row gains aux → column sums shift by rows·aux, row sums by
+    # Σ aux (zero over padded cols because ops.py zero-pads the vector).
+    return colck + float(rows) * aux, rowck + jnp.sum(aux)
+
+
+def _residual_apply(y, aux):
+    return y + aux                      # aux: (bm, bn)
+
+
+def _residual_fold(colck, rowck, aux, rows):
+    return (colck + jnp.sum(aux, axis=0, keepdims=True),
+            rowck + jnp.sum(aux, axis=1, keepdims=True))
+
+
+register(EpilogueOp("bias", linear=True, apply=_bias_apply, aux="vector",
+                    fold=_bias_fold))
+register(EpilogueOp("residual", linear=True, apply=_residual_apply,
+                    aux="tile", fold=_residual_fold))
+register(EpilogueOp("relu", linear=False, apply=_relu))
+register(EpilogueOp("silu", linear=False, apply=_silu))
+register(EpilogueOp("gelu", linear=False, apply=_gelu))
+
+
+def reference_apply(chain, y, *, bias=None, residual=None):
+    """Unfused oracle composition: apply the chain to a full (M, N) f32
+    array, pulling aux operands by kind. Tests compare every generated
+    kernel variant against this."""
+    aux_of = {"vector": bias, "tile": residual}
+    for name in chain:
+        op = get(name)
+        aux = aux_of[op.aux] if op.aux is not None else None
+        if op.aux is not None and aux is None:
+            raise ValueError(f"epilogue '{name}' needs a {op.aux} operand")
+        y = op.apply(y, None if aux is None else aux.astype(jnp.float32))
+    return y

@@ -1,0 +1,148 @@
+"""Variant registry: KernelSpec + KernelParams → a ready pallas_call.
+
+`kernel_call` is the single launch point every GEMM kernel in the repo now
+routes through — `kernels.gemm.gemm/gemm_masked`, `kernels.ftgemm.ft_gemm`,
+and `kernels.ops.gemm_call` are all thin wrappers over it. Rendering and
+compilation are memoized by jit's static-argument cache (the spec and
+params are frozen dataclasses), so each (spec, params, grid) variant is
+rendered once per process.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policy import FTConfig
+from ..pallas_compat import CompilerParams as _CompilerParams
+from ..autotune import MXU, KernelParams
+from . import emit
+from .spec import KernelSpec
+
+REPORT_WIDTH = emit.REPORT_WIDTH
+
+
+def validate(spec: KernelSpec, params: KernelParams, m: int, n: int, k: int,
+             in_bytes: int = 4) -> None:
+    """Static legality of a launch: the operands must divide the tile grid,
+    and bm must respect the variant's alignment floor — MXU-aligned for
+    unmasked tiles and for "tile" mode (whose per-band checksums slice the
+    accumulator in MXU-row bands), sublane-aligned for masked ragged
+    tiles."""
+    bm, bn, bk = params.bm, params.bn, params.bk
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        ((m, n, k), params, spec)
+    from .. import search
+    need = MXU if (spec.ft_level == "tile" or not spec.masked) \
+        else search.sublane(in_bytes)
+    assert bm % need == 0, (params, spec)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "params", "ft", "interpret",
+                                    "out_dtype"))
+def kernel_call(a: jax.Array, b: jax.Array,
+                bias: Optional[jax.Array] = None,
+                residual: Optional[jax.Array] = None,
+                inj_idx: Optional[jax.Array] = None,
+                inj_mag: Optional[jax.Array] = None,
+                dims: Optional[jax.Array] = None, *,
+                spec: KernelSpec, params: KernelParams,
+                ft: Optional[FTConfig] = None,
+                interpret: bool = False, out_dtype=None):
+    """Launch the rendered variant. Returns (C, report) — report is None
+    for non-FT specs.
+
+    Operand contract (enforced by `kernels.ops.gemm_call`, the padding
+    front door): a (M, K), b (K, N) padded to the tile grid; bias (1, N)
+    and residual (M, N) zero-padded likewise; for FT specs inj_idx int32[4]
+    / inj_mag f32[1] (see `ftgemm.encode_injection`); dims int32[3] true
+    (m, n, k) for masked specs (ignored but required for unmasked FT)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    validate(spec, params, m, n, k, a.dtype.itemsize)
+    bm, bn, bk = params.bm, params.bn, params.bk
+    grid = (m // bm, n // bn, k // bk)
+    out_dtype = out_dtype or (jnp.dtype(spec.out_dtype) if spec.out_dtype
+                              else a.dtype)
+    n_bands = bm // MXU if spec.ft_level == "tile" else 1
+    ft = ft or FTConfig(level=spec.ft_level if spec.ft else "block",
+                        action="correct" if spec.ft else "off")
+
+    kernel = emit.render(
+        spec, k_steps=grid[2], bm=bm, bn=bn, bk=bk, n_bands=n_bands,
+        verify_step=(ft.verify == "step"), corrects=ft.corrects,
+        rel_tau=ft.rel_tau)
+    lay = emit.layout(spec)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, s, *_: (i, s)),
+        pl.BlockSpec((bk, bn), lambda i, j, s, *_: (s, j)),
+    ]
+    operands = [a, b]
+    if spec.needs_bias:
+        assert bias is not None and bias.shape == (1, n), \
+            (None if bias is None else bias.shape, n)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s, *_: (0, j)))
+        operands.append(bias)
+    if spec.needs_residual:
+        assert residual is not None and residual.shape == (m, n), \
+            (None if residual is None else residual.shape, (m, n))
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, s, *_: (i, j)))
+        operands.append(residual)
+
+    out_specs = [pl.BlockSpec((bm, bn), lambda i, j, s, *_: (i, j))]
+    out_shape = [jax.ShapeDtypeStruct((m, n), out_dtype)]
+    scratch = [pltpu.VMEM((bm, bn), jnp.dtype(spec.acc_dtype))]
+    prefetch = []
+    if spec.ft:
+        assert inj_idx is not None and inj_mag is not None
+        if dims is None:
+            dims = jnp.array([m, n, k], jnp.int32)
+        prefetch = [inj_idx, inj_mag, dims]
+        out_specs.append(pl.BlockSpec((1, 1, REPORT_WIDTH),
+                                      lambda i, j, s, *_: (i, j, 0)))
+        out_shape.append(jax.ShapeDtypeStruct(
+            (grid[0], grid[1], REPORT_WIDTH), jnp.float32))
+        scratch += [pltpu.VMEM((n_bands, bn), jnp.float32),
+                    pltpu.VMEM((bm, 1), jnp.float32),
+                    pltpu.SMEM((1, 1), jnp.float32),
+                    pltpu.SMEM((1, 1), jnp.float32)]
+    elif spec.masked:
+        assert dims is not None
+        prefetch = [dims]
+    assert len(prefetch) == lay.n_prefetch and len(operands) == lay.n_inputs
+
+    compiler_params = _CompilerParams(
+        dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
+                             pltpu.ARBITRARY))
+
+    if prefetch:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=len(prefetch),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs if spec.ft else out_specs[0],
+            scratch_shapes=scratch,
+        )
+        call = pl.pallas_call(
+            kernel, grid_spec=grid_spec,
+            out_shape=out_shape if spec.ft else out_shape[0],
+            compiler_params=compiler_params, interpret=interpret)
+        result = call(*prefetch, *operands)
+    else:
+        call = pl.pallas_call(
+            kernel, grid=grid, in_specs=in_specs, out_specs=out_specs[0],
+            out_shape=out_shape[0], scratch_shapes=scratch,
+            compiler_params=compiler_params, interpret=interpret)
+        result = call(*operands)
+
+    if spec.ft:
+        out, rep = result
+        return out, rep
+    return result, None

@@ -1,0 +1,143 @@
+"""`KernelSpec` — the declarative description of one GEMM kernel variant.
+
+A spec names a point in the template subsystem's variant space:
+
+    ft_level (off/inner/tile/block)  ×  masked/plain dispatch
+        ×  epilogue chain (bias, activation, residual, …)
+        ×  accumulate dtype  ×  output dtype cast
+
+`templates.emit.render` turns a spec into a single parameterized Pallas
+kernel body; `templates.registry.kernel_call` wraps it in the pallas_call;
+`kernels.ops.gemm_call` is the dispatching front door. The spec is frozen
+and hashable so it can serve as a jit static argument and as part of the
+autotuning cache key (`variant_key`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from . import epilogues
+
+FT_LEVELS = ("off", "inner", "tile", "block")
+
+#: dtype string → (short tag, element bytes) for variant keys / VMEM math.
+_DTYPES = {"float32": ("f32", 4), "bfloat16": ("bf16", 2),
+           "float16": ("f16", 2)}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    ft_level: str = "off"
+    masked: bool = False
+    epilogue: Tuple[str, ...] = ()
+    acc_dtype: str = "float32"
+    out_dtype: Optional[str] = None   # None → follow the input dtype
+
+    def __post_init__(self):
+        if self.ft_level not in FT_LEVELS:
+            raise ValueError(f"ft_level must be one of {FT_LEVELS}, "
+                             f"got {self.ft_level!r}")
+        object.__setattr__(self, "epilogue", tuple(self.epilogue))
+        seen_aux = set()
+        for name in self.epilogue:
+            op = epilogues.get(name)            # raises on unknown ops
+            if op.aux is not None:
+                if op.aux in seen_aux:
+                    raise ValueError(f"chain {self.epilogue} streams two "
+                                     f"'{op.aux}' aux operands")
+                seen_aux.add(op.aux)
+        if self.acc_dtype not in _DTYPES:
+            raise ValueError(f"unsupported acc_dtype {self.acc_dtype!r}")
+        if self.ft and self.acc_dtype != "float32":
+            raise ValueError("FT variants accumulate in float32 (the "
+                             "checksum algebra's dtype)")
+        if self.out_dtype is not None and self.out_dtype not in _DTYPES:
+            raise ValueError(f"unsupported out_dtype {self.out_dtype!r}")
+
+    # -- structure ---------------------------------------------------------
+
+    @property
+    def ft(self) -> bool:
+        return self.ft_level != "off"
+
+    @property
+    def needs_bias(self) -> bool:
+        return any(epilogues.get(n).aux == "vector" for n in self.epilogue)
+
+    @property
+    def needs_residual(self) -> bool:
+        return any(epilogues.get(n).aux == "tile" for n in self.epilogue)
+
+    def fold_split(self) -> int:
+        """Index splitting the chain into the linear prefix (folded into the
+        final checksum comparison, so verification runs post-epilogue) and
+        the suffix applied after verification (everything from the first
+        nonlinear op on)."""
+        for i, name in enumerate(self.epilogue):
+            if not epilogues.get(name).linear:
+                return i
+        return len(self.epilogue)
+
+    # -- autotuning hooks --------------------------------------------------
+
+    def variant_key(self) -> str:
+        """Canonical variant component of the tuning-cache key. Empty for
+        the plain default variant so PR-1 cache entries stay valid."""
+        parts = []
+        if self.epilogue:
+            parts.append("+".join(self.epilogue))
+        if self.acc_dtype != "float32":
+            parts.append(f"acc{_DTYPES[self.acc_dtype][0]}")
+        if self.out_dtype is not None:
+            parts.append(f"out{_DTYPES[self.out_dtype][0]}")
+        return ".".join(parts)
+
+    def extra_vmem_bytes(self, bm: int, bn: int, in_bytes: int) -> int:
+        """Added VMEM working set of the fused epilogue: double-buffered aux
+        operand tiles (the accumulator itself is already counted by
+        `KernelParams.vmem_bytes`). Fused chains shift the budget, so the
+        candidate search must see this."""
+        extra = 0
+        if self.needs_bias:
+            extra += 2 * bn * in_bytes
+        if self.needs_residual:
+            extra += 2 * bm * bn * in_bytes
+        return extra
+
+    def epilogue_flops(self, me: int, ne: int) -> float:
+        """Elementwise epilogue FLOPs over the executed output (a small
+        roofline term — ~5 flops per nonlinear op element)."""
+        per_elem = sum(1.0 if epilogues.get(n).linear else 5.0
+                       for n in self.epilogue)
+        return per_elem * me * ne
+
+    def extra_hbm_bytes(self, me: int, ne: int, in_bytes: int) -> float:
+        """Added HBM traffic of the fused variant: aux operands are read
+        once. (The unfused composition instead re-reads AND re-writes the
+        whole C between passes — that delta is the fusion win the
+        fused_epilogue benchmark reports.)"""
+        extra = 0.0
+        if self.needs_bias:
+            extra += ne * in_bytes
+        if self.needs_residual:
+            extra += me * ne * in_bytes
+        return extra
+
+
+def fused(bias: bool = False, act: Optional[str] = None,
+          residual: bool = False, *, ft_level: str = "off",
+          out_dtype: Optional[str] = None) -> KernelSpec:
+    """Canonical-order spec builder: y = act(A·B + bias) + residual, cast to
+    out_dtype — the matmul→bias→activation(→residual) sequence the model
+    blocks used to run as separate passes."""
+    chain = []
+    if bias:
+        chain.append("bias")
+    if act is not None:
+        epilogues.get(act)
+        chain.append(act)
+    if residual:
+        chain.append("residual")
+    return KernelSpec(ft_level=ft_level, epilogue=tuple(chain),
+                      out_dtype=out_dtype)

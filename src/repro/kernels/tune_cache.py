@@ -40,16 +40,23 @@ def default_path() -> str:
 
 
 def cache_key(device_kind: str, shape_class: str, in_bytes: int,
-              ft_level: str, caps: Optional[Tuple[int, int, int]] = None
-              ) -> str:
+              ft_level: str, caps: Optional[Tuple[int, int, int]] = None,
+              variant: str = "") -> str:
     """`caps` is the search-space ceiling (per-dim max candidate tile) the
     triggering shape imposed. It must be part of the key: without it, a
     small shape that misses first would pin its capped winner onto every
     later same-class shape whose search space is wider (order-dependent
-    tuning)."""
+    tuning).
+
+    `variant` is the kernel-template variant (`KernelSpec.variant_key()` —
+    fused epilogue chain + non-default dtypes). Fused epilogues change the
+    VMEM budget and the roofline intensity, so two variants of one class
+    may tune to different tiles; the plain variant keeps the empty string
+    so PR-1 cache files stay valid."""
     dev = device_kind.strip().lower().replace(" ", "_")
     cap = "" if caps is None else f"/c{caps[0]}x{caps[1]}x{caps[2]}"
-    return f"{dev}/{shape_class}{cap}/b{in_bytes}/ft_{ft_level}"
+    var = f"/v_{variant}" if variant else ""
+    return f"{dev}/{shape_class}{cap}/b{in_bytes}/ft_{ft_level}{var}"
 
 
 class TuneCache:

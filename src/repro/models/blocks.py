@@ -19,7 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import ft_dot, ft_batched_dot, telemetry
+from repro.core import ft_dot, ft_dot_fused, ft_batched_dot, telemetry
 from repro.core import loops
 from repro.core.policy import FTConfig, FT_OFF
 
@@ -42,6 +42,15 @@ class Ctx:
 
     def dot(self, name: str, x: jax.Array, w: jax.Array) -> jax.Array:
         return ft_dot(x, w, ft=self.ft, key=self.subkey(name))
+
+    def dot_fused(self, name: str, x: jax.Array, w: jax.Array,
+                  bias: Optional[jax.Array] = None,
+                  act: Optional[str] = None) -> jax.Array:
+        """Projection with a fused epilogue spec: y = act(x @ w + bias) as
+        one kernel-level op (no separate bias/activation passes — see
+        repro.core.ft_dot_fused / the kernels.templates subsystem)."""
+        return ft_dot_fused(x, w, bias=bias, act=act, ft=self.ft,
+                            key=self.subkey(name))
 
     def bdot(self, name: str, a: jax.Array, b: jax.Array) -> jax.Array:
         ft = self.ft if self.ft.protect_attention else FT_OFF
@@ -236,13 +245,10 @@ def attention(p: Dict[str, Any], x: jax.Array, cfg, ctx: Ctx, *,
     """Full attention block (self- or cross-). x: (B, S, d)."""
     b, s, d = x.shape
     src = x if kv is None else kv
-    q = ctx.dot("wq", x, p["wq"])
-    k = ctx.dot("wk", src, p["wk"])
-    v = ctx.dot("wv", src, p["wv"])
-    if cfg.qkv_bias:
-        q = q + p["bq"]
-        k = k + p["bk"]
-        v = v + p["bv"]
+    # qkv biases ride the projection GEMMs as fused epilogue specs.
+    q = ctx.dot_fused("wq", x, p["wq"], bias=p.get("bq"))
+    k = ctx.dot_fused("wk", src, p["wk"], bias=p.get("bk"))
+    v = ctx.dot_fused("wv", src, p["wv"], bias=p.get("bv"))
     q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
     k = k.reshape(b, src.shape[1], cfg.n_kv_heads, cfg.head_dim)
     v = v.reshape(b, src.shape[1], cfg.n_kv_heads, cfg.head_dim)
@@ -270,9 +276,9 @@ def init_mlp(key, d: int, d_ff: int, n_layers: int, dtype) -> Dict[str, Any]:
 
 
 def mlp(p: Dict[str, Any], x: jax.Array, ctx: Ctx) -> jax.Array:
-    g = ctx.dot("w_gate", x, p["w_gate"])
+    g = ctx.dot_fused("w_gate", x, p["w_gate"], act="silu")  # fused epilogue
     u = ctx.dot("w_up", x, p["w_up"])
-    return ctx.dot("w_down", jax.nn.silu(g) * u, p["w_down"])
+    return ctx.dot("w_down", g * u, p["w_down"])
 
 
 # ---------------------------------------------------------------------------

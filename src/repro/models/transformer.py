@@ -171,11 +171,10 @@ def _shard_cache(cache):
 
 def _project_qkv(p, h, cfg: ModelConfig, ctx: Ctx, positions):
     b, s, _ = h.shape
-    q = ctx.dot("wq", h, p["wq"])
-    k = ctx.dot("wk", h, p["wk"])
-    v = ctx.dot("wv", h, p["wv"])
-    if cfg.qkv_bias:
-        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    # qkv biases ride the projection GEMMs as fused epilogue specs.
+    q = ctx.dot_fused("wq", h, p["wq"], bias=p.get("bq"))
+    k = ctx.dot_fused("wk", h, p["wk"], bias=p.get("bk"))
+    v = ctx.dot_fused("wv", h, p["wv"], bias=p.get("bv"))
     q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
     k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
     v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)

@@ -39,7 +39,8 @@ def init_gelu_mlp(key, d: int, d_ff: int, n_layers: int, dtype):
 
 
 def gelu_mlp(p, x, ctx: Ctx):
-    return ctx.dot("w2", jax.nn.gelu(ctx.dot("w1", x, p["w1"])), p["w2"])
+    h = ctx.dot_fused("w1", x, p["w1"], act="gelu")  # fused epilogue spec
+    return ctx.dot("w2", h, p["w2"])
 
 
 def _init_enc_layer(key, cfg, dtype):

@@ -73,6 +73,63 @@ def test_flash_ft_dtypes(dtype):
     assert float(rep[..., 0].sum()) == 0.0
 
 
+# ---------------------------------------------------------------------------
+# Ragged sequence lengths: masked dispatch via scalar-prefetched true dims
+# ---------------------------------------------------------------------------
+
+RAGGED_SEQS = [
+    (2, 100, 200, 64),       # both seq dims ragged
+    (1, 200, 200, 80),       # equal ragged (causal-compatible)
+    (2, 57, 131, 64),        # primes
+    (1, 300, 96, 128),       # skv < one kv block
+]
+
+
+@pytest.mark.parametrize("shape", RAGGED_SEQS)
+def test_flash_ft_ragged_noncausal(shape):
+    """Non-causal ragged Skv — previously asserted out (zero-padded K rows
+    scored 0 and leaked attention); now the kernel masks positions past the
+    scalar-prefetched true Skv to -inf, so any length is exact."""
+    bh, sq, skv, dh = shape
+    q, k, v = _qkv(bh, sq, skv, dh, seed=11)
+    out, rep = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK, causal=False)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    assert out.shape == (bh, sq, dh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert float(rep[..., 0].sum()) == 0.0, "false positive on ragged"
+
+
+def test_flash_ft_ragged_causal():
+    q, k, v = _qkv(1, 200, 200, 80, seed=12)
+    out, rep = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert float(rep[..., 0].sum()) == 0.0
+
+
+def test_flash_ft_ragged_corrects_injected_seu():
+    """ABFT must survive the ragged kv masking: one SEU in the PV
+    accumulator on a ragged shape is detected and corrected."""
+    q, k, v = _qkv(1, 200, 200, 64, seed=13)
+    spec = InjectionSpec(row=3, col=9, magnitude=500.0, k_step=0)
+    out, rep = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK, causal=True,
+                            spec=spec, inj_q_block=0)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert float(rep[..., 0].sum()) == 1.0
+
+
+def test_flash_ft_ragged_avoids_class_tile_padding():
+    """The seq blocks are fitted to the ragged lengths (sublane-aligned
+    bq), not padded to full 128-tiles: sq=200 runs as one 200-row block."""
+    from repro.kernels import search
+    assert search.fit_tile(200, 256, 8) == 200
+    assert search.fit_tile(100, 128, 8) == 104
+
+
 @settings(max_examples=8, deadline=None)
 @given(row=st.integers(0, 127), col=st.integers(0, 63),
        kv_step=st.integers(0, 1), mag=st.floats(10.0, 1e5),

@@ -1,0 +1,338 @@
+"""Kernel-template subsystem validation: every registered variant
+(ft_level × masked/plain × epilogue chain) against the unfused two-pass
+oracle composition, ABFT injection round-trips through every epilogue
+chain, spec validation, variant-aware tuning keys, and the
+register-a-new-epilogue extension path."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro.kernels import autotune, ops, ref, tune_cache
+from repro.kernels.templates import KernelSpec, epilogues, registry
+from repro.kernels.templates import spec as spec_mod
+from repro.core.policy import FTConfig, InjectionSpec
+
+P128 = autotune.KernelParams(128, 128, 128)
+
+#: Every epilogue chain shipped by the registry (plus the empty chain —
+#: the legacy plain variant), in canonical bias→act→residual order.
+CHAINS = [
+    (),
+    ("bias",),
+    ("relu",),
+    ("gelu",),
+    ("silu",),
+    ("residual",),
+    ("bias", "gelu"),
+    ("bias", "silu"),
+    ("bias", "residual"),
+    ("bias", "relu", "residual"),
+    ("bias", "gelu", "residual"),
+]
+
+#: Per-dtype tolerances (fused applies the chain to the f32 accumulator;
+#: the oracle composes the same formulas — differences are rounding-level).
+TOL = {jnp.float32: (1e-5, 1e-3), jnp.bfloat16: (2e-2, 2e-1)}
+
+
+def _rand(shape, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+def _operands(m, n, k, dtype, seed=0):
+    a = _rand((m, k), dtype, seed)
+    b = _rand((k, n), dtype, seed + 1)
+    bias = _rand((n,), dtype, seed + 2)
+    res = _rand((m, n), dtype, seed + 3)
+    return a, b, bias, res
+
+
+def _maybe(chain, bias, res):
+    return (bias if "bias" in chain else None,
+            res if "residual" in chain else None)
+
+
+# ---------------------------------------------------------------------------
+# fused vs unfused numerics — every variant, per dtype, aligned + ragged
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("chain", CHAINS)
+def test_fused_matches_unfused_composition(chain, dtype):
+    m, n, k = 256, 256, 384
+    a, b, bias, res = _operands(m, n, k, dtype, seed=7)
+    bias_c, res_c = _maybe(chain, bias, res)
+    spec = KernelSpec(epilogue=chain)
+    got, rep = ops.gemm_call(spec, a, b, bias=bias_c, residual=res_c,
+                             params=P128, interpret=True)
+    assert rep is None
+    want = ref.fused_matmul_ref(a, b, bias=bias_c, residual=res_c,
+                                chain=chain)
+    rtol, atol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("level", ["block", "tile", "inner"])
+@pytest.mark.parametrize("chain", [("bias",), ("bias", "gelu"),
+                                   ("bias", "silu", "residual"),
+                                   ("residual", "relu")])
+def test_ft_fused_matches_unfused_clean(chain, level):
+    """FT variants of every chain: clean runs produce the unfused
+    composition with zero false positives — the checksum comparison
+    (folded through the linear prefix in block mode) stays calibrated."""
+    m, n, k = 256, 384, 256
+    a, b, bias, res = _operands(m, n, k, jnp.float32, seed=11)
+    bias_c, res_c = _maybe(chain, bias, res)
+    spec = KernelSpec(ft_level=level, epilogue=chain)
+    got, rep = ops.gemm_call(spec, a, b, bias=bias_c, residual=res_c,
+                             ft=FTConfig(level=level), params=P128,
+                             interpret=True)
+    want = ref.fused_matmul_ref(a, b, bias=bias_c, residual=res_c,
+                                chain=chain)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+    assert float(rep[..., 0].sum()) == 0.0, "false positive through epilogue"
+
+
+@pytest.mark.parametrize("chain", [("bias",), ("gelu",), ("bias", "gelu"),
+                                   ("bias", "silu", "residual"),
+                                   ("bias", "residual")])
+def test_masked_ragged_fused_matches_unfused(chain):
+    """Ragged shapes take the masked variant; zero-padded aux operands keep
+    the epilogue (and its checksum fold) exact on edge tiles."""
+    m, n, k = 100, 77, 300
+    a, b, bias, res = _operands(m, n, k, jnp.float32, seed=13)
+    bias_c, res_c = _maybe(chain, bias, res)
+    for level in ("off", "block"):
+        spec = KernelSpec(ft_level=level, epilogue=chain)
+        ft = FTConfig(level=level) if level != "off" else None
+        got, rep = ops.gemm_call(spec, a, b, bias=bias_c, residual=res_c,
+                                 ft=ft, interpret=True)
+        want = ref.fused_matmul_ref(a, b, bias=bias_c, residual=res_c,
+                                    chain=chain)
+        assert got.shape == (m, n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-3)
+        if rep is not None:
+            assert float(rep[..., 0].sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# ABFT survives every epilogue chain: injection round-trips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("level", ["block", "tile", "inner"])
+@pytest.mark.parametrize("chain", [("bias",), ("bias", "gelu"),
+                                   ("bias", "silu", "residual"),
+                                   ("residual", "relu")])
+def test_injection_detected_and_corrected_through_epilogue(chain, level):
+    m, n, k = 256, 256, 384
+    a, b, bias, res = _operands(m, n, k, jnp.float32, seed=17)
+    bias_c, res_c = _maybe(chain, bias, res)
+    spec = KernelSpec(ft_level=level, epilogue=chain)
+    inj = InjectionSpec(row=130, col=200, magnitude=77.0, k_step=1)
+    got, rep = ops.gemm_call(spec, a, b, bias=bias_c, residual=res_c,
+                             ft=FTConfig(level=level), inject=inj,
+                             params=P128, interpret=True)
+    want = ref.fused_matmul_ref(a, b, bias=bias_c, residual=res_c,
+                                chain=chain)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+    assert float(rep[..., 0].sum()) == 1.0
+    assert float(rep[..., 1].sum()) == 1.0
+    blk = np.asarray(rep[130 // 128, 200 // 128])
+    assert int(blk[2]) == 130 and int(blk[3]) == 200
+
+
+def test_injection_at_last_kstep_hits_folded_verify():
+    """An SEU landing in the final k-step interval is only visible to the
+    *post-epilogue* (folded) checksum comparison of block mode — the test
+    that the fold is real, not just a re-ordering."""
+    m, n, k = 256, 256, 384
+    a, b, bias, res = _operands(m, n, k, jnp.float32, seed=19)
+    spec = KernelSpec(ft_level="block", epilogue=("bias", "residual"))
+    inj = InjectionSpec(row=10, col=20, magnitude=55.0, k_step=2)  # last step
+    got, rep = ops.gemm_call(spec, a, b, bias=bias, residual=res,
+                             ft=FTConfig(level="block"), inject=inj,
+                             params=P128, interpret=True)
+    want = ref.fused_matmul_ref(a, b, bias=bias, residual=res,
+                                chain=("bias", "residual"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+    assert float(rep[..., 0].sum()) == 1.0
+
+
+def test_detect_only_leaves_error_through_epilogue():
+    m, n, k = 256, 256, 256
+    a, b, bias, _ = _operands(m, n, k, jnp.float32, seed=23)
+    spec = KernelSpec(ft_level="block", epilogue=("bias",))
+    inj = InjectionSpec(row=10, col=20, magnitude=55.0, k_step=0)
+    got, rep = ops.gemm_call(spec, a, b, bias=bias,
+                             ft=FTConfig(level="block", action="detect"),
+                             inject=inj, params=P128, interpret=True)
+    want = ref.fused_matmul_ref(a, b, bias=bias, chain=("bias",))
+    err = np.asarray(got) - np.asarray(want)
+    assert abs(err[10, 20] - 55.0) < 1e-3           # error left in place
+    assert float(rep[..., 0].sum()) >= 1.0          # flagged
+    assert float(rep[..., 1].sum()) == 0.0          # never corrected
+
+
+@settings(max_examples=10, deadline=None)
+@given(row=st.integers(0, 255), col=st.integers(0, 255),
+       k_step=st.integers(0, 2),
+       mag=st.floats(min_value=1.0, max_value=1e5),
+       sign=st.sampled_from([-1.0, 1.0]))
+def test_property_any_seu_corrected_through_fused_chain(row, col, k_step,
+                                                        mag, sign):
+    """∀ (location, step, |magnitude| > τ): the fused bias+gelu FT variant
+    restores the clean fused result — the paper's correctness claim holds
+    post-epilogue."""
+    m, n, k = 256, 256, 384
+    a, b, bias, _ = _operands(m, n, k, jnp.float32, seed=29)
+    spec = KernelSpec(ft_level="block", epilogue=("bias", "gelu"))
+    inj = InjectionSpec(row=row, col=col, magnitude=sign * mag,
+                        k_step=k_step)
+    got, rep = ops.gemm_call(spec, a, b, bias=bias,
+                             ft=FTConfig(level="block"), inject=inj,
+                             params=P128, interpret=True)
+    want = ref.fused_matmul_ref(a, b, bias=bias, chain=("bias", "gelu"))
+    # gelu is 1-Lipschitz, so the post-correction residue stays bounded by
+    # the pre-activation tolerance.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=max(1e-3, 4e-7 * mag))
+    assert float(rep[..., 0].sum()) >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# spec validation + registry extension
+# ---------------------------------------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        KernelSpec(ft_level="warp")
+    with pytest.raises(KeyError):
+        KernelSpec(epilogue=("swish",))
+    with pytest.raises(ValueError):
+        KernelSpec(ft_level="block", acc_dtype="bfloat16")  # FT needs f32
+    with pytest.raises(ValueError):
+        KernelSpec(epilogue=("bias", "gelu", "bias"))  # two vector aux slots
+    s = spec_mod.fused(bias=True, act="gelu", residual=True,
+                       ft_level="block")
+    assert s.epilogue == ("bias", "gelu", "residual")
+    assert s.needs_bias and s.needs_residual and s.ft
+    assert s.fold_split() == 1          # bias folds; gelu ends the prefix
+
+
+def test_register_new_epilogue_roundtrip():
+    """The extension path from the package docstring: register an op, use
+    it in a spec, run it, clean up."""
+    name = "scale2x"
+    epilogues.register(epilogues.EpilogueOp(
+        name, linear=False, apply=lambda y, aux: 2.0 * y), overwrite=True)
+    try:
+        a, b, _, _ = _operands(128, 128, 128, jnp.float32, seed=31)
+        got, _ = ops.gemm_call(KernelSpec(epilogue=(name,)), a, b,
+                               params=P128, interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   2.0 * np.asarray(ref.matmul_ref(a, b)),
+                                   rtol=1e-5, atol=1e-3)
+    finally:
+        del epilogues.REGISTRY[name]
+    with pytest.raises(KeyError):
+        KernelSpec(epilogue=(name,))
+
+
+def test_acc_dtype_variant():
+    """The accumulate-dtype spec axis: bf16 accumulation is a legal non-FT
+    variant (lower precision, smaller scratch)."""
+    a, b, _, _ = _operands(128, 128, 256, jnp.bfloat16, seed=37)
+    got, _ = ops.gemm_call(KernelSpec(acc_dtype="bfloat16"), a, b,
+                           params=P128, interpret=True)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-1)
+
+
+def test_out_dtype_cast_variant():
+    a, b, _, _ = _operands(128, 128, 128, jnp.float32, seed=41)
+    got, _ = ops.gemm_call(KernelSpec(out_dtype="bfloat16"), a, b,
+                           params=P128, interpret=True)
+    assert got.dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# variant-aware autotuning
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def fresh_cache(tmp_path, monkeypatch):
+    path = str(tmp_path / "tune.json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", path)
+    tune_cache.reset()
+    yield path
+    tune_cache.reset()
+
+
+def test_tuning_cache_key_distinguishes_variants(fresh_cache):
+    m, n, k = 300, 300, 600
+    plain = autotune.best_params(m, n, k, measure=False)
+    fused = autotune.best_params(
+        m, n, k, measure=False,
+        spec=KernelSpec(epilogue=("bias", "gelu", "residual")))
+    c = tune_cache.TuneCache(fresh_cache)
+    variants = {key.rsplit("/", 1)[1] for key in c.keys()
+                if "/v_" in key}
+    assert "v_bias+gelu+residual" in variants
+    assert any("/v_" not in key for key in c.keys())   # plain key unchanged
+    # both winners are legal under their own working-set model
+    from repro.kernels import search
+    assert search.vmem_bytes(plain) <= autotune.VMEM_BUDGET
+    assert search.vmem_bytes(
+        fused, 4, "off",
+        KernelSpec(epilogue=("bias", "gelu", "residual"))
+    ) <= autotune.VMEM_BUDGET
+
+
+def test_residual_spec_shrinks_candidate_space():
+    """The residual aux stream adds double-buffered output-sized VMEM — at
+    the budget edge (8-byte elements) the legal candidate set under the
+    fused spec is a strict subset, and every fused candidate is legal under
+    the fused working-set model."""
+    from repro.kernels import search
+    spec = KernelSpec(epilogue=("residual",))
+    base = search.enumerate_candidates(2048, 2048, 2048, in_bytes=8)
+    fused = search.enumerate_candidates(2048, 2048, 2048, in_bytes=8,
+                                        spec=spec)
+    assert set(fused) < set(base)
+    for p in fused:
+        assert search.vmem_bytes(p, 8, "off", spec) <= autotune.VMEM_BUDGET
+    # the model itself: extra = 2 × bm·bn·in_bytes for the residual stream
+    p = autotune.KernelParams(256, 512, 256)
+    assert (search.vmem_bytes(p, 4, "off", spec) - search.vmem_bytes(p, 4)
+            == 2 * 256 * 512 * 4)
+
+
+def test_variant_key_canonical():
+    assert KernelSpec().variant_key() == ""
+    assert KernelSpec(epilogue=("bias", "silu")).variant_key() == "bias+silu"
+    assert (KernelSpec(out_dtype="bfloat16").variant_key() == "outbf16")
+    key = tune_cache.cache_key("cpu", "small", 4, "off",
+                               variant="bias+silu")
+    assert key.endswith("/v_bias+silu")
+    assert tune_cache.cache_key("cpu", "small", 4, "off") == \
+        "cpu/small/b4/ft_off"
+
+
+def test_dispatch_info_derives_width_from_dtype():
+    """bf16 shapes get the 16-row sublane floor (not f32's 8) for fitted
+    masked tiles — the dtype-width plumbing fix."""
+    info16 = ops.dispatch_info(100, 77, 300, P128, dtype=jnp.bfloat16)
+    info32 = ops.dispatch_info(100, 77, 300, P128, dtype=jnp.float32)
+    assert info16["masked_params"].bm % 16 == 0
+    assert info32["masked_params"].bm == 104          # 8-aligned fit
+    assert info16["masked_params"].bm != info32["masked_params"].bm
