@@ -12,31 +12,46 @@ correctness of the generated kernels).
 Tuning
 ------
 Runtime dispatch is the spec → template → autotune pipeline (see the
-`repro.kernels` package docstring): a `templates.KernelSpec` names the
-kernel variant (FT level × epilogue chain × dtypes), `templates.emit`
-renders it into one Pallas body, and `autotune.best_params` picks the tile
-parameters — memoizing the candidate search (`kernels.search`) in a
-persistent JSON cache, ``$REPRO_TUNE_CACHE`` or ``~/.cache/repro_tune.json``.
+`repro.kernels` package docstring): a `templates.KernelSpec` — or, for
+batched/grouped launches, a `templates.BatchedKernelSpec` — names the
+kernel variant (FT level × epilogue chain × dtypes × batch structure),
+`templates.emit` renders it into one Pallas body, and
+`autotune.best_params` picks the tile parameters — memoizing the candidate
+search (`kernels.search`) in a persistent JSON cache,
+``$REPRO_TUNE_CACHE`` or ``~/.cache/repro_tune.json``.
 
-Cache keys are ``device/class/caps/bytes/ft_level[/v_variant]``: element
-width comes from the *actual operand dtype* (bf16 gets its own entries and
-sublane floor), and the variant component (`KernelSpec.variant_key()`, e.g.
-``v_bias+gelu``) separates fused-epilogue chains, whose aux-operand VMEM
-and roofline intensity legitimately move the winner. Plain f32 GEMM keeps
-the bare key, so PR-1 caches stay valid.
+Cache keys are ``device/class/caps/bytes/ft_level[/v_variant][/b_N|/g_N]``:
+element width comes from the *actual operand dtype* (bf16 gets its own
+entries and sublane floor); the variant component
+(`KernelSpec.variant_key()`, e.g. ``v_bias+gelu``, ``v_batched``,
+``v_grouped``) separates fused-epilogue chains and batched/grouped bodies,
+whose aux-operand VMEM and roofline intensity legitimately move the
+winner; and the batch component (``best_params(..., batch=B)`` →
+``/b_<pow2>``, ``groups=G`` → ``/g_<pow2>``) captures the batch/group
+count — a uniform batch multiplies every roofline term, while a group
+count charges the per-group row-alignment padding (``G·(bm-1)`` worst
+case), which steers grouped launches toward shallower row tiles. Plain
+f32 2-D GEMM keeps the bare key, so PR-1/2 caches stay valid.
 
-To regenerate the cache for a device, delete that file (or point
-``REPRO_TUNE_CACHE`` at a fresh path) and run this benchmark: every shape
-class below triggers a search (measured on TPU hardware, roofline-modeled
-elsewhere) and persists its winner; the run then re-reads the file to
-verify the round trip. Each row reports the static-table params next to
-the autotuned ones (``table=… tuned=…``) so table/search divergence is
-visible per class. Fused-variant rows live in `benchmarks.fused_epilogue`;
-to tune a *new* epilogue (after `templates.epilogues.register` — worked
-example in the `repro.kernels` docstring) just call
-``best_params(m, n, k, dtype.itemsize, ft_level=…, spec=your_spec)`` once:
-the miss searches under the variant's working-set model and persists under
-its own key.
+Worked grouped-MoE tuning example — an E-expert FFN over T routed rows::
+
+    spec = templates.BatchedKernelSpec(ft_level="block", grouped=True)
+    autotune.best_params(T, d_ff, d_model, 4, ft_level="block",
+                         spec=spec, groups=E)   # key: …/v_grouped/g_<E↑2>
+
+To regenerate a device's cache wholesale, run
+``python -m benchmarks.run --only tune_campaign``: it re-searches a fixed
+campaign (2-D, fused, batched, grouped — measured on TPU hardware,
+roofline-modeled elsewhere) into ``$REPRO_TUNE_CAMPAIGN_OUT`` and diffs
+the result against the checked-in ``benchmarks/tuned/<device>.json``.
+This benchmark keeps the per-class view: each row reports the
+static-table params next to the autotuned ones (``table=… tuned=…``) so
+table/search divergence is visible per class, and the run re-reads the
+cache file to verify the round trip. Fused-variant rows live in
+`benchmarks.fused_epilogue`; to tune a *new* epilogue (after
+`templates.epilogues.register`) just call ``best_params(m, n, k,
+dtype.itemsize, ft_level=…, spec=your_spec)`` once: the miss searches
+under the variant's working-set model and persists under its own key.
 """
 from __future__ import annotations
 

@@ -23,8 +23,14 @@ class MoEConfig:
     dense_d_ff: int = 0
     #: GShard dispatch group size (tokens). Smaller ⇒ less dispatch-einsum
     #: FLOPs overhead but more capacity variance. Hillclimb lever.
+    #: (padded dispatch only — the grouped path has no capacity geometry.)
     group_size: int = 512
     capacity_factor: float = 1.25
+    #: Expert dispatch: "grouped" (PR 3 default — ragged ft_grouped_matmul
+    #: over a row-sorted token buffer, zero capacity padding, no dropped
+    #: tokens) or "padded" (the GShard capacity-einsum baseline, kept for
+    #: the moe_dispatch benchmark comparison).
+    dispatch: str = "grouped"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -6,7 +6,9 @@ correction of compute-unit soft errors, fused with the GEMM itself
 """
 from .policy import (FTConfig, InjectionSpec, ONLINE_BLOCK, OFFLINE_DETECT,
                      NONFUSED_BASELINE, FT_OFF)
-from .ft_gemm import ft_dot, ft_dot_fused, ft_batched_dot, ft_verdict_dot
+from .ft_gemm import (ft_dot, ft_dot_fused, ft_batched_dot,
+                      ft_grouped_matmul, ft_grouped_matmul_buffer,
+                      ft_verdict_dot, grouped_row_tile)
 from .telemetry import FTReport, ft_scope, current_scope
 from . import abft
 from .fault_injection import Injector
@@ -14,7 +16,8 @@ from .fault_injection import Injector
 __all__ = [
     "FTConfig", "InjectionSpec", "ONLINE_BLOCK", "OFFLINE_DETECT",
     "NONFUSED_BASELINE", "FT_OFF", "ft_dot", "ft_dot_fused",
-    "ft_batched_dot",
+    "ft_batched_dot", "ft_grouped_matmul", "ft_grouped_matmul_buffer",
+    "grouped_row_tile",
     "ft_verdict_dot", "FTReport", "ft_scope", "current_scope", "abft",
     "Injector",
 ]

@@ -309,7 +309,7 @@ def ft_dot_fused(x: jax.Array, w: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Batched variant — attention cores (QK^T, PV) and grouped expert GEMMs
+# Batched variant — attention cores (QK^T, PV) and per-expert matmuls
 # ---------------------------------------------------------------------------
 
 def _fused_ft_bmm(ft: FTConfig, spec, a, b, key):
@@ -323,9 +323,34 @@ def _fused_ft_bmm(ft: FTConfig, spec, a, b, key):
     return out.astype(a.dtype), det, maxres
 
 
+def _ft_bmm_backend(ft: FTConfig, spec, a, b, key):
+    """Backend dispatch for one batched matmul, (out, det, maxres).
+
+    pallas — ONE batched Pallas kernel (leading batch grid axis) via
+    `ops.grouped_gemm_call`: the whole (…, M, K) × (…, K, N) problem is a
+    single launch, no per-slice Python loop and no jnp fallback; ragged
+    (M, N, K) take the masked fitted-tile path inside the kernel.
+    Otherwise the XLA-fused jnp checksum path (GSPMD-friendly)."""
+    if ft.enabled and ft.backend == "pallas":
+        from repro.kernels import ops as kops
+        from repro.kernels.templates import BatchedKernelSpec
+        lead = a.shape[:-2]
+        a3 = a.reshape((-1,) + a.shape[-2:])
+        b3 = b.reshape((-1,) + b.shape[-2:])
+        # inj_batch=-1: broadcast the SEU into every slice, matching the
+        # jnp path's inject_spec (which masks on row/col iotas only).
+        out, rep = kops.grouped_gemm_call(
+            BatchedKernelSpec(ft_level=ft.level), a3, b3, ft=ft, inject=spec,
+            inj_batch=-1)
+        det = jnp.sum(rep[..., 0]).astype(jnp.int32)
+        maxres = jnp.max(rep[..., 5])
+        return out.reshape(lead + out.shape[-2:]), det, maxres
+    return _fused_ft_bmm(ft, spec, a, b, key)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _ft_bmm_cvjp(ft, spec, a, b, key):
-    return _fused_ft_bmm(ft, spec, a, b, key)
+    return _ft_bmm_backend(ft, spec, a, b, key)
 
 
 def _ft_bmm_fwd(ft, spec, a, b, key):
@@ -340,8 +365,8 @@ def _ft_bmm_bwd(ft, spec, res, cts):
     kb = jax.random.fold_in(key, 4) if key is not None else None
     bt = jnp.swapaxes(b, -1, -2)
     at = jnp.swapaxes(a, -1, -2)
-    da, _, _ = _fused_ft_bmm(ft, None, g, bt, ka)
-    db, _, _ = _fused_ft_bmm(ft, None, at, g, kb)
+    da, _, _ = _ft_bmm_backend(ft, None, g, bt, ka)
+    db, _, _ = _ft_bmm_backend(ft, None, at, g, kb)
     return da, db.astype(b.dtype), _float0(key)
 
 
@@ -352,12 +377,249 @@ def ft_batched_dot(a: jax.Array, b: jax.Array, ft: FTConfig = FT_OFF,
                    key: Optional[jax.Array] = None,
                    spec: Optional[InjectionSpec] = None) -> jax.Array:
     """Fault-tolerant batched matmul: (…, M, K) @ (…, K, N) → (…, M, N).
-    Leading dims must match (broadcast not supported — callers reshape)."""
+    Leading dims must match (broadcast not supported — callers reshape).
+    On `ft.backend == "pallas"` the whole batch runs as one batched Pallas
+    kernel with per-slice checksums/report rows (PR 3)."""
     if not ft.enabled and key is None and spec is None:
         return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
     y, det, maxres = _ft_bmm_cvjp(ft, spec, a, b, key)
     _record(det, maxres, ft.corrects)
     return y
+
+
+# ---------------------------------------------------------------------------
+# Grouped variant — MoE expert FFNs over ragged routing (zero capacity pad)
+# ---------------------------------------------------------------------------
+#
+# y[t] = x[t] @ w[group_ids[t]] for per-row group assignments with dynamic
+# group sizes. The rows are scattered into a group-sorted buffer whose groups
+# start on row-tile boundaries (kernels.grouped.layout); the pallas backend
+# then runs the CSR-style grouped kernel (per-group B via scalar-prefetched
+# index maps, per-group checksums + detection/correction), and the jnp
+# backend mirrors the same algebra with segment reductions — checksums,
+# thresholds, location, and branchless correction all per group, so an SEU
+# in one expert's rows never contaminates a neighboring group.
+
+_HAS_RAGGED_DOT = hasattr(jax.lax, "ragged_dot")
+
+
+def _row_gids(gid: jax.Array, t_buf: int) -> jax.Array:
+    bm = t_buf // gid.shape[0]
+    return jnp.repeat(gid, bm, total_repeat_length=t_buf)
+
+
+def _grouped_dot_jnp(buf, w, gid):
+    """f32 grouped product over the aligned buffer (jnp path). Uses
+    `jax.lax.ragged_dot` when available (one XLA op, no G× blowup); the
+    fallback contracts per row tile against the gathered group weights."""
+    t_buf = buf.shape[0]
+    num_tiles = gid.shape[0]
+    bm = t_buf // num_tiles
+    g = w.shape[0]
+    if _HAS_RAGGED_DOT:
+        tiles_per_group = jnp.zeros((g,), jnp.int32).at[gid].add(1)
+        sizes = tiles_per_group * bm          # aligned sizes, sum == t_buf
+        return jax.lax.ragged_dot(buf, w, sizes,
+                                  preferred_element_type=jnp.float32)
+    b3 = buf.reshape(num_tiles, bm, -1)
+    return jnp.einsum("tbk,tkn->tbn", b3, w[gid],
+                      preferred_element_type=jnp.float32
+                      ).reshape(t_buf, w.shape[-1])
+
+
+def _fused_ft_grouped(ft: FTConfig, spec, buf, w, gid, key):
+    """Fused online ABFT for the grouped product on the jnp path: per-group
+    checksums via segment reductions, per-group rounding-aware thresholds,
+    one located+corrected SEU per group."""
+    t_buf, k = buf.shape
+    g, _, n = w.shape
+    rg = _row_gids(gid, t_buf)
+    bf = buf.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    acc = _grouped_dot_jnp(buf, w, gid)                    # (t_buf, n) f32
+
+    # Checksums from the operands (never from C): per-group column checksum
+    # (e^T X_g) W_g and per-row checksum x_t · (W_g e).
+    xsum = jnp.zeros((g, k), jnp.float32).at[rg].add(bf)   # (G, K)
+    colck = jnp.einsum("gk,gkn->gn", xsum, wf)             # (G, N)
+    rowck = jnp.sum(bf * wf.sum(-1)[rg], axis=-1)          # (t_buf,)
+
+    acc = _inject(ft, spec, key, acc)
+
+    d_col = jnp.zeros((g, n), jnp.float32).at[rg].add(acc) - colck
+    d_row = jnp.sum(acc, axis=-1) - rowck                  # (t_buf,)
+    if ft.static_tau is not None:
+        tau = jnp.full((g,), ft.static_tau, jnp.float32)
+    else:
+        eps = float(jnp.finfo(jnp.float32).eps)
+        amax = jax.ops.segment_max(jnp.max(jnp.abs(bf), axis=-1), rg,
+                                   num_segments=g)
+        amax = jnp.where(jnp.isfinite(amax), amax, 0.0)    # empty groups
+        bmax = jnp.max(jnp.abs(wf), axis=(-2, -1))
+        tau = jnp.maximum(ft.rel_tau * eps * k * amax * bmax, 1e-30)
+
+    colmax = jnp.max(jnp.abs(d_col), axis=-1)              # (G,)
+    rowmax = jax.ops.segment_max(jnp.abs(d_row), rg, num_segments=g)
+    rowmax = jnp.where(jnp.isfinite(rowmax), rowmax, 0.0)
+    det_g = jnp.maximum(colmax, rowmax) > tau              # (G,) bool
+
+    col_g = jnp.argmax(jnp.abs(d_col), axis=-1)            # (G,)
+    mag_g = jnp.take_along_axis(d_col, col_g[:, None], axis=-1)[:, 0]
+    # Located row per group: first peak of |d_row| inside the group.
+    is_peak = jnp.abs(d_row) >= rowmax[rg]
+    row_g = jax.ops.segment_min(
+        jnp.where(is_peak, jnp.arange(t_buf, dtype=jnp.int32), t_buf),
+        rg, num_segments=g)
+    if ft.corrects:
+        delta = jnp.where(det_g, mag_g, 0.0)
+        acc = acc.at[jnp.clip(row_g, 0, t_buf - 1), col_g].add(-delta)
+
+    det = jnp.sum(det_g.astype(jnp.int32))
+    maxres = jnp.maximum(jnp.max(colmax), jnp.max(rowmax))
+    return acc.astype(buf.dtype), det, maxres
+
+
+def _ft_grouped_2d(ft: FTConfig, spec, buf, w, gid, row_end, key):
+    """(y_buf, det, maxres) — backend dispatch for one grouped product."""
+    if not ft.enabled:
+        return (_grouped_dot_jnp(buf, w, gid).astype(buf.dtype),
+                *_ZERO_SUMMARY())
+    if ft.backend == "pallas":
+        import dataclasses as _dc
+        from repro.kernels import grouped as kgrouped
+        from repro.kernels.templates import BatchedKernelSpec
+        t_buf, k = buf.shape
+        g, _, n = w.shape
+        bm = t_buf // gid.shape[0]
+        kspec = BatchedKernelSpec(ft_level=ft.level, grouped=True)
+        p = _dc.replace(
+            kgrouped.plan_grouped(t_buf, n, k, buf.dtype, n_groups=g,
+                                  ft_level=ft.level, spec=kspec),
+            bm=bm)
+        out, rep = kgrouped.grouped_buffer_call(
+            kspec, buf, w, gid=gid, row_end=row_end, params=p, ft=ft,
+            inject=spec)
+        det = jnp.sum(rep[..., 0]).astype(jnp.int32)
+        maxres = jnp.max(rep[..., 5])
+        return out, det, maxres
+    return _fused_ft_grouped(ft, spec, buf, w, gid, key)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _ft_grouped_cvjp(ft, spec, buf, w, gid, row_end, key):
+    return _ft_grouped_2d(ft, spec, buf, w, gid, row_end, key)
+
+
+def _ft_grouped_fwd(ft, spec, buf, w, gid, row_end, key):
+    out = _ft_grouped_cvjp(ft, spec, buf, w, gid, row_end, key)
+    return out, (buf, w, gid, row_end, key)
+
+
+def _ft_grouped_bwd(ft, spec, res, cts):
+    g_buf, _, _ = cts                  # ignore summary cotangents
+    buf, w, gid, row_end, key = res
+    t_buf, k = buf.shape
+    ng = w.shape[0]
+    num_tiles = gid.shape[0]
+    bm = t_buf // num_tiles
+    g_buf = g_buf.astype(buf.dtype)
+    kx = jax.random.fold_in(key, 6) if key is not None else None
+    # d_buf: the same grouped product against the transposed group weights,
+    # ABFT-protected like every other backward GEMM.
+    dbuf, _, _ = _ft_grouped_2d(ft, None, g_buf, jnp.swapaxes(w, -1, -2),
+                                gid, row_end, kx)
+    # d_w ("tgmm"): per-row-tile outer products segment-summed per group —
+    # exactly the useful FLOPs (T_buf·K·N) — then verified with per-group
+    # checksums (col: (X_g e_K)^T G_g; row: X_g^T (G_g e_N)).
+    b3 = buf.reshape(num_tiles, bm, k).astype(jnp.float32)
+    g3 = g_buf.reshape(num_tiles, bm, -1).astype(jnp.float32)
+    per_tile = jnp.einsum("tbk,tbn->tkn", b3, g3)
+    dw = jax.ops.segment_sum(per_tile, gid, num_segments=ng)   # (G, K, N)
+    if ft.enabled:
+        u = jnp.sum(b3, axis=-1)                               # (tiles, bm)
+        v = jnp.sum(g3, axis=-1)
+        colck = jax.ops.segment_sum(jnp.einsum("tb,tbn->tn", u, g3), gid,
+                                    num_segments=ng)           # (G, N)
+        rowck = jax.ops.segment_sum(jnp.einsum("tbk,tb->tk", b3, v), gid,
+                                    num_segments=ng)           # (G, K)
+        ck = abft.Checksums(col=colck[:, None, :], row=rowck[:, :, None])
+        if ft.static_tau is not None:
+            tau = jnp.full((ng,), ft.static_tau, jnp.float32)
+        else:
+            eps = float(jnp.finfo(jnp.float32).eps)
+            amax = jax.ops.segment_max(jnp.max(jnp.abs(b3), axis=(1, 2)),
+                                       gid, num_segments=ng)
+            gmax = jax.ops.segment_max(jnp.max(jnp.abs(g3), axis=(1, 2)),
+                                       gid, num_segments=ng)
+            amax = jnp.where(jnp.isfinite(amax), amax, 0.0)
+            gmax = jnp.where(jnp.isfinite(gmax), gmax, 0.0)
+            rows = jax.ops.segment_sum(jnp.ones((num_tiles,), jnp.float32),
+                                       gid, num_segments=ng) * bm
+            tau = jnp.maximum(ft.rel_tau * eps * rows * amax * gmax, 1e-30)
+        dw, _ = abft.detect_and_correct(dw, ck, tau, corrects=ft.corrects)
+    return (dbuf, dw.astype(w.dtype), _float0(gid), _float0(row_end),
+            _float0(key))
+
+
+_ft_grouped_cvjp.defvjp(_ft_grouped_fwd, _ft_grouped_bwd)
+
+
+def grouped_row_tile(t: int, n: int, k: int, dtype, n_groups: int,
+                     ft: FTConfig) -> int:
+    """The row-tile (group-alignment) granularity `ft_grouped_matmul` would
+    use for this problem — exposed so multi-GEMM callers (the MoE FFN) can
+    build ONE layout/buffer and stay in buffer space across GEMMs."""
+    if ft.enabled and ft.backend == "pallas":
+        from repro.kernels import grouped as kgrouped
+        from repro.kernels.templates import BatchedKernelSpec
+        kspec = BatchedKernelSpec(ft_level=ft.level, grouped=True)
+        return kgrouped.plan_grouped(t, n, k, dtype, n_groups=n_groups,
+                                     ft_level=ft.level, spec=kspec).bm
+    return {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
+
+
+def ft_grouped_matmul_buffer(buf: jax.Array, w: jax.Array, gid: jax.Array,
+                             row_end: jax.Array, ft: FTConfig = FT_OFF,
+                             key: Optional[jax.Array] = None,
+                             spec: Optional[InjectionSpec] = None
+                             ) -> jax.Array:
+    """Buffer-space `ft_grouped_matmul`: operate directly on a group-sorted
+    (t_buf, K) buffer (see `kernels.grouped.layout`) and return the
+    (t_buf, N) result in buffer space — lets a chain of grouped GEMMs over
+    one routing decision (gate/up/down of an expert FFN) scatter once and
+    gather once instead of round-tripping per GEMM."""
+    if not ft.enabled and key is None and spec is None:
+        # Fast path mirroring ft_dot: plain grouped product, no custom_vjp.
+        return _grouped_dot_jnp(buf, w, gid).astype(buf.dtype)
+    y_buf, det, maxres = _ft_grouped_cvjp(ft, spec, buf, w, gid, row_end,
+                                          key)
+    _record(det, maxres, ft.corrects)
+    return y_buf
+
+
+def ft_grouped_matmul(x: jax.Array, w: jax.Array, group_ids: jax.Array,
+                      ft: FTConfig = FT_OFF,
+                      key: Optional[jax.Array] = None,
+                      spec: Optional[InjectionSpec] = None) -> jax.Array:
+    """Fault-tolerant ragged grouped matmul: y[t] = x[t] @ w[group_ids[t]].
+
+    x: (T, K) rows in caller order; w: (G, K, N); group_ids: int32 (T,).
+    Group sizes are whatever routing produced — no capacity, no dropped
+    rows; the only padding is ≤ G·(bm-1) row-tile alignment rows. Both
+    directions are custom_vjp-protected (d_buf runs the grouped kernel
+    against transposed weights; d_w is verified with per-group checksums).
+    Backend follows `ft.backend` like `ft_dot` ("pallas" → the CSR-style
+    grouped Pallas kernel of `kernels.grouped`)."""
+    from repro.kernels.grouped import layout as glayout
+
+    t, k = x.shape
+    ng = w.shape[0]
+    bm = grouped_row_tile(t, w.shape[-1], k, x.dtype, ng, ft)
+    lay = glayout.make_layout(group_ids, ng, bm)
+    buf = glayout.scatter_rows(x, lay)
+    y_buf = ft_grouped_matmul_buffer(buf, w, lay.gid, lay.row_end, ft=ft,
+                                     key=key, spec=spec)
+    return glayout.gather_rows(y_buf, lay)
 
 
 def ft_verdict_dot(a: jax.Array, b: jax.Array, ft: FTConfig,

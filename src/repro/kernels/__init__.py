@@ -10,57 +10,80 @@ grown into a declarative pipeline:
      FT level (off/inner/tile/block) × masked-vs-plain dispatch × an
      epilogue chain (bias-add, activation, residual-add from the
      `templates/epilogues.py` registry) × accumulate/output dtypes.
+     Since PR 3 a `BatchedKernelSpec` extends the space with a leading
+     batch axis: uniform batched (B, M, K) × (B, K, N) (or a shared (K, N)
+     right operand) and CSR-style *grouped* dispatch (row-sorted token
+     buffer + per-group B selected by a scalar-prefetched tile→group map,
+     per-group checksums, ragged group edges masked in-kernel via
+     per-group row bounds — zero capacity padding).
   2. **template** (`templates/emit.py`) — `render(spec, …)` composes the
      staged emitter (prologue / K-loop MAC + running checksums / fused
      epilogue + writeback) into ONE Pallas kernel body. The four formerly
-     duplicated plain/masked × FT/non-FT bodies are all points in this
-     space; fused epilogues apply to the VMEM-resident accumulator before
-     the single HBM writeback, with linear ops folded into the ABFT
-     checksum comparison so detection/correction still works post-epilogue.
+     duplicated plain/masked × FT/non-FT bodies, every fused-epilogue
+     chain, and the batched/grouped bodies are all points in this space;
+     fused epilogues apply to the VMEM-resident accumulator before the
+     single HBM writeback, with linear ops folded into the ABFT checksum
+     comparison so detection/correction still works post-epilogue.
   3. **autotune** (`autotune.py` + `search.py` + `tune_cache.py`) — the
      candidate search enumerates MXU-aligned tiles under the
-     variant-aware VMEM model (fused epilogues add aux-operand buffers and
-     shift roofline intensity), and the persistent cache keys include the
-     variant (`KernelSpec.variant_key()`).
+     variant-aware VMEM model (fused epilogues add aux-operand buffers;
+     grouped dispatch adds its scalar metadata and a per-group
+     row-alignment penalty that steers bm), and the persistent cache keys
+     include the variant (`KernelSpec.variant_key()`) plus a
+     power-of-two-bucketed batch/group-count component (``/b_*`` /
+     ``/g_*`` — `best_params(..., batch=…, groups=…)`); 2-D keys are
+     unchanged so older caches stay valid.
   4. **launch** (`templates/registry.py`, `ops.py`) — `ops.gemm_call(spec,
-     a, b, …)` is the front door: variant-aware params, ragged masked
-     dispatch, operand padding, interpret fallback off-TPU.
+     a, b, …)` is the 2-D front door and `ops.grouped_gemm_call` its
+     batched/grouped sibling (rank-dispatching: 3-D a → uniform batched,
+     2-D a + 3-D b + group_ids → grouped): variant-aware params, ragged
+     masked dispatch, operand padding, interpret fallback off-TPU.
      `ops.matmul` / `ops.ft_matmul_report` / `ops.fused_matmul` are thin
      specializations; `gemm.py` / `ftgemm.py` keep their public signatures
-     as registry lookups.
+     as registry lookups; `core.ft_batched_dot` / `core.ft_grouped_matmul`
+     are the policy-level fronts the model zoo calls.
 
-Worked example — registering a new epilogue op and running it::
+Worked example — a grouped MoE expert FFN (what `models/moe.py` runs)::
 
-    from repro.kernels.templates import epilogues, KernelSpec
-    from repro.kernels import ops
+    import jax.numpy as jnp
+    from repro.core import ft_grouped_matmul
+    from repro.core.policy import FTConfig
 
-    # 1. register: a leaky-relu epilogue (elementwise → aux=None;
-    #    nonlinear → linear=False, so it ends the checksum-fold prefix)
-    epilogues.register(epilogues.EpilogueOp(
-        "leaky_relu", linear=False,
-        apply=lambda y, aux: jnp.where(y > 0, y, 0.01 * y)))
+    # tokens (T, d) each routed to one of G experts; weights (G, d, f).
+    # No capacity, no dropped tokens: rows are scattered into a
+    # group-sorted buffer whose groups start on row-tile boundaries
+    # (kernels/grouped/layout.py), so the ≤ G·(bm-1) alignment rows are
+    # the ONLY padding and every output block is wholly one expert's —
+    # an SEU in expert e's rows is detected, located, and corrected
+    # inside e's blocks and can never contaminate a neighbor.
+    ft = FTConfig(level="block", backend="pallas")
+    h = ft_grouped_matmul(tokens, w_gate, expert_ids, ft=ft)
 
-    # 2. spec it — chains compose; tuning auto-keys the new variant
-    spec = KernelSpec(ft_level="block", epilogue=("bias", "leaky_relu"))
+    # Same variant space underneath — to tune it explicitly:
+    #   spec = templates.BatchedKernelSpec(ft_level="block", grouped=True)
+    #   autotune.best_params(T, f, d, 4, ft_level="block", spec=spec,
+    #                        groups=G)        # cache key gains /g_<G·pow2>
+    # and `benchmarks/tune_campaign.py` regenerates/diffs the persistent
+    # cache per device kind (checked-in baseline: benchmarks/tuned/).
 
-    # 3. run: one kernel, bias+activation fused, online ABFT verifying
-    #    post-bias (the linear prefix folds into the comparison)
-    out, report = ops.gemm_call(spec, a, b, bias=bias)
-
-    Linear ops with an aux operand additionally provide a `fold` rule
-    (see `epilogues._bias_fold`) so ABFT verification can run after them.
+The epilogue extension hook is unchanged (register an `EpilogueOp`, spec
+it, run — see `templates/epilogues.py`); batched/grouped specs accept
+aux-free chains (activations).
 
 Other modules:
 
   gemm.py     -- plain/masked non-FT entries + the naive ladder rung (§3)
   ftgemm.py   -- fused online-ABFT GEMM entry, 3 granularities (§4)
   flashft.py  -- flash attention with fused ABFT + ragged seq masking
-  ops.py      -- dispatching front door (padding, autotune, interpret)
+                 (causal∧kv-edge mask on true lengths — ragged cross-length
+                 causal runs on fitted blocks, no padded fallback)
+  grouped/    -- batched & grouped subsystem (layout + dispatch, PR 3)
+  ops.py      -- dispatching front doors (padding, autotune, interpret)
   ref.py      -- pure-jnp oracles (incl. the unfused epilogue composition)
 
 Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
 validated with interpret=True on CPU.
 """
-from . import autotune, ops, ref, templates
+from . import autotune, grouped, ops, ref, templates
 
-__all__ = ["autotune", "ops", "ref", "templates"]
+__all__ = ["autotune", "grouped", "ops", "ref", "templates"]

@@ -138,10 +138,21 @@ def device_kind() -> str:
         return "unknown"
 
 
+def _pow2_bucket(x: int) -> int:
+    """Round a batch/group count up to a power of two — the tuning-cache
+    bucket. Counts inside one bucket share a roofline regime; exact counts
+    would fragment the cache across every routing outcome."""
+    b = 1
+    while b < x:
+        b *= 2
+    return b
+
+
 def best_params(m: int, n: int, k: int, in_bytes: int = 4, *,
                 ft_level: str = "off", spec=None,
                 measure=None, cache=None,
-                use_cache: bool = True) -> KernelParams:
+                use_cache: bool = True,
+                batch: int = 1, groups: int = 0) -> KernelParams:
     """Autotuned parameter selection: consult the persistent tuning cache
     (keyed by device kind + shape class + element width + FT level + kernel
     variant); on a miss run the candidate search
@@ -155,6 +166,12 @@ def best_params(m: int, n: int, k: int, in_bytes: int = 4, *,
     (`spec.variant_key()`) and of the candidate space: two variants of one
     shape class can legitimately tune to different tiles.
 
+    ``batch``/``groups`` make the selection batched-aware: a uniform batch
+    count multiplies every roofline term, a ragged group count adds
+    per-group row-alignment padding and metadata VMEM, and either adds a
+    power-of-two-bucketed ``/b_*`` / ``/g_*`` component to the cache key
+    (2-D launches keep the bare key, so existing caches stay valid).
+
     Deterministic given a warm cache: the same key always yields the same
     stored tile, and clamping is pure. The key includes the per-dim search
     cap, so tuning order across shapes of one class cannot pin a winner
@@ -165,19 +182,28 @@ def best_params(m: int, n: int, k: int, in_bytes: int = 4, *,
     if spec is not None and spec.ft_level != ft_level:
         raise ValueError(f"spec.ft_level={spec.ft_level!r} disagrees with "
                          f"ft_level={ft_level!r}")
+    batch_key = ""
+    if groups > 0:
+        batch_key = f"g_{_pow2_bucket(groups)}"
+    elif batch > 1:
+        batch_key = f"b_{_pow2_bucket(batch)}"
     if use_cache:
-        cache = cache or tune_cache.default_cache()
+        # NOT `cache or default`: an empty TuneCache is falsy (__len__ == 0)
+        # and must still be honored — cache-regeneration campaigns pass one.
+        cache = tune_cache.default_cache() if cache is None else cache
         caps = (min(search.MAX_TILE, _round_up(m, MXU)),
                 min(search.MAX_TILE, _round_up(n, MXU)),
                 min(search.MAX_TILE, _round_up(k, MXU)))
         key = tune_cache.cache_key(device_kind(), classify(m, n, k),
                                    in_bytes, ft_level, caps,
-                                   variant=spec.variant_key() if spec else "")
+                                   variant=spec.variant_key() if spec else "",
+                                   batch=batch_key)
         hit = cache.get(key)
         if hit is not None:
             return clamp_params(hit, m, n, k, in_bytes, ft_level, spec)
     best = search.select_best(m, n, k, in_bytes=in_bytes, ft_level=ft_level,
-                              spec=spec, measure=measure)
+                              spec=spec, measure=measure,
+                              batch=batch, groups=groups)
     if use_cache:
         cache.put(key, best)
     return clamp_params(best, m, n, k, in_bytes, ft_level, spec)

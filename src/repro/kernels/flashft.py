@@ -90,12 +90,19 @@ def _flash_ft_kernel(inj_ref, mag_ref, dims_ref,
 
     q_start = qi * bq
     kv_start = s * bkv
+    true_sq = dims_ref[0]
     true_skv = dims_ref[1]
+    # Causal positions are bottom-right aligned on the TRUE lengths: query
+    # row i attends kv j iff j ≤ i + (Skv − Sq) — the decode/cross-length
+    # convention (Sq == Skv ⇒ the familiar triangular mask). The offset is
+    # dynamic (scalar-prefetched), which is what lets ragged Sq ≠ Skv run
+    # causally on fitted blocks instead of falling back to padded shapes.
+    c_off = true_skv - true_sq
     # Ragged dispatch: kv blocks wholly past the true Skv are skipped
     # (scalar-prefetched seq lens, not padded shapes, drive the loop).
     run = kv_start < true_skv
     if causal:
-        run = run & (kv_start <= q_start + bq - 1)
+        run = run & (kv_start <= q_start + bq - 1 + c_off)
 
     @pl.when(run)
     def _step():
@@ -129,13 +136,15 @@ def _flash_ft_kernel(inj_ref, mag_ref, dims_ref,
         # not receive attention — masked to -inf *after* the linear-GEMM
         # checksum verification above (zero-padded K rows are
         # checksum-neutral) and *before* softmax, exactly like the causal
-        # mask. This is what lets the ops wrapper fit bkv to the ragged
-        # length instead of requiring block-aligned Skv for non-causal.
+        # mask. This is what lets the ops wrapper fit bq/bkv to the ragged
+        # lengths instead of padding either dispatch to full class tiles.
+        # The causal∧kv-edge conjunction uses the TRUE lengths: causal with
+        # Sq ≠ Skv is bottom-right aligned via the dynamic offset above.
         kpos = kv_start + _iota2((bq, bkv), 1)
         scores = jnp.where(kpos < true_skv, scores, NEG_INF)
         if causal:
             qpos = q_start + _iota2((bq, bkv), 0)
-            scores = jnp.where(qpos >= kpos, scores, NEG_INF)
+            scores = jnp.where(qpos + c_off >= kpos, scores, NEG_INF)
 
         m_prev = m_ref[...]                               # (bq, 1)
         m_new = jnp.maximum(m_prev, jnp.max(scores, 1, keepdims=True))

@@ -1,0 +1,34 @@
+"""Batched & grouped FT-GEMM subsystem (PR 3).
+
+The paper's threadblock-level ABFT wins biggest on irregular shapes; the two
+most irregular hot paths in the model zoo are *batched* (attention QK/PV
+cores, per-expert matmuls on uniform layouts) and *grouped* (MoE expert FFNs
+over ragged, routing-dependent token counts). This package puts both on the
+PR-2 template registry with ONE emitted body (`templates.emit` renders a
+`BatchedKernelSpec`):
+
+    layout.py   -- CSR-style group-sorted buffer: aligned offsets, tile→group
+                   map, row bounds, scatter/gather (zero capacity padding —
+                   worst case G·(bm-1) alignment rows)
+    dispatch.py -- batched_gemm_call (leading batch grid axis, masked ragged
+                   (m,n,k)), grouped_buffer_call / grouped_matmul_rows
+                   (per-group B via scalar-prefetched index maps, per-group
+                   checksums + detection/correction), plan_grouped
+
+Front doors: `kernels.ops.grouped_gemm_call` (rank-dispatching),
+`core.ft_batched_dot` / `core.ft_grouped_matmul` (policy-level, all three
+backends).
+"""
+from . import dispatch, layout
+from .dispatch import (batched_gemm_call, encode_batched_injection,
+                       grouped_buffer_call, grouped_matmul_rows,
+                       plan_grouped)
+from .layout import (GroupLayout, buffer_rows, gather_rows, make_layout,
+                     scatter_rows)
+
+__all__ = [
+    "dispatch", "layout", "batched_gemm_call", "encode_batched_injection",
+    "grouped_buffer_call", "grouped_matmul_rows", "plan_grouped",
+    "GroupLayout", "buffer_rows", "gather_rows", "make_layout",
+    "scatter_rows",
+]

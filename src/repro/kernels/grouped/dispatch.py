@@ -1,0 +1,220 @@
+"""Dispatch layer of the batched & grouped FT-GEMM subsystem.
+
+Parallels `kernels.ops.gemm_call` for the batched variant space:
+
+  * `batched_gemm_call`  — uniform batched (B, M, K) × (B, K, N) (or shared
+    (K, N)): one Pallas launch with a leading batch grid axis; ragged
+    (m, n, k) shared by all slices takes the masked path on a fitted tile
+    grid (exactly the 2-D dispatch policy, batched).
+  * `grouped_buffer_call` — ragged grouped GEMM over a group-sorted token
+    buffer (see `grouped.layout`): per-group B, per-group checksums, no
+    capacity padding — executed rows exceed the true rows by at most
+    G·(bm-1) alignment rows.
+  * `grouped_matmul_rows` — row-space convenience (layout + scatter + call
+    + gather in one step) for callers that run a single grouped GEMM.
+
+`kernels.ops.grouped_gemm_call` is the public front door that routes to
+these based on the operand ranks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import FTConfig, InjectionSpec, FT_OFF
+from .. import autotune, search
+from ..autotune import MXU, KernelParams
+# ops does not import this package at module level, so these are cycle-free;
+# one interpret-fallback policy and one padding helper repo-wide.
+from ..ops import _pad2 as _pad_last2
+from ..ops import _should_interpret
+from ..templates import registry
+from ..templates.spec import BatchedKernelSpec
+from . import layout as layout_mod
+
+
+def _resolve_ft(spec: BatchedKernelSpec, ft: Optional[FTConfig]) -> FTConfig:
+    if ft is None:
+        ft = FTConfig(level=spec.ft_level) if spec.ft else FT_OFF
+    if spec.ft != ft.enabled or (spec.ft and ft.level != spec.ft_level):
+        raise ValueError(f"FTConfig(level={ft.level!r}, action={ft.action!r})"
+                         f" disagrees with spec.ft_level={spec.ft_level!r}")
+    return ft
+
+
+def encode_batched_injection(spec: Optional[InjectionSpec], batch: int = 0):
+    """InjectionSpec → (int32[5], f32[1]) — the batched kernels' 5-wide
+    [enable, batch, row, col, k_step] layout. ``batch < 0`` broadcasts the
+    SEU into every batch slice (the jnp injector's semantics)."""
+    if spec is None:
+        return (jnp.zeros((5,), jnp.int32), jnp.zeros((1,), jnp.float32))
+    idx = jnp.array([1, batch, spec.row, spec.col, spec.k_step], jnp.int32)
+    return idx, jnp.array([spec.magnitude], jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# uniform batched
+# ---------------------------------------------------------------------------
+
+def batched_gemm_call(spec: BatchedKernelSpec, a: jax.Array, b: jax.Array, *,
+                      ft: Optional[FTConfig] = None,
+                      inject: Optional[InjectionSpec] = None,
+                      inj_batch: int = 0,
+                      params: Optional[KernelParams] = None,
+                      interpret: Optional[bool] = None,
+                      out_dtype=None
+                      ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Uniform batched GEMM: a (B, M, K) × b (B, K, N) or (K, N) → (B, M, N)
+    in ONE Pallas launch (leading batch grid axis — no per-slice loop).
+    Returns (C, report|None); the FT report is (B, gm, gn, W)."""
+    batch, m, k = a.shape
+    shared = b.ndim == 2
+    n = b.shape[-1]
+    assert b.shape[-2] == k and (shared or b.shape[0] == batch), \
+        (a.shape, b.shape)
+    in_bytes = a.dtype.itemsize
+    ft_level = spec.ft_level
+    ft = _resolve_ft(spec, ft)
+
+    p = params or autotune.best_params(
+        m, n, k, in_bytes, ft_level=ft_level,
+        spec=dataclasses.replace(spec, shared_b=shared, masked=False),
+        batch=batch)
+    divisible = (m % p.bm == 0 and n % p.bn == 0 and k % p.bk == 0)
+    if divisible:
+        rp, me, ne, ke = p, m, n, k
+    else:
+        sub = search.sublane(in_bytes)
+        align_m = MXU if ft_level == "tile" else sub
+        rp = KernelParams(bm=search.fit_tile(m, p.bm, align_m),
+                          bn=search.fit_tile(n, p.bn, MXU),
+                          bk=search.fit_tile(k, p.bk, MXU),
+                          shape_class=p.shape_class)
+        me, ne, ke = search.executed_dims(m, n, k, rp)
+    rspec = dataclasses.replace(spec, shared_b=shared,
+                                masked=not divisible)
+
+    a = _pad_last2(a, me, ke)
+    b = _pad_last2(b, ke, ne)
+    dims = jnp.array([m, n, k], jnp.int32) if (rspec.masked or rspec.ft) \
+        else None
+    inj_idx = inj_mag = None
+    if rspec.ft:
+        inj_idx, inj_mag = encode_batched_injection(inject, inj_batch)
+    out, rep = registry.batched_kernel_call(
+        a, b, inj_idx=inj_idx, inj_mag=inj_mag, dims=dims,
+        spec=rspec, params=rp, ft=ft,
+        interpret=_should_interpret(interpret), out_dtype=out_dtype)
+    if not divisible:
+        out = out[:, :m, :n]
+    return out, rep
+
+
+# ---------------------------------------------------------------------------
+# ragged grouped
+# ---------------------------------------------------------------------------
+
+def plan_grouped(t_rows: int, n: int, k: int, dtype, *, n_groups: int,
+                 ft_level: str = "off",
+                 spec: Optional[BatchedKernelSpec] = None,
+                 params: Optional[KernelParams] = None) -> KernelParams:
+    """Tile plan for a grouped launch. bm (the group-alignment granularity)
+    is fitted to the *average* group size so tiny experts don't drag whole
+    class tiles of padding along, AND capped so the worst-case per-group
+    alignment padding G·(bm-1) stays within 25% of the true rows — the
+    moe_dispatch benchmark's ≤1.25× ragged-floor criterion holds by
+    construction for any routing skew (down to the hardware sublane floor;
+    "tile"-level FT needs MXU-aligned bm and trades this bound away)."""
+    in_bytes = jnp.dtype(dtype).itemsize
+    p = params or autotune.best_params(t_rows, n, k, in_bytes,
+                                       ft_level=ft_level, spec=spec,
+                                       groups=n_groups)
+    align_m = MXU if ft_level == "tile" else search.sublane(in_bytes)
+    g = max(n_groups, 1)
+    avg = max(1, t_rows // g)
+    cap = ((t_rows // (4 * g) + 1) // align_m) * align_m
+    bm_max = max(align_m, min(p.bm, cap))
+    return KernelParams(bm=search.fit_tile(min(avg, bm_max), bm_max,
+                                           align_m),
+                        bn=search.fit_tile(n, p.bn, MXU),
+                        bk=search.fit_tile(k, p.bk, MXU),
+                        shape_class=p.shape_class)
+
+
+def grouped_buffer_call(spec: BatchedKernelSpec, buf: jax.Array,
+                        w: jax.Array,
+                        lay: Optional[layout_mod.GroupLayout] = None, *,
+                        gid: Optional[jax.Array] = None,
+                        row_end: Optional[jax.Array] = None,
+                        params: KernelParams,
+                        ft: Optional[FTConfig] = None,
+                        inject: Optional[InjectionSpec] = None,
+                        interpret: Optional[bool] = None,
+                        out_dtype=None
+                        ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Grouped GEMM over a prepared buffer: buf (t_buf, K) group-sorted
+    (see `layout.scatter_rows`), w (G, K, N). Group metadata comes from a
+    `GroupLayout` or the raw (``gid``, ``row_end``) arrays. Returns
+    (y_buf (t_buf, N), report|None); the report is (t_buf/bm, gn, W) — one
+    row per row tile, i.e. per-group blocks since tiles never span
+    groups."""
+    if lay is not None:
+        gid, row_end = lay.gid, lay.row_end
+        assert params.bm == lay.bm and buf.shape[0] == lay.t_buf, \
+            (params, lay.bm, buf.shape, lay.t_buf)
+    assert gid is not None and row_end is not None
+    t_buf, k = buf.shape
+    ng, k2, n = w.shape
+    assert k == k2 and ng == row_end.shape[0], (buf.shape, w.shape,
+                                                row_end.shape)
+    assert t_buf == gid.shape[0] * params.bm, (t_buf, gid.shape, params.bm)
+    ft = _resolve_ft(spec, ft)
+    rspec = dataclasses.replace(spec, grouped=True, shared_b=False)
+
+    # Fit n/k to the ragged problem (zero padding is checksum-neutral).
+    bk = search.fit_tile(k, params.bk, MXU)
+    bn = search.fit_tile(n, params.bn, MXU)
+    rp = KernelParams(bm=params.bm, bn=bn, bk=bk,
+                      shape_class=params.shape_class)
+    ke = ((k + bk - 1) // bk) * bk
+    ne = ((n + bn - 1) // bn) * bn
+    buf_p = _pad_last2(buf, t_buf, ke)
+    w_p = _pad_last2(w, ke, ne)
+    dims = jnp.array([t_buf, n, k], jnp.int32)
+    inj_idx = inj_mag = None
+    if rspec.ft:
+        from .. import ftgemm
+        inj_idx, inj_mag = ftgemm.encode_injection(inject)
+    out, rep = registry.batched_kernel_call(
+        buf_p, w_p, inj_idx=inj_idx, inj_mag=inj_mag, dims=dims,
+        gid=gid, row_end=row_end, spec=rspec, params=rp, ft=ft,
+        interpret=_should_interpret(interpret), out_dtype=out_dtype)
+    if ne != n:
+        out = out[:, :n]
+    return out, rep
+
+
+def grouped_matmul_rows(spec: BatchedKernelSpec, x: jax.Array, w: jax.Array,
+                        group_ids: jax.Array, *,
+                        ft: Optional[FTConfig] = None,
+                        inject: Optional[InjectionSpec] = None,
+                        params: Optional[KernelParams] = None,
+                        interpret: Optional[bool] = None,
+                        out_dtype=None
+                        ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Row-space grouped GEMM: y[r] = x[r] @ w[group_ids[r]], any group
+    sizes (including empty and ragged-last), zero capacity padding."""
+    t, k = x.shape
+    ng, _, n = w.shape
+    ft_level = spec.ft_level
+    p = params or plan_grouped(t, n, k, x.dtype, n_groups=ng,
+                               ft_level=ft_level, spec=spec)
+    lay = layout_mod.make_layout(group_ids, ng, p.bm)
+    buf = layout_mod.scatter_rows(x, lay)
+    y_buf, rep = grouped_buffer_call(spec, buf, w, lay, params=p, ft=ft,
+                                     inject=inject, interpret=interpret,
+                                     out_dtype=out_dtype)
+    return layout_mod.gather_rows(y_buf, lay), rep

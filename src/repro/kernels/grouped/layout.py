@@ -1,0 +1,121 @@
+"""CSR-style group layout for the ragged grouped GEMM.
+
+The grouped kernel consumes a *row-sorted token buffer*: all rows of group 0
+first, then group 1, … — with each group's region starting on a row-tile
+(``bm``) boundary so that every tile of the launch grid is wholly owned by
+one group. That alignment is what keeps the per-block ABFT checksums
+per-group (an SEU in one expert's rows can never contaminate a neighbor) and
+what lets the kernel's B index map be a plain scalar-prefetch lookup.
+
+Everything here is static-shaped jnp: group *sizes* are dynamic values
+(routing decides them at runtime) but the buffer capacity is the worst case
+``T + G·(bm-1)`` rounded to ``bm`` — the only "padding" the grouped path
+ever pays, bounded by ``G·(bm-1)`` rows regardless of how skewed the
+routing is (contrast: capacity-based dispatch pads every expert to the same
+worst-case capacity AND drops overflow tokens).
+
+`make_layout` builds the metadata, `scatter_rows`/`gather_rows` move data
+between row space (caller order) and buffer space (group-sorted).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GroupLayout:
+    """Metadata of one group-sorted buffer.
+
+    Static (Python ints, part of the treedef):
+      n_groups   — G
+      bm         — row-tile edge every group region is aligned to
+      t_buf      — buffer rows (bm multiple, worst-case capacity)
+      n_rows     — T, the true row count the layout was built for
+
+    Traced arrays:
+      counts     — int32 (G,)  rows routed to each group
+      base       — int32 (G,)  aligned first buffer row of each group
+      row_end    — int32 (G,)  first *dead* buffer row of each group
+                   (= base + counts; the kernel's ragged group-edge bound)
+      gid        — int32 (t_buf/bm,) owning group of each row tile
+                   (tiles past the last live row are clamped to G-1 and
+                   fully masked by row_end)
+      positions  — int32 (T,)  buffer row holding caller row r
+    """
+    n_groups: int
+    bm: int
+    t_buf: int
+    n_rows: int
+    counts: jax.Array
+    base: jax.Array
+    row_end: jax.Array
+    gid: jax.Array
+    positions: jax.Array
+
+    @property
+    def num_tiles(self) -> int:
+        return self.t_buf // self.bm
+
+    def tree_flatten(self):
+        arrays = (self.counts, self.base, self.row_end, self.gid,
+                  self.positions)
+        static = (self.n_groups, self.bm, self.t_buf, self.n_rows)
+        return arrays, static
+
+    @classmethod
+    def tree_unflatten(cls, static, arrays):
+        return cls(*static, *arrays)
+
+
+def buffer_rows(n_rows: int, n_groups: int, bm: int) -> int:
+    """Static worst-case buffer capacity: every group wastes at most bm-1
+    alignment rows, and the per-group aligned sizes are bm multiples, so
+    their sum never exceeds this bound."""
+    return bm * max(1, (n_rows + n_groups * (bm - 1)) // bm)
+
+
+def make_layout(group_ids: jax.Array, n_groups: int, bm: int) -> GroupLayout:
+    """group_ids: int32 (T,) — owning group of each caller row."""
+    t = group_ids.shape[0]
+    group_ids = group_ids.astype(jnp.int32)
+    t_buf = buffer_rows(t, n_groups, bm)
+    counts = jnp.zeros((n_groups,), jnp.int32).at[group_ids].add(1)
+    aligned = ((counts + bm - 1) // bm) * bm
+    ends = jnp.cumsum(aligned)                       # aligned region ends
+    base = ends - aligned                            # aligned region starts
+    row_end = base + counts
+
+    # Buffer position of each caller row: its group's base plus its rank in
+    # the (stable) group-sorted order.
+    order = jnp.argsort(group_ids, stable=True)      # caller rows, sorted
+    sorted_gids = group_ids[order]
+    group_start_sorted = jnp.cumsum(counts) - counts
+    pos_sorted = (base[sorted_gids] + jnp.arange(t, dtype=jnp.int32)
+                  - group_start_sorted[sorted_gids])
+    positions = jnp.zeros((t,), jnp.int32).at[order].set(pos_sorted)
+
+    # Owning group per row tile: which aligned region the tile start falls
+    # in. Tiles past the last live region clamp to the final group — their
+    # rows are ≥ row_end[G-1], so the kernel masks them out entirely.
+    tile_start = jnp.arange(t_buf // bm, dtype=jnp.int32) * bm
+    gid = jnp.clip(jnp.searchsorted(ends, tile_start, side="right"),
+                   0, n_groups - 1).astype(jnp.int32)
+    return GroupLayout(n_groups=n_groups, bm=bm, t_buf=t_buf, n_rows=t,
+                       counts=counts, base=base, row_end=row_end, gid=gid,
+                       positions=positions)
+
+
+def scatter_rows(x: jax.Array, layout: GroupLayout) -> jax.Array:
+    """(T, K) caller rows → (t_buf, K) group-sorted buffer (dead rows 0)."""
+    assert x.shape[0] == layout.n_rows, (x.shape, layout.n_rows)
+    buf = jnp.zeros((layout.t_buf,) + x.shape[1:], x.dtype)
+    return buf.at[layout.positions].set(x)
+
+
+def gather_rows(buf: jax.Array, layout: GroupLayout) -> jax.Array:
+    """(t_buf, N) buffer → (T, N) caller rows (drops dead rows)."""
+    return buf[layout.positions]

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.core.policy import FTConfig, InjectionSpec, ONLINE_BLOCK, FT_OFF
 from . import autotune, ftgemm, gemm, search
-from .templates import KernelSpec, registry
+from .templates import BatchedKernelSpec, KernelSpec, registry
 from .templates import spec as spec_mod
 
 
@@ -36,10 +36,13 @@ def _should_interpret(interpret: Optional[bool]) -> bool:
 
 
 def _pad2(x: jax.Array, rows: int, cols: int) -> jax.Array:
-    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    """Zero-pad the trailing two dims to (rows, cols) — any leading batch
+    dims pass through (shared by the 2-D and batched/grouped dispatchers;
+    zero padding is ABFT-neutral)."""
+    pr, pc = rows - x.shape[-2], cols - x.shape[-1]
     if pr == 0 and pc == 0:
         return x
-    return jnp.pad(x, ((0, pr), (0, pc)))
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pr), (0, pc)])
 
 
 def dispatch_info(m: int, n: int, k: int,
@@ -199,6 +202,49 @@ def fused_matmul(a: jax.Array, b: jax.Array, *,
                      out_dtype=out_dtype)
 
 
+def grouped_gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
+                      group_ids: Optional[jax.Array] = None,
+                      ft: Optional[FTConfig] = None,
+                      inject: Optional[InjectionSpec] = None,
+                      inj_batch: int = 0,
+                      params: Optional[autotune.KernelParams] = None,
+                      interpret: Optional[bool] = None,
+                      out_dtype=None) -> Tuple[jax.Array,
+                                               Optional[jax.Array]]:
+    """The batched/grouped front door (PR 3) — `gemm_call`'s sibling for the
+    leading-batch-axis variant space, dispatching on operand ranks:
+
+      * a (B, M, K), b (B, K, N) or (K, N): uniform batched GEMM — ONE
+        Pallas launch with a leading batch grid axis (this is what
+        `core.ft_batched_dot`'s pallas backend emits for attention QK/PV
+        and per-expert matmuls). Ragged (m, n, k) shared by the batch takes
+        the masked fitted-tile path.
+      * a (T, K), b (G, K, N) with ``group_ids`` int32 (T,): ragged grouped
+        GEMM — y[t] = a[t] @ b[group_ids[t]] over a group-sorted buffer
+        with zero capacity padding; detection/correction run per group
+        (`core.ft_grouped_matmul` / `models.moe` route here).
+
+    `spec` may be a plain `KernelSpec` (promoted to `BatchedKernelSpec`) or
+    a `BatchedKernelSpec`; masked/shared_b/grouped are re-resolved from the
+    operands. Returns (C, report|None)."""
+    from . import grouped as grouped_mod
+
+    bspec = BatchedKernelSpec(
+        ft_level=spec.ft_level, epilogue=spec.epilogue,
+        acc_dtype=spec.acc_dtype, out_dtype=spec.out_dtype)
+    if a.ndim == 3:
+        assert group_ids is None, "uniform batched GEMM takes no group_ids"
+        return grouped_mod.batched_gemm_call(
+            bspec, a, b, ft=ft, inject=inject, inj_batch=inj_batch,
+            params=params, interpret=interpret, out_dtype=out_dtype)
+    assert a.ndim == 2 and b.ndim == 3 and group_ids is not None, \
+        (a.shape, b.shape, group_ids)
+    return grouped_mod.grouped_matmul_rows(
+        dataclasses.replace(bspec, grouped=True), a, b, group_ids, ft=ft,
+        inject=inject, params=params, interpret=interpret,
+        out_dtype=out_dtype)
+
+
 def ft_matmul(a: jax.Array, b: jax.Array, *,
               ft: FTConfig = ONLINE_BLOCK,
               spec: Optional[InjectionSpec] = None,
@@ -238,11 +284,18 @@ def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
     the sequence dims take the masked ragged path: true (Sq, Skv) ride in
     via scalar prefetch, blocks are *fitted* to the ragged lengths
     (sublane-aligned bq, lane-aligned bkv — no padding to full class
-    tiles), and padded KV positions are masked to -inf in-kernel, so
-    non-causal ragged Skv is exact too. Returns (out, report)."""
+    tiles), and padded KV positions are masked to -inf in-kernel. Ragged
+    Skv is exact for non-causal AND causal dispatch: the in-kernel
+    causal∧kv-edge mask is bottom-right aligned on the true lengths
+    (query i attends kv j iff j ≤ i + Skv − Sq), so causal cross-length
+    attention (Skv ≥ Sq, the decode convention) no longer needs padded
+    shapes. Returns (out, report)."""
     from . import flashft
     bh, sq, dh = q.shape
     skv = k.shape[1]
+    assert not causal or skv >= sq, (
+        "causal flash_ft is bottom-right aligned: needs Skv >= Sq "
+        f"(got Sq={sq}, Skv={skv})")
     sub = search.sublane(q.dtype.itemsize)
     dh_p = ((dh + 127) // 128) * 128
     bq = search.fit_tile(sq, min(bq, ((sq + 127) // 128) * 128), sub)

@@ -59,13 +59,17 @@ class FTRefOut(NamedTuple):
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True) -> jax.Array:
     """Plain attention oracle for the flash-FT kernel.
-    q: (BH, Sq, dh); k, v: (BH, Skv, dh)."""
+    q: (BH, Sq, dh); k, v: (BH, Skv, dh). Causal masking is bottom-right
+    aligned for Sq ≠ Skv (query i attends kv j iff j ≤ i + Skv − Sq — the
+    decode/cross-length convention; identical to the triangular mask when
+    Sq == Skv)."""
     dh = q.shape[-1]
     scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * dh ** -0.5
     if causal:
         sq, sk = q.shape[1], k.shape[1]
-        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        mask = (jnp.arange(sq)[:, None] + (sk - sq)
+                >= jnp.arange(sk)[None, :])
         scores = jnp.where(mask[None], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)

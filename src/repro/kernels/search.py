@@ -50,12 +50,20 @@ def sublane(in_bytes: int) -> int:
 # ---------------------------------------------------------------------------
 
 def vmem_bytes(p: KernelParams, in_bytes: int = 4,
-               ft_level: str = "off", spec=None) -> int:
+               ft_level: str = "off", spec=None, *,
+               m: int = 0, groups: int = 0) -> int:
     """FT-level-and-variant-aware working set — delegates to the single
     model on `KernelParams.vmem_bytes` (plus the fused-epilogue aux buffers
     of a `templates.KernelSpec`) so search legality and budget clamping can
-    never disagree."""
+    never disagree. A grouped launch (``groups > 0``) additionally holds its
+    scalar-prefetched tile→group map and per-group row bounds on chip:
+    4·(num_tiles + groups) bytes, where the tile count includes the
+    worst-case per-group alignment padding — the group count is part of the
+    working set, not just the key."""
     extra = spec.extra_vmem_bytes(p.bm, p.bn, in_bytes) if spec else 0
+    if groups > 0:
+        num_tiles = (m + groups * (p.bm - 1)) // p.bm + 1
+        extra += 4 * (num_tiles + groups)
     return p.vmem_bytes(in_bytes, ft_level) + extra
 
 
@@ -66,17 +74,20 @@ def _tile_range(dim: int, max_tile: int = MAX_TILE) -> List[int]:
 
 def enumerate_candidates(m: int, n: int, k: int, *, in_bytes: int = 4,
                          ft_level: str = "off", spec=None,
-                         max_tile: int = MAX_TILE) -> List[KernelParams]:
+                         max_tile: int = MAX_TILE,
+                         groups: int = 0) -> List[KernelParams]:
     """All legal tile configs for the problem: MXU-aligned in every dim,
     no larger than the MXU-padded problem, within the VMEM budget (fused
-    epilogue aux buffers included when a `spec` is given)."""
+    epilogue aux buffers — and grouped-dispatch metadata when ``groups`` is
+    given — included)."""
     cls = classify(m, n, k)
     out = []
     for bm in _tile_range(m, max_tile):
         for bn in _tile_range(n, max_tile):
             for bk in _tile_range(k, max_tile):
                 p = KernelParams(bm=bm, bn=bn, bk=bk, shape_class=cls)
-                if vmem_bytes(p, in_bytes, ft_level, spec) <= VMEM_BUDGET:
+                if vmem_bytes(p, in_bytes, ft_level, spec, m=m,
+                              groups=groups) <= VMEM_BUDGET:
                     out.append(p)
     return out
 
@@ -110,7 +121,7 @@ def ft_overhead_flops(p: KernelParams, ft_level: str, k_steps: int,
 
 def predicted_time_s(m: int, n: int, k: int, p: KernelParams, *,
                      in_bytes: int = 4, ft_level: str = "off",
-                     spec=None) -> float:
+                     spec=None, batch: int = 1, groups: int = 0) -> float:
     """Roofline score of one candidate on the (padded) problem.
 
     HBM traffic model: each A tile is streamed once per output-column of
@@ -119,7 +130,16 @@ def predicted_time_s(m: int, n: int, k: int, p: KernelParams, *,
     write. Compute: 2·M·N·K MACs on executed dims + checksum updates. A
     fused-epilogue `spec` adds its aux-operand reads and elementwise FLOPs
     (`KernelSpec.extra_hbm_bytes` / `epilogue_flops`) — the variant shifts
-    the roofline intensity, which is why it is part of the tuning key."""
+    the roofline intensity, which is why it is part of the tuning key.
+
+    ``batch`` multiplies every term (a uniform batched launch runs the
+    whole grid once per batch slice). ``groups`` models the grouped ragged
+    dispatch instead: every group starts on a bm row-tile boundary, so up
+    to bm-1 padding rows ride along per group — the executed M grows by
+    the worst case ``groups·(bm-1)``, which is what steers the search away
+    from deep row tiles when the expert count is high."""
+    if groups > 0:
+        m = m + groups * (p.bm - 1)     # per-group row-alignment padding
     me, ne, ke = executed_dims(m, n, k, p)
     gm, gn, gk = me // p.bm, ne // p.bn, ke // p.bk
     flops = 2.0 * me * ne * ke + ft_overhead_flops(p, ft_level, gk, gm * gn)
@@ -130,8 +150,8 @@ def predicted_time_s(m: int, n: int, k: int, p: KernelParams, *,
     if spec is not None:
         flops += spec.epilogue_flops(me, ne)
         extra_bytes = spec.extra_hbm_bytes(me, ne, in_bytes)
-    return roofline.kernel_time_s(flops,
-                                  a_bytes + b_bytes + c_bytes + extra_bytes)
+    return batch * roofline.kernel_time_s(
+        flops, a_bytes + b_bytes + c_bytes + extra_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -208,17 +228,18 @@ def select_best(m: int, n: int, k: int, *, in_bytes: int = 4,
                 ft_level: str = "off", spec=None,
                 measure: Optional[bool] = None,
                 max_tile: int = MAX_TILE,
-                candidates: Optional[Sequence[KernelParams]] = None
-                ) -> KernelParams:
+                candidates: Optional[Sequence[KernelParams]] = None,
+                batch: int = 1, groups: int = 0) -> KernelParams:
     """The search: enumerate → score (hardware when available, roofline
     model otherwise) → deterministic winner (ties → larger tiles). The
-    measured path times the base kernel of the requested FT level (epilogue
-    chains perturb runtime well under timer noise on hardware; the modeled
-    path accounts them exactly)."""
+    measured path times the base 2-D kernel of the requested FT level
+    (epilogue chains and the batch axis perturb runtime well under timer
+    noise on hardware; the modeled path accounts batch/group counts
+    exactly)."""
     cands = list(candidates if candidates is not None else
                  enumerate_candidates(m, n, k, in_bytes=in_bytes,
                                       ft_level=ft_level, spec=spec,
-                                      max_tile=max_tile))
+                                      max_tile=max_tile, groups=groups))
     if not cands:
         raise ValueError(f"no legal tile candidates for {(m, n, k)}")
     if measure is None:
@@ -228,7 +249,8 @@ def select_best(m: int, n: int, k: int, *, in_bytes: int = 4,
             m, n, k, cands, in_bytes=in_bytes, ft_level=ft_level)]
     else:
         scores = [predicted_time_s(m, n, k, p, in_bytes=in_bytes,
-                                   ft_level=ft_level, spec=spec)
+                                   ft_level=ft_level, spec=spec,
+                                   batch=batch, groups=groups)
                   for p in cands]
     return min(zip(scores, cands),
                key=lambda sp: (sp[0], -sp[1].bm * sp[1].bn, -sp[1].bk))[1]

@@ -1,17 +1,20 @@
 """Declarative kernel-generation subsystem (the paper's template code
 generator, §3.2, grown into a variant registry with fused epilogues).
 
-    spec.py       -- KernelSpec: ft_level × masked × epilogue chain × dtypes
+    spec.py       -- KernelSpec: ft_level × masked × epilogue chain × dtypes;
+                     BatchedKernelSpec adds the leading batch/group axis
     epilogues.py  -- registered epilogue ops (bias/activation/residual) with
                      checksum-fold rules for ABFT-through-epilogue
     emit.py       -- spec → parameterized Pallas kernel body (staged emitter)
     registry.py   -- spec + tile params → memoized pallas_call launches
+                     (`kernel_call` 2-D, `batched_kernel_call` batched/grouped)
 
-Entry points: `kernels.ops.gemm_call` (dispatching front door),
-`registry.kernel_call` (raw launch), `epilogues.register` (extend the
-variant space).
+Entry points: `kernels.ops.gemm_call` / `kernels.ops.grouped_gemm_call`
+(dispatching front doors), `registry.kernel_call` (raw launch),
+`epilogues.register` (extend the variant space).
 """
 from . import emit, epilogues, registry, spec
-from .spec import KernelSpec, fused
+from .spec import BatchedKernelSpec, KernelSpec, fused
 
-__all__ = ["emit", "epilogues", "registry", "spec", "KernelSpec", "fused"]
+__all__ = ["emit", "epilogues", "registry", "spec", "BatchedKernelSpec",
+           "KernelSpec", "fused"]

@@ -27,10 +27,19 @@ applied to the whole epilogue.
 Layout of the generated kernel's positional refs (see `Layout`):
 
     [inj_idx, inj_mag, dims]?  scalar prefetch   (FT: all 3; masked-only: dims)
+    [gid, row_end]?            scalar prefetch   (grouped specs only)
     a, b [, bias][, residual]  VMEM inputs
     out [, report]             VMEM outputs
     acc [, colck, rowck]       VMEM scratch
     [amax, bmax]               SMEM scratch      (FT threshold trackers)
+
+Batched specs (`BatchedKernelSpec`) reuse this body: uniform batched adds a
+leading batch grid axis (a/b/out/report blocks gain a unit leading dim and
+the 5-wide [enable, batch, row, col, k_step] injection layout); grouped
+keeps the 3-D grid but reads its owning group from the scalar-prefetched
+tile→group map and masks rows past the group's `row_end` — per-group
+checksums and correction fall out of per-block state, since row tiles
+never span groups.
 """
 from __future__ import annotations
 
@@ -65,9 +74,10 @@ class Layout:
 
 def layout(spec: KernelSpec) -> Layout:
     aux = int(spec.needs_bias) + int(spec.needs_residual)
+    grp = 2 if spec.grouped else 0      # gid[num_tiles], row_end[G]
     if spec.ft:
-        return Layout(3, 2 + aux, 2, 3, 2)
-    return Layout(1 if spec.masked else 0, 2 + aux, 1, 1, 0)
+        return Layout(3 + grp, 2 + aux, 2, 3, 2)
+    return Layout((1 if spec.masked else 0) + grp, 2 + aux, 1, 1, 0)
 
 
 # ---------------------------------------------------------------------------
@@ -96,18 +106,21 @@ def _locate_correct_full(acc, d_col, d_row, tau, corrects, bm, bn):
 
 def _record(rep_ref, det, mag, row_g, col_g, d_col, d_row, tau, k_elapsed,
             corrects):
+    # The report block is (1, 1, W) for 2-D/grouped launches and
+    # (1, 1, 1, W) for batched ones — index the leading unit dims away.
+    z = (0,) * (len(rep_ref.shape) - 1)
     detf = det.astype(jnp.float32)
     resid = jnp.maximum(jnp.max(jnp.abs(d_col)), jnp.max(jnp.abs(d_row)))
-    rep_ref[0, 0, 0] += detf
-    rep_ref[0, 0, 1] += detf if corrects else 0.0
-    rep_ref[0, 0, 2] = jnp.where(det, row_g.astype(jnp.float32),
-                                 rep_ref[0, 0, 2])
-    rep_ref[0, 0, 3] = jnp.where(det, col_g.astype(jnp.float32),
-                                 rep_ref[0, 0, 3])
-    rep_ref[0, 0, 4] = jnp.where(det, mag, rep_ref[0, 0, 4])
-    rep_ref[0, 0, 5] = jnp.maximum(rep_ref[0, 0, 5], resid)
-    rep_ref[0, 0, 6] = tau
-    rep_ref[0, 0, 7] = k_elapsed
+    rep_ref[z + (0,)] += detf
+    rep_ref[z + (1,)] += detf if corrects else 0.0
+    rep_ref[z + (2,)] = jnp.where(det, row_g.astype(jnp.float32),
+                                  rep_ref[z + (2,)])
+    rep_ref[z + (3,)] = jnp.where(det, col_g.astype(jnp.float32),
+                                  rep_ref[z + (3,)])
+    rep_ref[z + (4,)] = jnp.where(det, mag, rep_ref[z + (4,)])
+    rep_ref[z + (5,)] = jnp.maximum(rep_ref[z + (5,)], resid)
+    rep_ref[z + (6,)] = tau
+    rep_ref[z + (7,)] = k_elapsed
 
 
 # ---------------------------------------------------------------------------
@@ -118,10 +131,16 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
            n_bands: int = 1, verify_step: bool = True, corrects: bool = True,
            rel_tau: float = 64.0):
     """Instantiate the kernel body for `spec` with the given static
-    parameters. Returns a function matching `layout(spec)`'s ref list."""
+    parameters. Returns a function matching `layout(spec)`'s ref list.
+
+    Batched specs add a leading batch grid axis (uniform batched) or a
+    scalar-prefetched tile→group map (grouped); see `BatchedKernelSpec`."""
     ft = spec.ft
     mode = spec.ft_level
     masked = spec.masked
+    batched = spec.batched and not spec.grouped   # uniform batched (4-D grid)
+    grouped = spec.grouped
+    shared_b = spec.shared_b
     chain = [epilogues.get(n) for n in spec.epilogue]
     # Linear-prefix fold is a block-mode feature: tile/inner keep their
     # per-band / per-step verification on the raw accumulator and apply the
@@ -137,6 +156,10 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
         else:
             inj_idx_ref = inj_mag_ref = None
             dims_ref = refs.pop(0) if masked else None
+        gid_ref = row_end_ref = None
+        if grouped:
+            gid_ref = refs.pop(0)
+            row_end_ref = refs.pop(0)
         a_ref = refs.pop(0)
         b_ref = refs.pop(0)
         bias_ref = refs.pop(0) if spec.needs_bias else None
@@ -148,9 +171,16 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
         if ft:
             colck_ref, rowck_ref, amax_ref, bmax_ref = refs
 
-        i = pl.program_id(0)
-        j = pl.program_id(1)
-        s = pl.program_id(2)
+        if batched:
+            g = pl.program_id(0)
+            i = pl.program_id(1)
+            j = pl.program_id(2)
+            s = pl.program_id(3)
+        else:
+            i = pl.program_id(0)
+            j = pl.program_id(1)
+            s = pl.program_id(2)
+            g = gid_ref[i] if grouped else None
         last = s == k_steps - 1
 
         def _aux(op):
@@ -159,6 +189,10 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
             if op.aux == "tile":
                 return res_ref[...].astype(jnp.float32)
             return None
+
+        def _store(y):
+            # Batched output blocks are (1, bm, bn) — reshape the 2-D tile.
+            out_ref[...] = y.astype(out_ref.dtype).reshape(out_ref.shape)
 
         # ---- prologue: first-step scratch init ---------------------------
         @pl.when(s == 0)
@@ -172,17 +206,20 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
                 rep_ref[...] = jnp.zeros_like(rep_ref)
 
         # ---- mac: load (+ragged mask), MAC, checksums --------------------
-        a = a_ref[...]
-        b = b_ref[...]
+        a = a_ref[0] if batched else a_ref[...]
+        b = b_ref[...] if (not spec.batched or shared_b) else b_ref[0]
         if masked:
             # Ragged dispatch: zero everything past the true (m, n, k)
             # carried in via scalar prefetch. The checksum math then sees
             # exactly zero-padding semantics (checksums of zero rows/cols
             # are zero), so ABFT survives the ragged edges and garbage in
             # the padded region (even NaN/Inf) cannot leak into the
-            # accumulator or the running checksums.
+            # accumulator or the running checksums. Grouped dispatch swaps
+            # the row bound for the owning group's last live buffer row
+            # (`row_end[gid]`) — the per-group ragged edge.
             tm, tn, tk = dims_ref[0], dims_ref[1], dims_ref[2]
-            a_ok = ((i * bm + _iota2((bm, bk), 0) < tm)
+            row_hi = row_end_ref[g] if grouped else tm
+            a_ok = ((i * bm + _iota2((bm, bk), 0) < row_hi)
                     & (s * bk + _iota2((bm, bk), 1) < tk))
             b_ok = ((s * bk + _iota2((bk, bn), 0) < tk)
                     & (j * bn + _iota2((bk, bn), 1) < tn))
@@ -198,7 +235,7 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
                 y = acc_ref[...].astype(jnp.float32)
                 for op in chain:
                     y = op.apply(y, _aux(op))
-                out_ref[...] = y.astype(out_ref.dtype)
+                _store(y)
             return
 
         af = a.astype(jnp.float32)
@@ -220,13 +257,26 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
         delta = jnp.dot(a, b, preferred_element_type=jnp.float32)
 
         # ---- emulated SEU (scalar-prefetched spec) -----------------------
-        enable, g_row, g_col, inj_k = (inj_idx_ref[0], inj_idx_ref[1],
-                                       inj_idx_ref[2], inj_idx_ref[3])
+        # Uniform batched specs carry a 5-wide index [enable, batch, row,
+        # col, k_step]; 2-D and grouped keep the 4-wide layout (grouped rows
+        # are global buffer coordinates, so the tile offset locates them).
+        if batched:
+            enable, inj_b, g_row, g_col, inj_k = (
+                inj_idx_ref[0], inj_idx_ref[1], inj_idx_ref[2],
+                inj_idx_ref[3], inj_idx_ref[4])
+        else:
+            enable, g_row, g_col, inj_k = (inj_idx_ref[0], inj_idx_ref[1],
+                                           inj_idx_ref[2], inj_idx_ref[3])
+            inj_b = None
         r_loc = g_row - i * bm
         c_loc = g_col - j * bn
         hit_now = ((enable == 1) & (s == inj_k)
                    & (r_loc >= 0) & (r_loc < bm)
                    & (c_loc >= 0) & (c_loc < bn))
+        if batched:
+            # batch < 0 broadcasts the SEU into every slice — matching the
+            # jnp path's inject_spec semantics (core._ft_bmm_backend).
+            hit_now = hit_now & ((inj_b < 0) | (inj_b == g))
         hit_mask = ((_iota2((bm, bn), 0) == r_loc)
                     & (_iota2((bm, bn), 1) == c_loc)
                     & hit_now)
@@ -310,7 +360,7 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
                         d_col, d_row, tau, k_elapsed, corrects)
                 for op in chain[split:]:
                     acc = op.apply(acc, _aux(op))
-                out_ref[...] = acc.astype(out_ref.dtype)
+                _store(acc)
             else:
                 if mode == "tile":
                     _verify_raw()          # corrects acc_ref in place
@@ -318,8 +368,11 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
                 y = acc_ref[...]
                 for op in chain:
                     y = op.apply(y, _aux(op))
-                out_ref[...] = y.astype(out_ref.dtype)
+                _store(y)
 
-    kernel.__name__ = f"gemm_{spec.ft_level}" + ("_masked" if masked else "") \
-        + ("".join("_" + n for n in spec.epilogue))
+    kernel.__name__ = (f"gemm_{spec.ft_level}"
+                       + ("_grouped" if grouped else "")
+                       + ("_batched" if batched else "")
+                       + ("_masked" if masked else "")
+                       + ("".join("_" + n for n in spec.epilogue)))
     return kernel

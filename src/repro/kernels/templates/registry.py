@@ -21,7 +21,7 @@ from repro.core.policy import FTConfig
 from ..pallas_compat import CompilerParams as _CompilerParams
 from ..autotune import MXU, KernelParams
 from . import emit
-from .spec import KernelSpec
+from .spec import BatchedKernelSpec, KernelSpec
 
 REPORT_WIDTH = emit.REPORT_WIDTH
 
@@ -141,6 +141,155 @@ def kernel_call(a: jax.Array, b: jax.Array,
             out_shape=out_shape[0], scratch_shapes=scratch,
             compiler_params=compiler_params, interpret=interpret)
         result = call(*operands)
+
+    if spec.ft:
+        out, rep = result
+        return out, rep
+    return result, None
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "params", "ft", "interpret",
+                                    "out_dtype"))
+def batched_kernel_call(a: jax.Array, b: jax.Array,
+                        inj_idx: Optional[jax.Array] = None,
+                        inj_mag: Optional[jax.Array] = None,
+                        dims: Optional[jax.Array] = None,
+                        gid: Optional[jax.Array] = None,
+                        row_end: Optional[jax.Array] = None, *,
+                        spec: BatchedKernelSpec, params: KernelParams,
+                        ft: Optional[FTConfig] = None,
+                        interpret: bool = False, out_dtype=None):
+    """Launch a `BatchedKernelSpec` variant. Returns (C, report|None).
+
+    Uniform batched (``spec.grouped=False``): a (B, M, K); b (B, K, N), or
+    (K, N) with ``shared_b``; the grid gains a leading batch axis and the
+    report becomes (B, gm, gn, W). ``inj_idx`` is the 5-wide batched layout
+    int32[5] = [enable, batch, row, col, k_step].
+
+    Grouped (``spec.grouped=True``): a (T_buf, K) row-sorted token buffer
+    whose groups start on bm boundaries; b (G, K, N); ``gid`` int32[T_buf/bm]
+    maps each row tile to its owning group (drives B's index map);
+    ``row_end`` int32[G] is each group's first dead buffer row (in-kernel
+    ragged group-edge mask). ``inj_idx`` keeps the 2-D 4-wide layout with
+    rows in global buffer coordinates. The grid/report stay 3-D: the grouped
+    launch is a 2-D GEMM over the buffer with per-tile B selection."""
+    grouped = spec.grouped
+    bm, bn, bk = params.bm, params.bn, params.bk
+    if grouped:
+        t_buf, k = a.shape
+        ng, k2, n = b.shape
+        assert k == k2, (a.shape, b.shape)
+        assert t_buf % bm == 0 and n % bn == 0 and k % bk == 0, \
+            ((t_buf, n, k), params)
+        assert gid is not None and row_end is not None
+        assert gid.shape == (t_buf // bm,) and row_end.shape == (ng,), \
+            (gid.shape, row_end.shape, t_buf // bm, ng)
+        grid = (t_buf // bm, n // bn, k // bk)
+        batch = None
+    else:
+        batch, m, k = a.shape
+        if spec.shared_b:
+            k2, n = b.shape
+        else:
+            b2, k2, n = b.shape
+            assert b2 == batch, (a.shape, b.shape)
+        assert k == k2, (a.shape, b.shape)
+        assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+            ((m, n, k), params)
+        grid = (batch, m // bm, n // bn, k // bk)
+    from .. import search
+    need = MXU if (spec.ft_level == "tile" or not spec.masked) \
+        else search.sublane(a.dtype.itemsize)
+    assert bm % need == 0, (params, spec)
+
+    out_dtype = out_dtype or (jnp.dtype(spec.out_dtype) if spec.out_dtype
+                              else a.dtype)
+    n_bands = bm // MXU if spec.ft_level == "tile" else 1
+    ft = ft or FTConfig(level=spec.ft_level if spec.ft else "block",
+                        action="correct" if spec.ft else "off")
+    kernel = emit.render(
+        spec, k_steps=grid[-1], bm=bm, bn=bn, bk=bk, n_bands=n_bands,
+        verify_step=(ft.verify == "step"), corrects=ft.corrects,
+        rel_tau=ft.rel_tau)
+    lay = emit.layout(spec)
+
+    prefetch = []
+    if spec.ft:
+        assert inj_idx is not None and inj_mag is not None
+        if dims is None:
+            dims = (jnp.array([a.shape[0], n, k], jnp.int32) if grouped
+                    else jnp.array([m, n, k], jnp.int32))
+        prefetch = [inj_idx, inj_mag, dims]
+    elif spec.masked:
+        assert dims is not None
+        prefetch = [dims]
+    if grouped:
+        prefetch += [gid, row_end]
+    gpos = len(prefetch) - 2            # index of `gid` among scalar refs
+
+    if grouped:
+        in_specs = [
+            pl.BlockSpec((bm, bk), lambda i, j, s, *_: (i, s)),
+            # The group id *is* the block index of B — the scalar-prefetched
+            # tile→group map drives which expert's weights stream in.
+            pl.BlockSpec((1, bk, bn),
+                         lambda i, j, s, *pf: (pf[gpos][i], s, j)),
+        ]
+        out_specs = [pl.BlockSpec((bm, bn), lambda i, j, s, *_: (i, j))]
+        out_shape = [jax.ShapeDtypeStruct((t_buf, n), out_dtype)]
+        rep_spec = pl.BlockSpec((1, 1, REPORT_WIDTH),
+                                lambda i, j, s, *_: (i, j, 0))
+        rep_shape = jax.ShapeDtypeStruct(
+            (grid[0], grid[1], REPORT_WIDTH), jnp.float32)
+        semantics = (pltpu.PARALLEL, pltpu.PARALLEL, pltpu.ARBITRARY)
+    else:
+        in_specs = [
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, s, *_: (g, i, s)),
+            (pl.BlockSpec((bk, bn), lambda g, i, j, s, *_: (s, j))
+             if spec.shared_b else
+             pl.BlockSpec((1, bk, bn), lambda g, i, j, s, *_: (g, s, j))),
+        ]
+        out_specs = [pl.BlockSpec((1, bm, bn),
+                                  lambda g, i, j, s, *_: (g, i, j))]
+        out_shape = [jax.ShapeDtypeStruct((batch, m, n), out_dtype)]
+        rep_spec = pl.BlockSpec((1, 1, 1, REPORT_WIDTH),
+                                lambda g, i, j, s, *_: (g, i, j, 0))
+        rep_shape = jax.ShapeDtypeStruct(
+            (batch, grid[1], grid[2], REPORT_WIDTH), jnp.float32)
+        semantics = (pltpu.PARALLEL, pltpu.PARALLEL, pltpu.PARALLEL,
+                     pltpu.ARBITRARY)
+
+    scratch = [pltpu.VMEM((bm, bn), jnp.dtype(spec.acc_dtype))]
+    if spec.ft:
+        out_specs.append(rep_spec)
+        out_shape.append(rep_shape)
+        scratch += [pltpu.VMEM((n_bands, bn), jnp.float32),
+                    pltpu.VMEM((bm, 1), jnp.float32),
+                    pltpu.SMEM((1, 1), jnp.float32),
+                    pltpu.SMEM((1, 1), jnp.float32)]
+    assert len(prefetch) == lay.n_prefetch, (len(prefetch), lay)
+
+    compiler_params = _CompilerParams(dimension_semantics=semantics)
+    if prefetch:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=len(prefetch),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs if spec.ft else out_specs[0],
+            scratch_shapes=scratch,
+        )
+        call = pl.pallas_call(
+            kernel, grid_spec=grid_spec,
+            out_shape=out_shape if spec.ft else out_shape[0],
+            compiler_params=compiler_params, interpret=interpret)
+        result = call(*prefetch, a, b)
+    else:
+        call = pl.pallas_call(
+            kernel, grid=grid, in_specs=in_specs, out_specs=out_specs[0],
+            out_shape=out_shape[0], scratch_shapes=scratch,
+            compiler_params=compiler_params, interpret=interpret)
+        result = call(a, b)
 
     if spec.ft:
         out, rep = result

@@ -34,6 +34,14 @@ class KernelSpec:
     acc_dtype: str = "float32"
     out_dtype: Optional[str] = None   # None → follow the input dtype
 
+    #: Structure flags the emitter branches on. The base spec is the 2-D
+    #: GEMM; `BatchedKernelSpec` overrides these (kept as plain class
+    #: attributes so they are not dataclass fields / not part of equality
+    #: for the 2-D case).
+    batched = False
+    grouped = False
+    shared_b = False
+
     def __post_init__(self):
         if self.ft_level not in FT_LEVELS:
             raise ValueError(f"ft_level must be one of {FT_LEVELS}, "
@@ -123,6 +131,59 @@ class KernelSpec:
         if self.needs_residual:
             extra += me * ne * in_bytes
         return extra
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedKernelSpec(KernelSpec):
+    """A `KernelSpec` with a leading batch grid axis (PR 3).
+
+    Two operand regimes share the one emitted body:
+
+      * uniform batched (``grouped=False``) — A (B, M, K) × B (B, K, N) (or a
+        shared (K, N) right operand with ``shared_b=True``): the grid gains a
+        leading batch dimension, every output block keeps its own running
+        checksums/report row, and `masked` carries the (m, n, k) ragged edge
+        shared by all batch slices. This is the `core.ft_batched_dot` kernel
+        (attention QK/PV cores, per-expert matmuls on padded layouts).
+      * grouped (``grouped=True``) — a CSR-style ragged grouped GEMM: A is a
+        row-sorted (T_buf, K) token buffer whose groups start at row-tile
+        (bm) boundaries, B is per-group (G, K, N), and two extra
+        scalar-prefetch operands drive the kernel: ``gid[num_tiles]`` (the
+        group owning each row tile — it feeds the *index map* of B, so the
+        right tile streams in per group) and ``row_end[G]`` (the first dead
+        buffer row of each group — the in-kernel ragged group-edge mask).
+        Because every row tile is wholly owned by one group, checksums,
+        verification, and correction are naturally per group: an SEU in one
+        expert's rows can never contaminate a neighboring group.
+
+    Aux-operand epilogues (bias/residual) would need per-batch streams; the
+    batched variants support aux-free chains only (activations etc.).
+    """
+    shared_b: bool = False
+    grouped: bool = False
+
+    batched = True
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.grouped:
+            if self.shared_b:
+                raise ValueError("grouped GEMM has per-group B operands")
+            # Grouped dispatch always masks the ragged group edges.
+            object.__setattr__(self, "masked", True)
+        if self.needs_bias or self.needs_residual:
+            raise ValueError("batched/grouped variants support aux-free "
+                             f"epilogue chains only, got {self.epilogue}")
+
+    def variant_key(self) -> str:
+        """Batched variants render a different body (batch axis / group
+        metadata), so they never share a cache entry with the 2-D kernel
+        even for an empty epilogue chain. The batch/group *count* component
+        (`/b_*` / `/g_*`) is added separately by `tune_cache.cache_key`."""
+        base = super().variant_key()
+        tag = "grouped" if self.grouped else (
+            "batched_sharedB" if self.shared_b else "batched")
+        return f"{base}.{tag}" if base else tag
 
 
 def fused(bias: bool = False, act: Optional[str] = None,

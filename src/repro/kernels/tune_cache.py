@@ -41,7 +41,7 @@ def default_path() -> str:
 
 def cache_key(device_kind: str, shape_class: str, in_bytes: int,
               ft_level: str, caps: Optional[Tuple[int, int, int]] = None,
-              variant: str = "") -> str:
+              variant: str = "", batch: str = "") -> str:
     """`caps` is the search-space ceiling (per-dim max candidate tile) the
     triggering shape imposed. It must be part of the key: without it, a
     small shape that misses first would pin its capped winner onto every
@@ -49,14 +49,22 @@ def cache_key(device_kind: str, shape_class: str, in_bytes: int,
     tuning).
 
     `variant` is the kernel-template variant (`KernelSpec.variant_key()` —
-    fused epilogue chain + non-default dtypes). Fused epilogues change the
-    VMEM budget and the roofline intensity, so two variants of one class
-    may tune to different tiles; the plain variant keeps the empty string
-    so PR-1 cache files stay valid."""
+    fused epilogue chain + non-default dtypes + batched/grouped body).
+    Fused epilogues change the VMEM budget and the roofline intensity, so
+    two variants of one class may tune to different tiles; the plain
+    variant keeps the empty string so PR-1 cache files stay valid.
+
+    `batch` is the batch/group-count component of a batched launch —
+    ``"b_<n>"`` (uniform batch count) or ``"g_<n>"`` (ragged group count),
+    power-of-two bucketed by `autotune.best_params`. The count shifts the
+    roofline (batch multiplies every traffic/FLOP term; groups add
+    per-group row padding that grows with bm), so it is part of the key;
+    2-D launches keep the empty string and existing keys stay valid."""
     dev = device_kind.strip().lower().replace(" ", "_")
     cap = "" if caps is None else f"/c{caps[0]}x{caps[1]}x{caps[2]}"
     var = f"/v_{variant}" if variant else ""
-    return f"{dev}/{shape_class}{cap}/b{in_bytes}/ft_{ft_level}{var}"
+    bat = f"/{batch}" if batch else ""
+    return f"{dev}/{shape_class}{cap}/b{in_bytes}/ft_{ft_level}{var}{bat}"
 
 
 class TuneCache:

@@ -1,15 +1,27 @@
-"""GShard/Switch-style Mixture-of-Experts layer with capacity-based one-hot
-dispatch — expert-parallel over the "model" mesh axis (GSPMD inserts the
-all-to-alls from the dispatch/combine einsums).
+"""Mixture-of-Experts layer with two dispatch regimes.
+
+Default (PR 3): **grouped ragged dispatch** — tokens are routed per
+(token, slot) assignment and the expert FFN GEMMs run as
+`core.ft_grouped_matmul` over a group-sorted token buffer (CSR-style, see
+`kernels.grouped`): zero capacity padding, zero dropped tokens, and online
+ABFT per expert group (an SEU in one expert's rows cannot contaminate a
+neighbor). The only overhead over the ragged FLOP floor is ≤ E·(bm-1)
+row-tile alignment rows — the moe_dispatch benchmark gates this at ≤1.25×.
+
+Baseline (``MoEConfig.dispatch="padded"``): the GShard/Switch-style
+capacity-based one-hot dispatch — expert-parallel over the "model" mesh
+axis (GSPMD inserts the all-to-alls from the dispatch/combine einsums).
+Kept as the comparison point: its dispatch einsums cost ≈ 4·E·C·d FLOPs per
+token and every expert pads (and drops) to the same capacity C.
 
 Design notes (DESIGN.md §4/§5):
-  * dispatch/combine one-hot einsums are *data movement*, not protected by
-    ABFT (memory-class faults are ECC-covered per the paper's fault model);
-    expert FFN GEMMs are protected via ft-protected grouped einsums.
-  * `group_size` bounds the dispatch-einsum FLOPs overhead
-    (≈ 4·E·C·d / (6·k·d·f) of the expert FLOPs, C ∝ group_size); it is a
-    per-arch knob and a §Perf hillclimb lever.
-  * aux load-balance loss (Switch): E · Σ_e f_e · P_e.
+  * dispatch/combine data movement is not ABFT-protected (memory-class
+    faults are ECC-covered per the paper's fault model); expert FFN GEMMs
+    are protected via ft-protected grouped/batched matmuls.
+  * aux load-balance loss (Switch): E · Σ_e f_e · P_e — identical in both
+    regimes.
+  * the grouped path is shard-local today (tokens sharded over data axes);
+    expert-parallel all-to-all for the grouped buffer is a ROADMAP item.
 """
 from __future__ import annotations
 
@@ -18,9 +30,11 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import ft_batched_dot
+from repro.core import (ft_batched_dot, ft_grouped_matmul_buffer,
+                        grouped_row_tile)
 from repro.configs.base import MoEConfig
 from repro.distributed.sharding import shard
+from repro.kernels.grouped import layout as glayout
 from .blocks import Ctx, dense_init
 
 
@@ -49,12 +63,13 @@ def capacity(group: int, mc: MoEConfig) -> int:
 
 
 def _group_geometry(b: int, s: int, mc: MoEConfig) -> int:
-    """Pick the dispatch group size. Groups are built by reshaping the
-    (B, S) token grid, so group boundaries align with the (batch→data,
-    seq→model) activation sharding: GSPMD then lowers the expert reshard as
-    one all-to-all instead of a full rematerialization (the 'involuntary
-    full remat' pathology the v0 baseline exhibited — see EXPERIMENTS §Perf).
-    Prefer ≥16 groups along seq so the group dim can carry the model axis."""
+    """Pick the dispatch group size (padded regime). Groups are built by
+    reshaping the (B, S) token grid, so group boundaries align with the
+    (batch→data, seq→model) activation sharding: GSPMD then lowers the
+    expert reshard as one all-to-all instead of a full rematerialization
+    (the 'involuntary full remat' pathology the v0 baseline exhibited — see
+    EXPERIMENTS §Perf). Prefer ≥16 groups along seq so the group dim can
+    carry the model axis."""
     g = min(mc.group_size, b * s)
     if s >= 2:
         n_seq = s // g if g and s % g == 0 else 0
@@ -69,9 +84,88 @@ def _group_geometry(b: int, s: int, mc: MoEConfig) -> int:
     return g
 
 
+def _routing(xt: jax.Array, router: jax.Array, mc: MoEConfig):
+    """Shared router math. xt: (T, d) → (gate_vals (T, k), idx (T, k),
+    aux loss). The aux loss is the Switch load-balance term E·Σ f_e·P_e."""
+    e = mc.n_experts
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, mc.top_k)          # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return gate_vals, idx, aux
+
+
 def apply_moe(p: Dict[str, Any], x: jax.Array, mc: MoEConfig,
               ctx: Ctx) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, d) → (y, aux_loss)."""
+    if mc.dispatch == "padded":
+        return apply_moe_padded(p, x, mc, ctx)
+    if mc.dispatch != "grouped":
+        raise ValueError(f"MoEConfig.dispatch must be 'grouped' or "
+                         f"'padded', got {mc.dispatch!r}")
+    return apply_moe_grouped(p, x, mc, ctx)
+
+
+# ---------------------------------------------------------------------------
+# grouped ragged dispatch (default) — zero capacity padding
+# ---------------------------------------------------------------------------
+
+def apply_moe_grouped(p: Dict[str, Any], x: jax.Array, mc: MoEConfig,
+                      ctx: Ctx) -> Tuple[jax.Array, jax.Array]:
+    """Route every (token, slot) assignment to its expert's ragged group and
+    run the three expert-FFN GEMMs through the grouped FT path — one
+    protected grouped kernel each on the pallas backend, the segment-
+    checksum jnp path elsewhere. No capacity: nothing is padded to a
+    per-expert quota and nothing is dropped.
+
+    The routing decides ONE group layout, so the whole FFN stays in buffer
+    space: scatter the assignment rows once, run gate/up/down on the
+    group-sorted buffer (`ft_grouped_matmul_buffer` — the silu·up combine
+    is elementwise, so dead buffer rows stay zero), gather once."""
+    b, s, d = x.shape
+    e, f = mc.n_experts, mc.expert_d_ff
+    xt = shard(x, "batch", "seq", "embed").reshape(b * s, d)
+    gate_vals, idx, aux = _routing(xt, p["router"], mc)
+    t, k = idx.shape
+
+    # One row per (token, slot) assignment, grouped by expert; one layout
+    # and one scatter shared by all three GEMMs.
+    expert_ids = idx.reshape(t * k)                          # (T·k,)
+    rows = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)     # source token
+    bm = grouped_row_tile(t * k, f, d, x.dtype, e, ctx.ft)
+    lay = glayout.make_layout(expert_ids, e, bm)
+    buf = glayout.scatter_rows(xt[rows], lay)                # (t_buf, d)
+
+    def ffn(name, a, w):
+        return ft_grouped_matmul_buffer(a, w, lay.gid, lay.row_end,
+                                        ft=ctx.ft, key=ctx.subkey(name))
+
+    gate_h = ffn("moe_gate", buf, p["w_gate"])
+    up_h = ffn("moe_up", buf, p["w_up"])
+    h = (jax.nn.silu(gate_h.astype(jnp.float32))
+         * up_h.astype(jnp.float32)).astype(x.dtype)
+    y_buf = ffn("moe_down", h, p["w_down"])                  # (t_buf, d)
+    ya = glayout.gather_rows(y_buf, lay)                     # (T·k, d)
+
+    # Combine: weighted sum of each token's k slot outputs.
+    y = jnp.sum(ya.reshape(t, k, d).astype(jnp.float32)
+                * gate_vals[..., None], axis=1).astype(x.dtype)
+    y = shard(y.reshape(b, s, d), "batch", "seq", "embed")
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# padded capacity dispatch (GShard baseline)
+# ---------------------------------------------------------------------------
+
+def apply_moe_padded(p: Dict[str, Any], x: jax.Array, mc: MoEConfig,
+                     ctx: Ctx) -> Tuple[jax.Array, jax.Array]:
+    """The capacity-based one-hot dispatch baseline: every expert is padded
+    to the same capacity C (and overflow tokens are dropped)."""
     b, s, d = x.shape
     e = mc.n_experts
     g = _group_geometry(b, s, mc)
@@ -83,18 +177,10 @@ def apply_moe(p: Dict[str, Any], x: jax.Array, mc: MoEConfig,
     xg = shard(xg, "tokens", None, None)
     c = capacity(g, mc)
 
-    # --- routing (f32) ----------------------------------------------------
-    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32), p["router"])
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate_vals, idx = jax.lax.top_k(probs, mc.top_k)          # (n, g, k)
-    gate_vals = gate_vals / jnp.maximum(
-        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
-
-    # aux load-balance loss: fraction routed vs mean prob (Switch eq. 4)
-    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
-    onehot_top1 = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32)
-    ce = jnp.mean(onehot_top1, axis=(0, 1))
-    aux = e * jnp.sum(me * ce)
+    # --- routing (f32, shared with the grouped path) ----------------------
+    gate_vals, idx, aux = _routing(xg.reshape(-1, d), p["router"], mc)
+    gate_vals = gate_vals.reshape(n_grp, g, mc.top_k)
+    idx = idx.reshape(n_grp, g, mc.top_k)
 
     # --- capacity-bounded one-hot dispatch/combine tensors -----------------
     # position of each (token, k) within its expert queue

@@ -109,6 +109,39 @@ def test_flash_ft_ragged_causal():
     assert float(rep[..., 0].sum()) == 0.0
 
 
+@pytest.mark.parametrize("shape", [
+    (2, 100, 200, 64),       # ragged Sq < Skv, both off-tile
+    (1, 57, 131, 80),        # primes
+    (2, 128, 200, 64),       # aligned Sq, ragged Skv
+    (1, 40, 512, 128),       # chunked-prefill-like: short q, long history
+])
+def test_flash_ft_ragged_causal_cross_length(shape):
+    """Causal with Sq ≠ Skv — previously only the padded Sq == Skv frame
+    was causally correct; now the in-kernel causal∧kv-edge mask is
+    bottom-right aligned on the scalar-prefetched TRUE lengths, so ragged
+    cross-length causal attention (the decode/chunked-prefill setting,
+    Skv ≥ Sq) is exact on fitted blocks."""
+    bh, sq, skv, dh = shape
+    q, k, v = _qkv(bh, sq, skv, dh, seed=21)
+    out, rep = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    assert out.shape == (bh, sq, dh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert float(rep[..., 0].sum()) == 0.0, "false positive on ragged causal"
+
+
+def test_flash_ft_ragged_causal_cross_length_corrects_seu():
+    q, k, v = _qkv(1, 100, 200, 64, seed=22)
+    spec = InjectionSpec(row=5, col=11, magnitude=400.0, k_step=0)
+    out, rep = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK, causal=True,
+                            spec=spec, inj_q_block=0)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert float(rep[..., 0].sum()) == 1.0
+
+
 def test_flash_ft_ragged_corrects_injected_seu():
     """ABFT must survive the ragged kv masking: one SEU in the PV
     accumulator on a ragged shape is detected and corrected."""
