@@ -1,0 +1,198 @@
+"""Backward-path protection coverage + the tgmm kernel's roofline win.
+
+Two questions, both structural (they transfer to TPU):
+
+  1. **What fraction of a train step's GEMM FLOPs runs under in-kernel
+     ABFT?** Walk the optimizer-step jaxpr (`tools.audit`) for a dense and
+     an MoE config on the pallas backend, before vs after the PR-4 backward
+     work. "Before" re-enables the three legacy paths this PR closed —
+     chunked-jnp attention (`attn_impl="chunked"`), the segment-summed jnp
+     tgmm (`core.ft_gemm.TGMM_USE_KERNEL=False`), and the remat-style
+     pre-activation recompute (`FUSED_BWD_SAVE_RESIDUAL=False`; its
+     recompute GEMM *was* protected, but the attention/tgmm jnp GEMMs ran
+     outside any kernel). After: every large GEMM — forward AND backward —
+     sits inside a registry-emitted pallas_call; the open remainder is the
+     MoE router einsum.
+  2. **What does the output-stationary tgmm kernel buy over the
+     segment-einsum baseline?** Roofline both: the baseline materializes a
+     per-row-tile (tiles, K, N) f32 outer-product tensor in HBM and
+     segment-sums it (then re-reads dw to verify); the kernel keeps the
+     per-group accumulator and checksums in VMEM and writes dw once.
+     `derived` reports the modeled speedup.
+
+An interpret-mode allclose gate (tgmm kernel vs the segment einsum, with a
+per-group injection round-trip) runs in smoke mode so a tgmm regression
+fails CI, not the TPU campaign. ``REPRO_BENCH_SMOKE=1`` shrinks shapes.
+
+Run via ``python -m benchmarks.run --only backward_path``.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig, RunConfig
+from repro.core import ft_gemm
+from repro.core.policy import FTConfig, InjectionSpec
+from repro.kernels import autotune, search
+from repro.kernels.templates import BatchedKernelSpec
+from repro.tools import audit, roofline
+from .common import emit
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+# ---------------------------------------------------------------------------
+# 1. train-step FLOP fraction under in-kernel ABFT, before vs after
+# ---------------------------------------------------------------------------
+
+def _configs(smoke: bool):
+    if smoke:
+        dims = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                    head_dim=16, d_ff=128, vocab_size=512)
+        moe_dims = dict(n_experts=4, top_k=2, expert_d_ff=64)
+        shape = (2, 32)
+    else:
+        dims = dict(n_layers=2, d_model=256, n_heads=8, n_kv_heads=4,
+                    head_dim=32, d_ff=512, vocab_size=2048)
+        moe_dims = dict(n_experts=8, top_k=2, expert_d_ff=256)
+        shape = (2, 128)
+    dense = ModelConfig(arch_id="bwd-dense", family="dense", **dims)
+    moe = ModelConfig(arch_id="bwd-moe", family="moe",
+                      moe=MoEConfig(**moe_dims), **dims)
+    return [("dense", dense, shape), ("moe", moe, shape)]
+
+
+def _step_fn(cfg: ModelConfig, shape, attn_impl: str):
+    from repro.models import model_zoo
+    from repro.optim import adamw
+    from repro.train import train_loop
+    run = RunConfig(model=cfg, ft=FTConfig(level="block", backend="pallas"),
+                    dtype="float32", attn_chunk=32, attn_impl=attn_impl)
+    tc = train_loop.TrainConfig(total_steps=10, warmup_steps=2)
+    opt_cfg = adamw.AdamWConfig()
+    step = train_loop.make_train_step(cfg, run, opt_cfg, tc)
+    params = model_zoo.module_for(cfg).init(cfg, jax.random.PRNGKey(0),
+                                            jnp.float32)
+    opt_state = train_loop.init_opt_state(params, opt_cfg, tc)
+    b, s = shape
+    batch = {"tokens": jnp.zeros((b, s), jnp.int32),
+             "labels": jnp.zeros((b, s), jnp.int32)}
+    return (lambda: audit.flop_accounting(
+        lambda p, o, bt: step(p, o, bt, jnp.zeros((), jnp.int32)),
+        params, opt_state, batch))
+
+
+def _coverage_rows() -> None:
+    for name, cfg, shape in _configs(_smoke()):
+        after = _step_fn(cfg, shape, attn_impl="auto")()
+        ft_gemm.TGMM_USE_KERNEL = False
+        ft_gemm.FUSED_BWD_SAVE_RESIDUAL = False
+        try:
+            before = _step_fn(cfg, shape, attn_impl="chunked")()
+        finally:
+            ft_gemm.TGMM_USE_KERNEL = True
+            ft_gemm.FUSED_BWD_SAVE_RESIDUAL = True
+        emit(f"backward_path/{name}/abft_kernel_fraction", float("nan"),
+             f"before={before['kernel_fraction']:.4f} "
+             f"after={after['kernel_fraction']:.4f} "
+             f"open_dots:{before['n_open_dots']}->{after['n_open_dots']} "
+             f"kernel_dots:{before['n_kernel_dots']}->"
+             f"{after['n_kernel_dots']}")
+        # Structural gates: the PR's acceptance criterion, kept hot in CI.
+        # Dense was already fully in-kernel on the pallas backend (its
+        # legacy costs were the recompute GEMM + the score transient, both
+        # *inside* kernels); the MoE step's tgmm einsum was genuinely open,
+        # so its fraction must strictly improve.
+        assert after["kernel_fraction"] >= before["kernel_fraction"], (name,)
+        if name == "moe":
+            assert after["kernel_fraction"] > before["kernel_fraction"]
+        assert after["kernel_fraction"] > 0.99, after["kernel_fraction"]
+
+
+# ---------------------------------------------------------------------------
+# 2. tgmm kernel roofline vs the segment-einsum baseline
+# ---------------------------------------------------------------------------
+
+def segment_einsum_time_s(t_rows: int, k: int, n: int, groups: int,
+                          bm: int, ft_level: str = "block") -> float:
+    """Modeled segment-summed jnp tgmm: einsum materializes the per-tile
+    (tiles, K, N) f32 outer products in HBM, segment_sum re-reads them and
+    writes (G, K, N), and the checksum verification re-reads dw plus both
+    buffers. Same useful FLOPs as the kernel — the delta is pure HBM
+    traffic (this is the arithmetic-intensity argument for fusing backward
+    ABFT: the outer-product GEMM is the *low*-intensity one)."""
+    tiles = max(1, -(-t_rows // bm))
+    f32 = 4
+    flops = 2.0 * t_rows * k * n
+    bytes_ = (t_rows * k + t_rows * n) * f32        # read X, G
+    bytes_ += 2.0 * tiles * k * n * f32             # write + re-read tiles
+    bytes_ += groups * k * n * f32                  # write dw
+    if ft_level != "off":
+        flops += 2.0 * (t_rows * k + t_rows * n) + 3.0 * groups * k * n
+        bytes_ += (t_rows * k + t_rows * n + groups * k * n) * f32
+    return roofline.kernel_time_s(flops, bytes_)
+
+
+def _tgmm_roofline_rows() -> None:
+    smoke = _smoke()
+    shapes = ([(512, 256, 256, 8)] if smoke else
+              [(4096, 1024, 4096, 8),       # MoE dw: (T·k, d_model, d_ff)
+               (16384, 1024, 4096, 64),
+               (16384, 1024, 4096, 8)])
+    for t_rows, k, n, groups in shapes:
+        spec = BatchedKernelSpec(ft_level="block", tgmm=True)
+        p = autotune.best_params(t_rows, n, k, 4, ft_level="block",
+                                 spec=spec, groups=groups, measure=False)
+        t_kernel = search.predicted_time_s(t_rows, n, k, p, in_bytes=4,
+                                           ft_level="block", spec=spec,
+                                           groups=groups)
+        t_einsum = segment_einsum_time_s(t_rows, k, n, groups, p.bm)
+        emit(f"backward_path/tgmm_roofline/t{t_rows}_k{k}_n{n}_g{groups}",
+             float("nan"),
+             f"kernel_s={t_kernel:.3e} einsum_s={t_einsum:.3e} "
+             f"speedup={t_einsum / t_kernel:.2f}x bm={p.bm}")
+        # The whole point of output-stationary: never slower than paying
+        # the materialized outer-product round-trip.
+        assert t_kernel <= t_einsum, (t_kernel, t_einsum)
+
+
+# ---------------------------------------------------------------------------
+# 3. interpret-mode correctness gate (CI smoke)
+# ---------------------------------------------------------------------------
+
+def _allclose_gate() -> None:
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    t, g, k, n = 70, 3, 96, 40
+    gids = jnp.asarray(np.sort(rng.integers(0, g, size=t)), jnp.int32)
+    x = jnp.asarray(rng.integers(-3, 4, size=(t, k)), jnp.float32)
+    gr = jnp.asarray(rng.integers(-3, 4, size=(t, n)), jnp.float32)
+    want = np.zeros((g, k, n), np.float32)
+    for e in range(g):
+        m = np.asarray(gids) == e
+        want[e] = np.asarray(x)[m].T @ np.asarray(gr)[m]
+    spec = BatchedKernelSpec(ft_level="block", tgmm=True)
+    inj = InjectionSpec(row=5, col=7, magnitude=444.0, k_step=0)
+    dw, rep = ops.grouped_gemm_call(spec, x, gr, group_ids=gids, n_groups=g,
+                                    ft=FTConfig(level="block"), inject=inj,
+                                    interpret=True)
+    np.testing.assert_array_equal(np.asarray(dw), want)
+    assert float(rep[..., 1].sum()) == 1.0
+    emit("backward_path/tgmm_injection_gate", float("nan"),
+         "corrected=1 exact=True")
+
+
+def run() -> None:
+    _coverage_rows()
+    _tgmm_roofline_rows()
+    _allclose_gate()
+
+
+if __name__ == "__main__":
+    run()

@@ -12,7 +12,8 @@ import traceback
 
 SUITES = ("stepwise_gemm", "ft_schemes", "codegen_shapes",
           "fused_epilogue", "error_injection", "online_vs_offline",
-          "moe_dispatch", "flash_attention", "tune_campaign")
+          "moe_dispatch", "flash_attention", "backward_path",
+          "tune_campaign")
 
 
 def main() -> None:

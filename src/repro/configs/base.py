@@ -118,4 +118,7 @@ class RunConfig:
     # head count ∤ mesh) | "none" (batch-only). Hillclimb lever.
     attn_shard: str = "heads"
     attn_chunk: int = 512     # query-chunk for flash-style attention scan
+    # attention core: "auto" (flashft kernel on the pallas FT backend,
+    # chunked-jnp scan elsewhere) | "flash" | "chunked" (force the oracle).
+    attn_impl: str = "auto"
     seed: int = 0

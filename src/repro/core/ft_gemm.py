@@ -47,6 +47,41 @@ from . import abft, telemetry
 from .fault_injection import Injector
 from .policy import FTConfig, InjectionSpec, FT_OFF
 
+#: PR-4 backward-path switches, read at trace time. Both default to the
+#: kernel-protected paths; the legacy behaviours are kept for the
+#: `benchmarks/backward_path.py` before/after comparison (and as an escape
+#: hatch), not as supported configurations.
+#:   TGMM_USE_KERNEL        — pallas-backend grouped backward runs dw as the
+#:                            output-stationary tgmm kernel (False: the
+#:                            segment-summed jnp einsum with per-group
+#:                            checksum verification).
+#:   FUSED_BWD_SAVE_RESIDUAL — ft_dot_fused's forward saves act'(preact) as
+#:                            a kernel output and its backward consumes it
+#:                            (False: the remat-style pre-activation GEMM
+#:                            recompute).
+TGMM_USE_KERNEL = True
+FUSED_BWD_SAVE_RESIDUAL = True
+
+
+def _bwd_injection(bwd_inject, target: str) -> Optional[InjectionSpec]:
+    """Resolve the per-GEMM backward injection hook: ``bwd_inject`` is None
+    or a hashable ("dx"|"dw"|"dbuf", InjectionSpec) pair riding the
+    custom_vjp's nondiff args — the backward-FT conformance suite uses it to
+    land an SEU inside a *specific* backward GEMM."""
+    if bwd_inject is not None and bwd_inject[0] == target:
+        return bwd_inject[1]
+    return None
+
+
+def _check_bwd_inject(ft: FTConfig, bwd_inject) -> None:
+    """The injection paths live inside the FT machinery — with FT off they
+    would be silently skipped, turning a conformance test into a vacuous
+    clean-vs-clean comparison. Fail loudly instead."""
+    if bwd_inject is not None and not ft.enabled:
+        raise ValueError(
+            "bwd_inject requires an enabled FTConfig: the SEU is emulated "
+            "inside the protected backward GEMM, which FT_OFF never runs")
+
 
 def _inject(ft: FTConfig, spec: Optional[InjectionSpec],
             key: Optional[jax.Array], c: jax.Array) -> jax.Array:
@@ -138,19 +173,19 @@ def _float0(x):
     return np.zeros(x.shape, jax.dtypes.float0) if x is not None else None
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _ft_dot_cvjp(ft: FTConfig, spec, x, w, key):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _ft_dot_cvjp(ft: FTConfig, spec, bwd_inject, x, w, key):
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     y2, det, maxres = _ft_matmul_2d(ft, spec, x2, w, key)
     return y2.reshape(*lead, w.shape[-1]), det, maxres
 
 
-def _ft_dot_fwd(ft, spec, x, w, key):
-    return _ft_dot_cvjp(ft, spec, x, w, key), (x, w, key)
+def _ft_dot_fwd(ft, spec, bwd_inject, x, w, key):
+    return _ft_dot_cvjp(ft, spec, bwd_inject, x, w, key), (x, w, key)
 
 
-def _ft_dot_bwd(ft, spec, res, cts):
+def _ft_dot_bwd(ft, spec, bwd_inject, res, cts):
     g, _, _ = cts                      # ignore summary cotangents
     x, w, key = res
     lead = x.shape[:-1]
@@ -158,9 +193,12 @@ def _ft_dot_bwd(ft, spec, res, cts):
     g2 = g.reshape(-1, g.shape[-1]).astype(x.dtype)
     kx = jax.random.fold_in(key, 1) if key is not None else None
     kw = jax.random.fold_in(key, 2) if key is not None else None
-    # Backward GEMMs are ABFT-protected too (spec applies to fwd only).
-    dx2, _, _ = _ft_matmul_2d(ft, None, g2, w.T, kx)
-    dw, _, _ = _ft_matmul_2d(ft, None, x2.T, g2, kw)
+    # Backward GEMMs are ABFT-protected too (spec applies to fwd only;
+    # bwd_inject lands a deterministic SEU in the named backward GEMM).
+    dx2, _, _ = _ft_matmul_2d(ft, _bwd_injection(bwd_inject, "dx"),
+                              g2, w.T, kx)
+    dw, _, _ = _ft_matmul_2d(ft, _bwd_injection(bwd_inject, "dw"),
+                             x2.T, g2, kw)
     return dx2.reshape(*lead, x.shape[-1]), dw.astype(w.dtype), _float0(key)
 
 
@@ -175,18 +213,22 @@ def _record(det, maxres, corrects: bool) -> None:
 
 def ft_dot(x: jax.Array, w: jax.Array, ft: FTConfig = FT_OFF,
            key: Optional[jax.Array] = None,
-           spec: Optional[InjectionSpec] = None) -> jax.Array:
+           spec: Optional[InjectionSpec] = None,
+           bwd_inject=None) -> jax.Array:
     """Fault-tolerant dense projection: (…, K) @ (K, N) → (…, N).
 
     ft    — FTConfig policy (see repro.core.policy).
     key   — optional PRNG key driving the stochastic SEU injector
             (ft.inject_rate); None ⇒ no stochastic injection.
     spec  — optional deterministic single-SEU injection (tests/benchmarks).
+    bwd_inject — optional ("dx"|"dw", InjectionSpec): land a deterministic
+            SEU inside the named *backward* GEMM (conformance tests).
     """
+    _check_bwd_inject(ft, bwd_inject)
     if not ft.enabled and key is None and spec is None:
         # Fast path: a plain dot XLA can pattern-match without custom_vjp.
         return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
-    y, det, maxres = _ft_dot_cvjp(ft, spec, x, w, key)
+    y, det, maxres = _ft_dot_cvjp(ft, spec, bwd_inject, x, w, key)
     _record(det, maxres, ft.corrects)
     return y
 
@@ -209,15 +251,28 @@ def _epilogue_fn(act: Optional[str]):
     return epilogues.activation(act) if act is not None else (lambda y: y)
 
 
-def _fused_epilogue_2d(ft: FTConfig, spec, act, x2, w, bias, key):
-    """(out, det, maxres) for y = act(x2 @ w + bias) with policy `ft`."""
+def _epilogue_grad_fn(act: str):
+    from repro.kernels.templates import epilogues
+    return epilogues.activation_grad(act)
+
+
+def _fused_epilogue_impl(ft: FTConfig, spec, act, x2, w, bias, key,
+                         want_grad: bool):
+    """One backend dispatch for the fused-epilogue forward. Returns
+    (out, det, maxres, act_grad|None): with ``want_grad`` the pallas
+    backend runs the multi-output kernel variant (act'(preact) computed
+    in-kernel from the verified, corrected accumulator) and the jnp paths
+    evaluate the same derivative on the f32 accumulator — the saved
+    residual `_ft_fused_bwd` consumes."""
+    assert not want_grad or act is not None
     if ft.enabled and ft.backend == "pallas":
         from repro.kernels import ops as kops
-        out, rep = kops.fused_matmul(x2, w, bias=bias, act=act, ft=ft,
-                                     inject=spec)
+        res, rep = kops.fused_matmul(x2, w, bias=bias, act=act, ft=ft,
+                                     inject=spec, save_act_grad=want_grad)
+        out, actp = res if want_grad else (res, None)
         det = jnp.sum(rep[..., 0]).astype(jnp.int32)
         maxres = jnp.max(rep[..., 5])
-        return out, det, maxres
+        return out, det, maxres, actp
     if not ft.enabled:
         # Like _ft_matmul_2d with FT off: no injection either — the two
         # sibling entry points must agree on FT-off semantics.
@@ -230,36 +285,65 @@ def _fused_epilogue_2d(ft: FTConfig, spec, act, x2, w, bias, key):
         det, maxres = _summary(v)
     if bias is not None:
         acc = acc + bias.astype(jnp.float32)
-    acc = _epilogue_fn(act)(acc)
-    return acc.astype(x2.dtype), det, maxres
+    actp = (_epilogue_grad_fn(act)(acc).astype(x2.dtype) if want_grad
+            else None)
+    out = _epilogue_fn(act)(acc)
+    return out.astype(x2.dtype), det, maxres, actp
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _ft_fused_cvjp(ft: FTConfig, spec, act, x, w, bias, key):
+def _fused_epilogue_2d(ft: FTConfig, spec, act, x2, w, bias, key):
+    """(out, det, maxres) for y = act(x2 @ w + bias) with policy `ft`."""
+    out, det, maxres, _ = _fused_epilogue_impl(ft, spec, act, x2, w, bias,
+                                               key, want_grad=False)
+    return out, det, maxres
+
+
+def _fused_epilogue_2d_grad(ft: FTConfig, spec, act, x2, w, bias, key):
+    """`_fused_epilogue_2d` + the act'(preact) residual:
+    (out, det, maxres, act_grad)."""
+    return _fused_epilogue_impl(ft, spec, act, x2, w, bias, key,
+                                want_grad=True)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _ft_fused_cvjp(ft: FTConfig, spec, act, bwd_inject, x, w, bias, key):
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     y2, det, maxres = _fused_epilogue_2d(ft, spec, act, x2, w, bias, key)
     return y2.reshape(*lead, w.shape[-1]), det, maxres
 
 
-def _ft_fused_fwd(ft, spec, act, x, w, bias, key):
-    return _ft_fused_cvjp(ft, spec, act, x, w, bias, key), (x, w, bias, key)
+def _ft_fused_fwd(ft, spec, act, bwd_inject, x, w, bias, key):
+    if act is None or not FUSED_BWD_SAVE_RESIDUAL:
+        # No nonlinearity (nothing to save) or the legacy remat-style path.
+        out = _ft_fused_cvjp(ft, spec, act, bwd_inject, x, w, bias, key)
+        return out, (x, w, bias, None, key)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y2, det, maxres, actp = _fused_epilogue_2d_grad(ft, spec, act, x2, w,
+                                                    bias, key)
+    return ((y2.reshape(*lead, w.shape[-1]), det, maxres),
+            (x, w, bias, actp, key))
 
 
-def _ft_fused_bwd(ft, spec, act, res, cts):
+def _ft_fused_bwd(ft, spec, act, bwd_inject, res, cts):
     g, _, _ = cts                      # ignore summary cotangents
-    x, w, bias, key = res
+    x, w, bias, actp, key = res
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     g2 = g.reshape(-1, g.shape[-1])
     kx = jax.random.fold_in(key, 1) if key is not None else None
     kw = jax.random.fold_in(key, 2) if key is not None else None
     kp = jax.random.fold_in(key, 5) if key is not None else None
-    if act is not None:
-        # The fused kernel never writes the pre-activation to HBM (that is
-        # the point), so it cannot be saved as a residual — recompute it
-        # here, ABFT-protected like every other backward GEMM (remat-style;
-        # "dots" remat policies recompute this product anyway).
+    if act is not None and actp is not None:
+        # The forward kernel saved act'(preact) as a second VMEM output
+        # (multi-output variant) — the pre-activation GEMM is NOT
+        # recomputed here; dpre is one elementwise product.
+        dpre = (g2.astype(jnp.float32) * actp.astype(jnp.float32)
+                ).astype(x.dtype)
+    elif act is not None:
+        # Legacy remat-style recompute (FUSED_BWD_SAVE_RESIDUAL=False),
+        # ABFT-protected like every other backward GEMM.
         pre, _, _ = _ft_matmul_2d(ft, None, x2, w, kp)
         pre = pre.astype(jnp.float32)
         if bias is not None:
@@ -272,8 +356,10 @@ def _ft_fused_bwd(ft, spec, act, res, cts):
              else jnp.sum(dpre.astype(jnp.float32), axis=0).astype(bias.dtype)
              .reshape(bias.shape))
     # Backward GEMMs are ABFT-protected too (spec applies to fwd only).
-    dx2, _, _ = _ft_matmul_2d(ft, None, dpre, w.T, kx)
-    dw, _, _ = _ft_matmul_2d(ft, None, x2.T, dpre, kw)
+    dx2, _, _ = _ft_matmul_2d(ft, _bwd_injection(bwd_inject, "dx"),
+                              dpre, w.T, kx)
+    dw, _, _ = _ft_matmul_2d(ft, _bwd_injection(bwd_inject, "dw"),
+                             x2.T, dpre, kw)
     return (dx2.reshape(*lead, x.shape[-1]), dw.astype(w.dtype), dbias,
             _float0(key))
 
@@ -286,7 +372,8 @@ def ft_dot_fused(x: jax.Array, w: jax.Array,
                  act: Optional[str] = None,
                  ft: FTConfig = FT_OFF,
                  key: Optional[jax.Array] = None,
-                 spec: Optional[InjectionSpec] = None) -> jax.Array:
+                 spec: Optional[InjectionSpec] = None,
+                 bwd_inject=None) -> jax.Array:
     """Fault-tolerant fused-epilogue projection:
     (…, K) @ (K, N) → act((…, N) + bias).
 
@@ -294,16 +381,24 @@ def ft_dot_fused(x: jax.Array, w: jax.Array,
     activation passes over the output (the Pallas backend fuses them into
     the GEMM epilogue before the HBM writeback; XLA fuses the jnp path).
     `act` is a registered elementwise epilogue name ("relu"/"gelu"/"silu");
-    both directions are custom_vjp-protected like `ft_dot`."""
+    both directions are custom_vjp-protected like `ft_dot`.
+
+    When differentiated, the forward runs the *multi-output* kernel variant
+    and saves act'(preact) as a residual (computed from the corrected
+    accumulator), so the backward is two protected GEMMs + one elementwise
+    product — no pre-activation recompute. ``bwd_inject`` =
+    ("dx"|"dw", InjectionSpec) lands an SEU in the named backward GEMM."""
+    _check_bwd_inject(ft, bwd_inject)
     if bias is None and act is None:
-        return ft_dot(x, w, ft=ft, key=key, spec=spec)
+        return ft_dot(x, w, ft=ft, key=key, spec=spec, bwd_inject=bwd_inject)
     if not ft.enabled and key is None and spec is None:
         # Fast path: plain fused composition XLA pattern-matches.
         y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
         if bias is not None:
             y = y + bias.astype(jnp.float32)
         return _epilogue_fn(act)(y).astype(x.dtype)
-    y, det, maxres = _ft_fused_cvjp(ft, spec, act, x, w, bias, key)
+    y, det, maxres = _ft_fused_cvjp(ft, spec, act, bwd_inject, x, w, bias,
+                                    key)
     _record(det, maxres, ft.corrects)
     return y
 
@@ -505,30 +600,91 @@ def _ft_grouped_2d(ft: FTConfig, spec, buf, w, gid, row_end, key):
     return _fused_ft_grouped(ft, spec, buf, w, gid, key)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _ft_grouped_cvjp(ft, spec, buf, w, gid, row_end, key):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _ft_grouped_cvjp(ft, spec, bwd_inject, buf, w, gid, row_end, key):
     return _ft_grouped_2d(ft, spec, buf, w, gid, row_end, key)
 
 
-def _ft_grouped_fwd(ft, spec, buf, w, gid, row_end, key):
-    out = _ft_grouped_cvjp(ft, spec, buf, w, gid, row_end, key)
+def _primal_value(x):
+    """Unwrap a CustomVJPPrimal (the fwd rule runs under
+    ``symbolic_zeros=True`` so the bwd rule can distinguish genuinely-zero
+    summary cotangents — see `_ft_grouped_bwd`)."""
+    return x.value if hasattr(x, "value") else x
+
+
+def _ft_grouped_fwd(ft, spec, bwd_inject, buf, w, gid, row_end, key):
+    buf, w, gid, row_end, key = map(_primal_value,
+                                    (buf, w, gid, row_end, key))
+    out = _ft_grouped_cvjp(ft, spec, bwd_inject, buf, w, gid, row_end, key)
     return out, (buf, w, gid, row_end, key)
 
 
-def _ft_grouped_bwd(ft, spec, res, cts):
-    g_buf, _, _ = cts                  # ignore summary cotangents
+def _ft_grouped_bwd(ft, spec, bwd_inject, res, cts):
+    from jax.custom_derivatives import SymbolicZero
+
+    g_buf, ct_det, ct_maxres = cts
+    # The (det, maxres) outputs are *telemetry*, not differentiable
+    # quantities: det is a discrete fault counter and maxres a max-residual
+    # diagnostic. Their cotangent contribution to (buf, w) is mathematically
+    # undefined under the SEU model, so silently dropping a real cotangent
+    # here would corrupt training invisibly. With symbolic_zeros we can see
+    # the difference and fail loudly instead.
+    if not (isinstance(ct_det, SymbolicZero)
+            and isinstance(ct_maxres, SymbolicZero)):
+        raise ValueError(
+            "ft_grouped_matmul: differentiating through the (det, "
+            "max_residual) FT telemetry summaries is not defined — they are "
+            "fault diagnostics, not smooth functions of the operands. Apply "
+            "jax.lax.stop_gradient to the telemetry outputs (or keep them "
+            "out of the loss).")
     buf, w, gid, row_end, key = res
-    t_buf, k = buf.shape
-    ng = w.shape[0]
-    num_tiles = gid.shape[0]
-    bm = t_buf // num_tiles
-    g_buf = g_buf.astype(buf.dtype)
+    t_buf = buf.shape[0]
+    n = w.shape[-1]
+    if isinstance(g_buf, SymbolicZero):
+        g_buf = jnp.zeros((t_buf, n), buf.dtype)
+    else:
+        g_buf = g_buf.astype(buf.dtype)
     kx = jax.random.fold_in(key, 6) if key is not None else None
     # d_buf: the same grouped product against the transposed group weights,
     # ABFT-protected like every other backward GEMM.
-    dbuf, _, _ = _ft_grouped_2d(ft, None, g_buf, jnp.swapaxes(w, -1, -2),
+    dbuf, _, _ = _ft_grouped_2d(ft, _bwd_injection(bwd_inject, "dbuf"),
+                                g_buf, jnp.swapaxes(w, -1, -2),
                                 gid, row_end, kx)
-    # d_w ("tgmm"): per-row-tile outer products segment-summed per group —
+    dw = _grouped_dw(ft, _bwd_injection(bwd_inject, "dw"), buf, g_buf, gid,
+                     row_end)
+    return (dbuf, dw.astype(w.dtype), _float0(gid), _float0(row_end),
+            _float0(key))
+
+
+def _grouped_dw(ft: FTConfig, inject, buf, g_buf, gid, row_end):
+    """The grouped backward dw ("tgmm"): dw[g] = X_gᵀ G_g, (G, K, N) f32.
+
+    pallas backend (and `TGMM_USE_KERNEL`) — ONE output-stationary Pallas
+    kernel (`kernels.grouped.tgmm_buffer_call`): the grid walks row tiles as
+    the reduction axis, per-group checksums flush at group boundaries, and
+    detection/correction run in-kernel. Otherwise the segment-summed jnp
+    einsum verified with per-group checksums (the pre-PR-4 path — kept as
+    the xla-backend implementation and the before/after benchmark
+    baseline)."""
+    t_buf, k = buf.shape
+    ng = row_end.shape[0]
+    num_tiles = gid.shape[0]
+    bm = t_buf // num_tiles
+    if ft.enabled and ft.backend == "pallas" and TGMM_USE_KERNEL:
+        from repro.kernels import grouped as kgrouped
+        from repro.kernels.templates import BatchedKernelSpec
+        n = g_buf.shape[-1]
+        kspec = BatchedKernelSpec(ft_level=ft.level, tgmm=True)
+        # bm is pinned by the existing forward buffer's layout; plan_tgmm
+        # re-clamps bn/bk under the tgmm VMEM model with that bm.
+        p = kgrouped.plan_tgmm(t_buf, n, k, buf.dtype, n_groups=ng,
+                               ft_level=ft.level, spec=kspec, bm=bm)
+        dw, _rep = kgrouped.tgmm_buffer_call(
+            kspec, buf, g_buf, gid=gid, row_end=row_end, params=p, ft=ft,
+            inject=inject)
+        # Backward-pass corrections are applied but not counted (DESIGN.md).
+        return dw
+    # jnp path: per-row-tile outer products segment-summed per group —
     # exactly the useful FLOPs (T_buf·K·N) — then verified with per-group
     # checksums (col: (X_g e_K)^T G_g; row: X_g^T (G_g e_N)).
     b3 = buf.reshape(num_tiles, bm, k).astype(jnp.float32)
@@ -536,6 +692,9 @@ def _ft_grouped_bwd(ft, spec, res, cts):
     per_tile = jnp.einsum("tbk,tbn->tkn", b3, g3)
     dw = jax.ops.segment_sum(per_tile, gid, num_segments=ng)   # (G, K, N)
     if ft.enabled:
+        if inject is not None:
+            from .fault_injection import inject_spec
+            dw = inject_spec(dw, inject)
         u = jnp.sum(b3, axis=-1)                               # (tiles, bm)
         v = jnp.sum(g3, axis=-1)
         colck = jax.ops.segment_sum(jnp.einsum("tb,tbn->tn", u, g3), gid,
@@ -557,11 +716,11 @@ def _ft_grouped_bwd(ft, spec, res, cts):
                                        gid, num_segments=ng) * bm
             tau = jnp.maximum(ft.rel_tau * eps * rows * amax * gmax, 1e-30)
         dw, _ = abft.detect_and_correct(dw, ck, tau, corrects=ft.corrects)
-    return (dbuf, dw.astype(w.dtype), _float0(gid), _float0(row_end),
-            _float0(key))
+    return dw
 
 
-_ft_grouped_cvjp.defvjp(_ft_grouped_fwd, _ft_grouped_bwd)
+_ft_grouped_cvjp.defvjp(_ft_grouped_fwd, _ft_grouped_bwd,
+                        symbolic_zeros=True)
 
 
 def grouped_row_tile(t: int, n: int, k: int, dtype, n_groups: int,
@@ -581,18 +740,21 @@ def grouped_row_tile(t: int, n: int, k: int, dtype, n_groups: int,
 def ft_grouped_matmul_buffer(buf: jax.Array, w: jax.Array, gid: jax.Array,
                              row_end: jax.Array, ft: FTConfig = FT_OFF,
                              key: Optional[jax.Array] = None,
-                             spec: Optional[InjectionSpec] = None
-                             ) -> jax.Array:
+                             spec: Optional[InjectionSpec] = None,
+                             bwd_inject=None) -> jax.Array:
     """Buffer-space `ft_grouped_matmul`: operate directly on a group-sorted
     (t_buf, K) buffer (see `kernels.grouped.layout`) and return the
     (t_buf, N) result in buffer space — lets a chain of grouped GEMMs over
     one routing decision (gate/up/down of an expert FFN) scatter once and
-    gather once instead of round-tripping per GEMM."""
+    gather once instead of round-tripping per GEMM. ``bwd_inject`` =
+    ("dbuf"|"dw", InjectionSpec) lands an SEU in the named backward GEMM
+    (the dw one is the tgmm kernel on the pallas backend)."""
+    _check_bwd_inject(ft, bwd_inject)
     if not ft.enabled and key is None and spec is None:
         # Fast path mirroring ft_dot: plain grouped product, no custom_vjp.
         return _grouped_dot_jnp(buf, w, gid).astype(buf.dtype)
-    y_buf, det, maxres = _ft_grouped_cvjp(ft, spec, buf, w, gid, row_end,
-                                          key)
+    y_buf, det, maxres = _ft_grouped_cvjp(ft, spec, bwd_inject, buf, w, gid,
+                                          row_end, key)
     _record(det, maxres, ft.corrects)
     return y_buf
 
@@ -600,16 +762,17 @@ def ft_grouped_matmul_buffer(buf: jax.Array, w: jax.Array, gid: jax.Array,
 def ft_grouped_matmul(x: jax.Array, w: jax.Array, group_ids: jax.Array,
                       ft: FTConfig = FT_OFF,
                       key: Optional[jax.Array] = None,
-                      spec: Optional[InjectionSpec] = None) -> jax.Array:
+                      spec: Optional[InjectionSpec] = None,
+                      bwd_inject=None) -> jax.Array:
     """Fault-tolerant ragged grouped matmul: y[t] = x[t] @ w[group_ids[t]].
 
     x: (T, K) rows in caller order; w: (G, K, N); group_ids: int32 (T,).
     Group sizes are whatever routing produced — no capacity, no dropped
     rows; the only padding is ≤ G·(bm-1) row-tile alignment rows. Both
-    directions are custom_vjp-protected (d_buf runs the grouped kernel
-    against transposed weights; d_w is verified with per-group checksums).
-    Backend follows `ft.backend` like `ft_dot` ("pallas" → the CSR-style
-    grouped Pallas kernel of `kernels.grouped`)."""
+    directions are custom_vjp-protected: d_buf runs the grouped kernel
+    against transposed weights, and d_w runs the output-stationary tgmm
+    kernel on the pallas backend (PR 4 — the segment-checksum jnp path
+    elsewhere). Backend follows `ft.backend` like `ft_dot`."""
     from repro.kernels.grouped import layout as glayout
 
     t, k = x.shape
@@ -618,7 +781,8 @@ def ft_grouped_matmul(x: jax.Array, w: jax.Array, group_ids: jax.Array,
     lay = glayout.make_layout(group_ids, ng, bm)
     buf = glayout.scatter_rows(x, lay)
     y_buf = ft_grouped_matmul_buffer(buf, w, lay.gid, lay.row_end, ft=ft,
-                                     key=key, spec=spec)
+                                     key=key, spec=spec,
+                                     bwd_inject=bwd_inject)
     return glayout.gather_rows(y_buf, lay)
 
 

@@ -49,6 +49,12 @@ class FTScope:
 
     def record(self, detected: jax.Array, magnitude: jax.Array,
                corrected: bool) -> None:
+        # Telemetry is diagnostics, not a differentiable quantity:
+        # stop_gradient here so reports threading scan carries / remat
+        # regions never send (even materialized-zero) cotangents back into
+        # the FT custom_vjps — whose bwd rules fail loudly on real ones.
+        detected = jax.lax.stop_gradient(detected)
+        magnitude = jax.lax.stop_gradient(magnitude)
         det_any = jnp.any(detected)
         d = det_any.astype(jnp.float32)
         self._items.append(FTReport(
@@ -60,12 +66,14 @@ class FTScope:
     def record_summary(self, det_count: jax.Array, max_residual: jax.Array,
                        corrected: bool) -> None:
         """Record a pre-reduced (count, max|δ|) summary (the form returned
-        across the custom_vjp boundary by ft_dot)."""
-        d = det_count.astype(jnp.float32)
+        across the custom_vjp boundary by ft_dot). stop_gradient'ed like
+        `record` — see the comment there."""
+        d = jax.lax.stop_gradient(det_count).astype(jnp.float32)
         self._items.append(FTReport(
             detected=d,
             corrected=d if corrected else jnp.zeros((), jnp.float32),
-            max_residual=max_residual.astype(jnp.float32),
+            max_residual=jax.lax.stop_gradient(max_residual)
+            .astype(jnp.float32),
         ))
 
     def report(self) -> FTReport:

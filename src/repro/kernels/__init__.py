@@ -9,66 +9,90 @@ grown into a declarative pipeline:
   1. **spec** (`templates/spec.py`) — a `KernelSpec` names one variant:
      FT level (off/inner/tile/block) × masked-vs-plain dispatch × an
      epilogue chain (bias-add, activation, residual-add from the
-     `templates/epilogues.py` registry) × accumulate/output dtypes.
-     Since PR 3 a `BatchedKernelSpec` extends the space with a leading
-     batch axis: uniform batched (B, M, K) × (B, K, N) (or a shared (K, N)
-     right operand) and CSR-style *grouped* dispatch (row-sorted token
-     buffer + per-group B selected by a scalar-prefetched tile→group map,
-     per-group checksums, ragged group edges masked in-kernel via
-     per-group row bounds — zero capacity padding).
+     `templates/epilogues.py` registry) × accumulate/output dtypes ×
+     **extra outputs** (PR 4 — multi-output kernels: "act_grad" writes the
+     derivative of the chain's nonlinear activation at the pre-activation
+     as a second VMEM output, computed from the verified/corrected
+     accumulator). A `BatchedKernelSpec` (PR 3/4) extends the space with a
+     leading batch axis: uniform batched (B, M, K) × (B, K, N) (or a
+     shared (K, N) right operand), CSR-style *grouped* dispatch
+     (row-sorted token buffer + per-group B selected by a
+     scalar-prefetched tile→group map, per-group checksums, ragged group
+     edges masked in-kernel — zero capacity padding), and the **tgmm**
+     variant — the grouped *transpose* GEMM dw[g] = X_gᵀ G_g of the MoE
+     backward, output-stationary over (G, K, N).
   2. **template** (`templates/emit.py`) — `render(spec, …)` composes the
      staged emitter (prologue / K-loop MAC + running checksums / fused
-     epilogue + writeback) into ONE Pallas kernel body. The four formerly
-     duplicated plain/masked × FT/non-FT bodies, every fused-epilogue
-     chain, and the batched/grouped bodies are all points in this space;
-     fused epilogues apply to the VMEM-resident accumulator before the
-     single HBM writeback, with linear ops folded into the ABFT checksum
-     comparison so detection/correction still works post-epilogue.
+     epilogue + writeback) into ONE Pallas kernel body; `render_tgmm` is
+     the one structurally different body (its grid walks row tiles as the
+     reduction axis; the accumulator + per-group checksums flush when the
+     scalar-prefetched group id changes between consecutive tiles). Fused
+     epilogues apply to the VMEM-resident accumulator before the single
+     HBM writeback, with linear ops folded into the ABFT checksum
+     comparison so detection/correction still works post-epilogue — and
+     extra outputs are written from the *corrected* accumulator, so a
+     forward SEU never reaches a saved residual.
   3. **autotune** (`autotune.py` + `search.py` + `tune_cache.py`) — the
-     candidate search enumerates MXU-aligned tiles under the
-     variant-aware VMEM model (fused epilogues add aux-operand buffers;
-     grouped dispatch adds its scalar metadata and a per-group
-     row-alignment penalty that steers bm), and the persistent cache keys
-     include the variant (`KernelSpec.variant_key()`) plus a
-     power-of-two-bucketed batch/group-count component (``/b_*`` /
-     ``/g_*`` — `best_params(..., batch=…, groups=…)`); 2-D keys are
-     unchanged so older caches stay valid.
+     candidate search enumerates MXU-aligned tiles under the variant-aware
+     VMEM model, now owned by the spec (`KernelSpec.vmem_bytes`): fused
+     epilogues add aux-operand buffers, extra outputs add their (bm, bn)
+     output block, and the tgmm variant swaps in its transposed geometry
+     ((bm,bk)+(bm,bn) operand tiles, (bk,bn) accumulator, bk-row checksum
+     scratch). `search.predicted_time_s` models each the same way (the
+     tgmm branch streams X once per N-block column, G once per K-block
+     row, writes dw once per group in f32, and charges the G·(bm-1)
+     reduction-dim alignment rows). Cache keys include the variant
+     (`KernelSpec.variant_key()` — e.g. ``/v_tgmm``, ``/v_xo_act_grad``)
+     plus the pow2-bucketed ``/b_*``/``/g_*`` count component; existing
+     keys are unchanged so older caches stay valid.
   4. **launch** (`templates/registry.py`, `ops.py`) — `ops.gemm_call(spec,
-     a, b, …)` is the 2-D front door and `ops.grouped_gemm_call` its
-     batched/grouped sibling (rank-dispatching: 3-D a → uniform batched,
-     2-D a + 3-D b + group_ids → grouped): variant-aware params, ragged
-     masked dispatch, operand padding, interpret fallback off-TPU.
-     `ops.matmul` / `ops.ft_matmul_report` / `ops.fused_matmul` are thin
-     specializations; `gemm.py` / `ftgemm.py` keep their public signatures
-     as registry lookups; `core.ft_batched_dot` / `core.ft_grouped_matmul`
-     are the policy-level fronts the model zoo calls.
+     a, b, …)` is the 2-D front door (multi-output specs return
+     ((C, extra…), report)) and `ops.grouped_gemm_call` its
+     batched/grouped sibling, rank-dispatching: 3-D a → uniform batched;
+     2-D a + 3-D b + group_ids → grouped; 2-D a + 2-D b + group_ids +
+     n_groups → tgmm. `ops.matmul` / `ops.ft_matmul_report` /
+     `ops.fused_matmul(..., save_act_grad=True)` are thin specializations;
+     `core.ft_batched_dot` / `core.ft_grouped_matmul` / `core.ft_dot_fused`
+     are the policy-level fronts the model zoo calls — since PR 4 their
+     custom_vjps keep the *backward* GEMMs on registry kernels too
+     (dx/dw/dbuf on the 2-D/grouped kernels, the grouped dw on tgmm, and
+     ft_dot_fused consuming the saved act_grad residual instead of
+     recomputing the pre-activation GEMM).
 
-Worked example — a grouped MoE expert FFN (what `models/moe.py` runs)::
+Worked example — protecting an MoE expert FFN end to end, BOTH directions
+(what `models/moe.py` + `core.ft_grouped_matmul` run)::
 
-    import jax.numpy as jnp
+    import jax, jax.numpy as jnp
     from repro.core import ft_grouped_matmul
     from repro.core.policy import FTConfig
 
     # tokens (T, d) each routed to one of G experts; weights (G, d, f).
-    # No capacity, no dropped tokens: rows are scattered into a
-    # group-sorted buffer whose groups start on row-tile boundaries
-    # (kernels/grouped/layout.py), so the ≤ G·(bm-1) alignment rows are
-    # the ONLY padding and every output block is wholly one expert's —
-    # an SEU in expert e's rows is detected, located, and corrected
-    # inside e's blocks and can never contaminate a neighbor.
     ft = FTConfig(level="block", backend="pallas")
-    h = ft_grouped_matmul(tokens, w_gate, expert_ids, ft=ft)
+    loss = lambda w: jnp.sum(ft_grouped_matmul(tokens, w, expert_ids,
+                                               ft=ft))
+    dw = jax.grad(loss)(w_gate)
+    # forward: the CSR-style grouped kernel (per-group checksums).
+    # backward: d_buf reruns the grouped kernel on wᵀ; dw runs the
+    # OUTPUT-STATIONARY TGMM KERNEL — grid walks the buffer's row tiles,
+    # dw[g] accumulates in VMEM while tiles of group g stream by, and the
+    # per-group checksums (col (X_g e)ᵀG_g, row X_gᵀ(G_g e)) verify and
+    # branchlessly correct at the group-boundary flush. One SEU per
+    # (group × output block) is corrected; empty groups return exact 0.
 
-    # Same variant space underneath — to tune it explicitly:
-    #   spec = templates.BatchedKernelSpec(ft_level="block", grouped=True)
+    # Tuning the tgmm variant explicitly:
+    #   spec = templates.BatchedKernelSpec(ft_level="block", tgmm=True)
     #   autotune.best_params(T, f, d, 4, ft_level="block", spec=spec,
-    #                        groups=G)        # cache key gains /g_<G·pow2>
-    # and `benchmarks/tune_campaign.py` regenerates/diffs the persistent
-    # cache per device kind (checked-in baseline: benchmarks/tuned/).
+    #                        groups=G)      # cache key gains /v_tgmm/g_*
+    # Multi-output fused forward (what ft_dot_fused's vjp uses):
+    #   (y, actp), rep = ops.fused_matmul(x, w, bias=b, act="gelu",
+    #                                     ft=ft, save_act_grad=True)
+    # `benchmarks/backward_path.py` reports the fraction of train-step
+    # GEMM FLOPs under in-kernel ABFT (and gates it ≥ 0.99 in CI).
 
-The epilogue extension hook is unchanged (register an `EpilogueOp`, spec
-it, run — see `templates/epilogues.py`); batched/grouped specs accept
-aux-free chains (activations).
+The epilogue extension hook is unchanged (register an `EpilogueOp` — give
+it a ``grad`` rule and it can also ride the act_grad multi-output variant
+— see `templates/epilogues.py`); batched/grouped specs accept aux-free
+chains (activations); tgmm is epilogue-free.
 
 Other modules:
 
@@ -76,8 +100,12 @@ Other modules:
   ftgemm.py   -- fused online-ABFT GEMM entry, 3 granularities (§4)
   flashft.py  -- flash attention with fused ABFT + ragged seq masking
                  (causal∧kv-edge mask on true lengths — ragged cross-length
-                 causal runs on fitted blocks, no padded fallback)
-  grouped/    -- batched & grouped subsystem (layout + dispatch, PR 3)
+                 causal runs on fitted blocks, no padded fallback) + GQA
+                 via K/V index maps (n_rep — KV never repeat-materialized);
+                 since PR 4 this is the training attention core on the
+                 pallas backend (`models.blocks.chunked_attention`)
+  grouped/    -- batched & grouped subsystem (layout + dispatch, PR 3;
+                 tgmm backward-dw kernel, PR 4)
   ops.py      -- dispatching front doors (padding, autotune, interpret)
   ref.py      -- pure-jnp oracles (incl. the unfused epilogue composition)
 

@@ -93,13 +93,15 @@ def clamp_params(p: KernelParams, m: int, n: int, k: int,
     """Clamp tile params to the (MXU-padded) problem and the VMEM budget —
     shared by the static table and the search/cache paths, so a cached
     class winner is always legal for the concrete shape at hand. Uses the
-    same working-set model (`KernelParams.vmem_bytes`) the search enumerates
-    under; a `templates.KernelSpec` adds its fused-epilogue aux-operand
-    buffers (`spec.extra_vmem_bytes`) on top."""
+    same working-set model (`KernelSpec.vmem_bytes`, wrapping
+    `KernelParams.vmem_bytes` plus the variant's aux/extra-output buffers —
+    or the tgmm override's transposed geometry) the search enumerates
+    under."""
 
     def _ws(q: KernelParams) -> int:
-        extra = spec.extra_vmem_bytes(q.bm, q.bn, in_bytes) if spec else 0
-        return q.vmem_bytes(in_bytes, ft_level) + extra
+        if spec is not None:
+            return spec.vmem_bytes(q, in_bytes, ft_level)
+        return q.vmem_bytes(in_bytes, ft_level)
 
     p = dataclasses.replace(p,
                             bm=min(p.bm, _round_up(m, MXU)),

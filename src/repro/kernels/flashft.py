@@ -193,20 +193,26 @@ def _flash_ft_kernel(inj_ref, mag_ref, dims_ref,
 
 @functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal", "ft",
                                              "interpret", "protect_qk",
-                                             "scale"))
+                                             "scale", "n_rep"))
 def flash_ft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                        inj_idx: jax.Array, inj_mag: jax.Array,
                        dims: Optional[jax.Array] = None, *,
                        bq: int = 128, bkv: int = 128, causal: bool = True,
                        ft: FTConfig, interpret: bool = False,
-                       protect_qk: bool = True, scale: float = None):
-    """q: (BH, Sq, dh); k, v: (BH, Skv, dh); dh lane-aligned (pad to 128 in
-    the ops wrapper). inj_idx int32[6] = [enable, bh, q_block, kv_step, row,
-    col]; inj_mag f32[1]; dims int32[2] true (Sq, Skv) for the masked
-    ragged path (None → the padded shapes are the true lengths). Returns
+                       protect_qk: bool = True, scale: float = None,
+                       n_rep: int = 1):
+    """q: (BH, Sq, dh); k, v: (BH/n_rep, Skv, dh); dh lane-aligned (pad to
+    128 in the ops wrapper). ``n_rep`` is the GQA query-group width: query
+    head h reads KV head h // n_rep straight through the K/V *index maps*,
+    so grouped-query attention runs without repeat-materializing the KV
+    operands (the chunked-jnp path's grouped-bdot trick, in-kernel).
+    inj_idx int32[6] = [enable, bh, q_block, kv_step, row, col]; inj_mag
+    f32[1]; dims int32[2] true (Sq, Skv) for the masked ragged path (None →
+    the padded shapes are the true lengths). Returns
     (out (BH, Sq, dh), report)."""
     bh, sq, dh = q.shape
-    _, skv, _ = k.shape
+    bkvh, skv, _ = k.shape
+    assert bh == bkvh * n_rep, (q.shape, k.shape, n_rep)
     assert sq % bq == 0 and skv % bkv == 0, (q.shape, k.shape, bq, bkv)
     grid = (bh, sq // bq, skv // bkv)
     if dims is None:
@@ -224,8 +230,10 @@ def flash_ft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, dh), lambda b, i, s, *_: (b, i, 0)),
-            pl.BlockSpec((1, bkv, dh), lambda b, i, s, *_: (b, s, 0)),
-            pl.BlockSpec((1, bkv, dh), lambda b, i, s, *_: (b, s, 0)),
+            pl.BlockSpec((1, bkv, dh),
+                         lambda b, i, s, *_: (b // n_rep, s, 0)),
+            pl.BlockSpec((1, bkv, dh),
+                         lambda b, i, s, *_: (b // n_rep, s, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, bq, dh), lambda b, i, s, *_: (b, i, 0)),

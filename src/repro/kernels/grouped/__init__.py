@@ -13,22 +13,28 @@ PR-2 template registry with ONE emitted body (`templates.emit` renders a
     dispatch.py -- batched_gemm_call (leading batch grid axis, masked ragged
                    (m,n,k)), grouped_buffer_call / grouped_matmul_rows
                    (per-group B via scalar-prefetched index maps, per-group
-                   checksums + detection/correction), plan_grouped
+                   checksums + detection/correction), plan_grouped;
+                   tgmm_buffer_call / tgmm_matmul_rows / plan_tgmm (PR 4 —
+                   the output-stationary grouped transpose GEMM of the MoE
+                   backward dw, per-group checksums flushed at group
+                   boundaries)
 
 Front doors: `kernels.ops.grouped_gemm_call` (rank-dispatching),
 `core.ft_batched_dot` / `core.ft_grouped_matmul` (policy-level, all three
-backends).
+backends — the grouped backward's dw runs the tgmm kernel on pallas).
 """
 from . import dispatch, layout
 from .dispatch import (batched_gemm_call, encode_batched_injection,
                        grouped_buffer_call, grouped_matmul_rows,
-                       plan_grouped)
+                       plan_grouped, plan_tgmm, tgmm_buffer_call,
+                       tgmm_matmul_rows)
 from .layout import (GroupLayout, buffer_rows, gather_rows, make_layout,
                      scatter_rows)
 
 __all__ = [
     "dispatch", "layout", "batched_gemm_call", "encode_batched_injection",
     "grouped_buffer_call", "grouped_matmul_rows", "plan_grouped",
+    "plan_tgmm", "tgmm_buffer_call", "tgmm_matmul_rows",
     "GroupLayout", "buffer_rows", "gather_rows", "make_layout",
     "scatter_rows",
 ]

@@ -12,6 +12,12 @@ Parallels `kernels.ops.gemm_call` for the batched variant space:
     G·(bm-1) alignment rows.
   * `grouped_matmul_rows` — row-space convenience (layout + scatter + call
     + gather in one step) for callers that run a single grouped GEMM.
+  * `tgmm_buffer_call` / `tgmm_matmul_rows` — the grouped *transpose* GEMM
+    (PR 4): dw[g] = X_gᵀ G_g over the same group-sorted buffer layout, run
+    as one output-stationary kernel over (G, K, N) with per-group running
+    checksums (`templates.emit.render_tgmm`). This is the MoE backward dw
+    — the last train-path GEMM that used to run as a segment-summed jnp
+    einsum.
 
 `kernels.ops.grouped_gemm_call` is the public front door that routes to
 these based on the operand ranks.
@@ -218,3 +224,158 @@ def grouped_matmul_rows(spec: BatchedKernelSpec, x: jax.Array, w: jax.Array,
                                      inject=inject, interpret=interpret,
                                      out_dtype=out_dtype)
     return layout_mod.gather_rows(y_buf, lay), rep
+
+
+# ---------------------------------------------------------------------------
+# grouped transpose GEMM ("tgmm" — the MoE backward dw)
+# ---------------------------------------------------------------------------
+
+def group_counts_from_metadata(row_end: jax.Array, bm: int) -> jax.Array:
+    """Recover per-group live-row counts from (row_end, bm) alone, using the
+    layout invariant that group g's region starts at the bm-aligned end of
+    group g-1's: counts[g] = row_end[g] - roundup(row_end[g-1], bm)."""
+    prev = jnp.concatenate([jnp.zeros((1,), row_end.dtype), row_end[:-1]])
+    base = ((prev + bm - 1) // bm) * bm
+    return row_end - base
+
+
+def tgmm_buffer_call(spec: BatchedKernelSpec, buf: jax.Array,
+                     gbuf: jax.Array,
+                     lay: Optional[layout_mod.GroupLayout] = None, *,
+                     gid: Optional[jax.Array] = None,
+                     row_end: Optional[jax.Array] = None,
+                     n_groups: Optional[int] = None,
+                     params: KernelParams,
+                     ft: Optional[FTConfig] = None,
+                     inject: Optional[InjectionSpec] = None,
+                     interpret: Optional[bool] = None,
+                     out_dtype=None
+                     ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Grouped transpose GEMM over prepared buffers:
+    ``dw[g] = buf_gᵀ gbuf_g`` with buf (t_buf, K) and gbuf (t_buf, N) both
+    group-sorted under ONE layout. Returns (dw (G, K, N), report|None); the
+    report is (G, gk, gn, W) — per-group blocks, since the accumulator
+    flushes at group boundaries.
+
+    The kernel grid only visits blocks of non-empty groups, so dw (and
+    report) rows of empty groups come back as unspecified memory — this
+    front door zeroes them (their true gradient contribution is zero: no
+    rows were routed there). Dead buffer rows between `row_end[g]` and the
+    next bm boundary are masked in-kernel, so garbage in either buffer's
+    alignment padding cannot reach dw or the checksums."""
+    if lay is not None:
+        gid, row_end = lay.gid, lay.row_end
+        n_groups = lay.n_groups
+        assert params.bm == lay.bm and buf.shape[0] == lay.t_buf, \
+            (params, lay.bm, buf.shape, lay.t_buf)
+    assert gid is not None and row_end is not None
+    ng = n_groups if n_groups is not None else row_end.shape[0]
+    t_buf, k = buf.shape
+    t2, n = gbuf.shape
+    assert t_buf == t2 and ng == row_end.shape[0], \
+        (buf.shape, gbuf.shape, row_end.shape)
+    assert t_buf == gid.shape[0] * params.bm, (t_buf, gid.shape, params.bm)
+    ft = _resolve_ft(spec, ft)
+    rspec = dataclasses.replace(spec, tgmm=True, grouped=False,
+                                shared_b=False)
+
+    # Fit the output dims to the ragged problem (zero padding of the K/N
+    # trailing edges is checksum-neutral — masked in-kernel besides).
+    bk = search.fit_tile(k, params.bk, MXU)
+    bn = search.fit_tile(n, params.bn, MXU)
+    rp = KernelParams(bm=params.bm, bn=bn, bk=bk,
+                      shape_class=params.shape_class)
+    ke = ((k + bk - 1) // bk) * bk
+    ne = ((n + bn - 1) // bn) * bn
+    buf_p = _pad_last2(buf, t_buf, ke)
+    gbuf_p = _pad_last2(gbuf, t_buf, ne)
+    dims = jnp.array([t_buf, n, k], jnp.int32)
+    inj_idx = inj_mag = None
+    if rspec.ft:
+        from .. import ftgemm
+        inj_idx, inj_mag = ftgemm.encode_injection(inject)
+    dw, rep = registry.tgmm_kernel_call(
+        buf_p, gbuf_p, inj_idx=inj_idx, inj_mag=inj_mag, dims=dims,
+        gid=gid, row_end=row_end, n_groups=ng, spec=rspec, params=rp,
+        ft=ft, interpret=_should_interpret(interpret), out_dtype=out_dtype)
+    dw = dw[:, :k, :n]
+    # Zero the never-visited blocks of empty groups (see docstring).
+    live = group_counts_from_metadata(row_end, params.bm) > 0
+    dw = jnp.where(live[:, None, None], dw, 0)
+    if rep is not None:
+        rep = jnp.where(live[:, None, None, None], rep, 0)
+    return dw, rep
+
+
+def plan_tgmm(t_rows: int, n: int, k: int, dtype, *, n_groups: int,
+              ft_level: str = "off",
+              spec: Optional[BatchedKernelSpec] = None,
+              params: Optional[KernelParams] = None,
+              bm: Optional[int] = None) -> KernelParams:
+    """Tile plan for a tgmm launch — same bm policy as `plan_grouped` (the
+    row tile is the group-alignment granularity on the *reduction* dim, so
+    the identical G·(bm-1) padding bound applies), but scored/budgeted under
+    the tgmm variant's own VMEM and roofline terms (``/v_…tgmm`` cache
+    key).
+
+    ``bm`` pins the row tile instead (the backward case: the forward
+    layout's bm is a fact of the existing buffer, not a free parameter) —
+    bn/bk are then re-clamped under the tgmm working-set model WITH that
+    bm, so a pinned row tile deeper than the searched one can never launch
+    an over-budget kernel."""
+    spec = spec or BatchedKernelSpec(ft_level=ft_level, tgmm=True)
+    in_bytes = jnp.dtype(dtype).itemsize
+    p = params or autotune.best_params(t_rows, n, k, in_bytes,
+                                       ft_level=ft_level, spec=spec,
+                                       groups=n_groups)
+    align_m = search.sublane(in_bytes)
+    if bm is None:
+        g = max(n_groups, 1)
+        avg = max(1, t_rows // g)
+        cap = ((t_rows // (4 * g) + 1) // align_m) * align_m
+        bm_max = max(align_m, min(p.bm, cap))
+        # "tile"-level FT bands slice dw's K rows (bk), not bm — no MXU
+        # floor on bm here, but bk stays MXU-aligned (fit_tile guarantees).
+        bm = search.fit_tile(min(avg, bm_max), bm_max, align_m)
+    q = KernelParams(bm=bm, bn=search.fit_tile(n, p.bn, MXU),
+                     bk=search.fit_tile(k, p.bk, MXU),
+                     shape_class=p.shape_class)
+
+    def _ws(qq: KernelParams) -> int:
+        return search.vmem_bytes(qq, in_bytes, ft_level, spec, m=t_rows,
+                                 groups=n_groups)
+
+    def _halve(edge: int) -> int:        # stay MXU-aligned while shrinking
+        return max(MXU, (edge // 2) // MXU * MXU)
+
+    while _ws(q) > autotune.VMEM_BUDGET and q.bk > MXU:
+        q = dataclasses.replace(q, bk=_halve(q.bk))
+    while _ws(q) > autotune.VMEM_BUDGET and q.bn > MXU:
+        q = dataclasses.replace(q, bn=_halve(q.bn))
+    return q
+
+
+def tgmm_matmul_rows(spec: BatchedKernelSpec, x: jax.Array, g: jax.Array,
+                     group_ids: jax.Array, *, n_groups: int,
+                     ft: Optional[FTConfig] = None,
+                     inject: Optional[InjectionSpec] = None,
+                     params: Optional[KernelParams] = None,
+                     interpret: Optional[bool] = None,
+                     out_dtype=None
+                     ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Row-space grouped transpose GEMM:
+    ``dw[e] = Σ_{r: group_ids[r]=e} x[r] ⊗ g[r]`` — any group sizes
+    (including empty and ragged-last). Lays out ONE group-sorted buffer
+    pair and runs the output-stationary kernel."""
+    t, k = x.shape
+    t2, n = g.shape
+    assert t == t2 and group_ids.shape == (t,), (x.shape, g.shape,
+                                                 group_ids.shape)
+    p = params or plan_tgmm(t, n, k, x.dtype, n_groups=n_groups,
+                            ft_level=spec.ft_level, spec=dataclasses.replace(
+                                spec, tgmm=True, grouped=False))
+    lay = layout_mod.make_layout(group_ids, n_groups, p.bm)
+    return tgmm_buffer_call(spec, layout_mod.scatter_rows(x, lay),
+                            layout_mod.scatter_rows(g, lay), lay, params=p,
+                            ft=ft, inject=inject, interpret=interpret,
+                            out_dtype=out_dtype)

@@ -121,7 +121,8 @@ def gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
 
     Returns (C, report) — report is None for non-FT specs, else the
     per-block [detected, corrected, row, col, magnitude, max_residual, τ,
-    k_elapsed] array of `ftgemm`.
+    k_elapsed] array of `ftgemm`. Multi-output specs (``spec.extra_outputs``)
+    return ((C, extra…), report) with every output sliced back to (M, N).
     """
     m, k = a.shape
     k2, n = b.shape
@@ -164,7 +165,8 @@ def gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
         inj_mag=inj_mag, dims=dims, spec=rspec, params=rp, ft=ft,
         interpret=_should_interpret(interpret), out_dtype=out_dtype)
     if masked:
-        out = out[:m, :n]
+        out = (tuple(o[:m, :n] for o in out) if spec.extra_outputs
+               else out[:m, :n])
     return out, rep
 
 
@@ -188,15 +190,26 @@ def fused_matmul(a: jax.Array, b: jax.Array, *,
                  inject: Optional[InjectionSpec] = None,
                  params: Optional[autotune.KernelParams] = None,
                  interpret: Optional[bool] = None,
-                 out_dtype=None) -> Tuple[jax.Array, Optional[jax.Array]]:
+                 out_dtype=None,
+                 save_act_grad: bool = False
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Canonical fused-epilogue GEMM: C = act(A·B + bias) + residual in one
     kernel — the matmul→bias→activation sequence without the second HBM
     round-trip. With an enabled `ft`, the linear epilogue prefix is folded
     into the checksum comparison so online ABFT verifies (and corrects)
-    post-epilogue. Returns (C, report|None)."""
+    post-epilogue. Returns (C, report|None).
+
+    ``save_act_grad=True`` (requires ``act``) runs the multi-output variant:
+    the kernel additionally writes act'(A·B + bias) — evaluated on the
+    verified/corrected accumulator — and the return becomes
+    ((C, act_grad), report|None). This is the saved residual
+    `core.ft_dot_fused`'s backward consumes instead of recomputing the
+    pre-activation GEMM."""
     spec = spec_mod.fused(bias=bias is not None, act=act,
                           residual=residual is not None,
                           ft_level=ft.level if ft.enabled else "off")
+    if save_act_grad:
+        spec = dataclasses.replace(spec, extra_outputs=("act_grad",))
     return gemm_call(spec, a, b, bias=bias, residual=residual, ft=ft,
                      inject=inject, params=params, interpret=interpret,
                      out_dtype=out_dtype)
@@ -204,6 +217,7 @@ def fused_matmul(a: jax.Array, b: jax.Array, *,
 
 def grouped_gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
                       group_ids: Optional[jax.Array] = None,
+                      n_groups: Optional[int] = None,
                       ft: Optional[FTConfig] = None,
                       inject: Optional[InjectionSpec] = None,
                       inj_batch: int = 0,
@@ -223,10 +237,16 @@ def grouped_gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
         GEMM — y[t] = a[t] @ b[group_ids[t]] over a group-sorted buffer
         with zero capacity padding; detection/correction run per group
         (`core.ft_grouped_matmul` / `models.moe` route here).
+      * a (T, K), b (T, N) with ``group_ids`` int32 (T,) and ``n_groups``:
+        the grouped *transpose* GEMM ("tgmm", PR 4) —
+        dw[g] = Σ_{t: group_ids[t]=g} a[t] ⊗ b[t], i.e. the (G, K, N)
+        per-group outer-product sum of the MoE backward dw, run as ONE
+        output-stationary Pallas kernel with per-group checksums
+        (`core.ft_grouped_matmul`'s backward routes here).
 
     `spec` may be a plain `KernelSpec` (promoted to `BatchedKernelSpec`) or
-    a `BatchedKernelSpec`; masked/shared_b/grouped are re-resolved from the
-    operands. Returns (C, report|None)."""
+    a `BatchedKernelSpec`; masked/shared_b/grouped/tgmm are re-resolved
+    from the operands. Returns (C, report|None)."""
     from . import grouped as grouped_mod
 
     bspec = BatchedKernelSpec(
@@ -237,8 +257,14 @@ def grouped_gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
         return grouped_mod.batched_gemm_call(
             bspec, a, b, ft=ft, inject=inject, inj_batch=inj_batch,
             params=params, interpret=interpret, out_dtype=out_dtype)
-    assert a.ndim == 2 and b.ndim == 3 and group_ids is not None, \
-        (a.shape, b.shape, group_ids)
+    assert a.ndim == 2 and group_ids is not None, (a.shape, group_ids)
+    if b.ndim == 2:                      # tgmm: two row-aligned buffers
+        assert n_groups is not None, "tgmm dispatch needs n_groups"
+        return grouped_mod.tgmm_matmul_rows(
+            dataclasses.replace(bspec, epilogue=(), tgmm=True), a, b,
+            group_ids, n_groups=n_groups, ft=ft, inject=inject,
+            params=params, interpret=interpret, out_dtype=out_dtype)
+    assert b.ndim == 3, (a.shape, b.shape)
     return grouped_mod.grouped_matmul_rows(
         dataclasses.replace(bspec, grouped=True), a, b, group_ids, ft=ft,
         inject=inject, params=params, interpret=interpret,
@@ -278,11 +304,14 @@ def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
              inj_bh: int = 0, inj_q_block: int = 0,
              bq: int = 128, bkv: int = 128,
              interpret: Optional[bool] = None,
-             protect_qk: bool = True) -> Tuple[jax.Array, jax.Array]:
+             protect_qk: bool = True,
+             n_rep: int = 1) -> Tuple[jax.Array, jax.Array]:
     """Flash attention with fused in-kernel ABFT (see kernels/flashft.py).
-    q: (BH, Sq, dh); k, v: (BH, Skv, dh). Pads dh to the 128-lane MXU edge;
-    the sequence dims take the masked ragged path: true (Sq, Skv) ride in
-    via scalar prefetch, blocks are *fitted* to the ragged lengths
+    q: (BH, Sq, dh); k, v: (BH/n_rep, Skv, dh) — ``n_rep`` is the GQA
+    query-group width (query head h reads KV head h//n_rep via the K/V
+    index maps; KV is never repeat-materialized). Pads dh to the 128-lane
+    MXU edge; the sequence dims take the masked ragged path: true (Sq, Skv)
+    ride in via scalar prefetch, blocks are *fitted* to the ragged lengths
     (sublane-aligned bq, lane-aligned bkv — no padding to full class
     tiles), and padded KV positions are masked to -inf in-kernel. Ragged
     Skv is exact for non-causal AND causal dispatch: the in-kernel
@@ -293,6 +322,7 @@ def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
     from . import flashft
     bh, sq, dh = q.shape
     skv = k.shape[1]
+    assert bh == k.shape[0] * n_rep, (q.shape, k.shape, n_rep)
     assert not causal or skv >= sq, (
         "causal flash_ft is bottom-right aligned: needs Skv >= Sq "
         f"(got Sq={sq}, Skv={skv})")
@@ -315,5 +345,5 @@ def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
     out, rep = flashft.flash_ft_attention(
         qp, kp, vp, inj_idx, inj_mag, dims, bq=bq, bkv=bkv, causal=causal,
         ft=ft, interpret=_should_interpret(interpret),
-        protect_qk=protect_qk, scale=dh ** -0.5)
+        protect_qk=protect_qk, scale=dh ** -0.5, n_rep=n_rep)
     return out[:, :sq, :dh], rep

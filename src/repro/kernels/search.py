@@ -53,18 +53,22 @@ def vmem_bytes(p: KernelParams, in_bytes: int = 4,
                ft_level: str = "off", spec=None, *,
                m: int = 0, groups: int = 0) -> int:
     """FT-level-and-variant-aware working set — delegates to the single
-    model on `KernelParams.vmem_bytes` (plus the fused-epilogue aux buffers
-    of a `templates.KernelSpec`) so search legality and budget clamping can
-    never disagree. A grouped launch (``groups > 0``) additionally holds its
-    scalar-prefetched tile→group map and per-group row bounds on chip:
-    4·(num_tiles + groups) bytes, where the tile count includes the
-    worst-case per-group alignment padding — the group count is part of the
-    working set, not just the key."""
-    extra = spec.extra_vmem_bytes(p.bm, p.bn, in_bytes) if spec else 0
+    model on `KernelSpec.vmem_bytes` (which itself wraps
+    `KernelParams.vmem_bytes` plus the fused-epilogue aux / extra-output
+    buffers, and which the tgmm variant overrides wholesale — its operand
+    tiles and accumulator have a different geometry) so search legality and
+    budget clamping can never disagree. A grouped launch (``groups > 0``)
+    additionally holds its scalar-prefetched tile→group map and per-group
+    row bounds on chip: 4·(num_tiles + groups) bytes, where the tile count
+    includes the worst-case per-group alignment padding — the group count
+    is part of the working set, not just the key."""
+    base = (spec.vmem_bytes(p, in_bytes, ft_level) if spec
+            else p.vmem_bytes(in_bytes, ft_level))
+    extra = 0
     if groups > 0:
         num_tiles = (m + groups * (p.bm - 1)) // p.bm + 1
         extra += 4 * (num_tiles + groups)
-    return p.vmem_bytes(in_bytes, ft_level) + extra
+    return base + extra
 
 
 def _tile_range(dim: int, max_tile: int = MAX_TILE) -> List[int]:
@@ -137,11 +141,33 @@ def predicted_time_s(m: int, n: int, k: int, p: KernelParams, *,
     dispatch instead: every group starts on a bm row-tile boundary, so up
     to bm-1 padding rows ride along per group — the executed M grows by
     the worst case ``groups·(bm-1)``, which is what steers the search away
-    from deep row tiles when the expert count is high."""
+    from deep row tiles when the expert count is high.
+
+    The tgmm variant (``spec.tgmm``) is modeled on its own geometry: M is
+    the *reduction* dimension (buffer rows, walked in bm tiles, carrying
+    the same per-group alignment padding), the output is (G, K, N) written
+    once per group in f32, the X buffer streams once per N-block column and
+    the G buffer once per K-block row."""
     if groups > 0:
         m = m + groups * (p.bm - 1)     # per-group row-alignment padding
     me, ne, ke = executed_dims(m, n, k, p)
     gm, gn, gk = me // p.bm, ne // p.bn, ke // p.bk
+    if spec is not None and spec.tgmm:
+        tiles = gm
+        flops = 2.0 * me * ne * ke
+        if ft_level != "off":
+            # Per row-tile per (ki, ni) block: two operand reductions
+            # (bm·bk + bm·bn) and two checksum GEMVs (2·bm·bn + 2·bm·bk).
+            per_step = 3.0 * (p.bm * p.bk + p.bm * p.bn)
+            if ft_level == "tile":
+                per_step += p.bk * p.bn
+            if ft_level == "inner":
+                per_step += 2.0 * p.bk * p.bn
+            flops += per_step * tiles * gk * gn
+        a_bytes = gn * me * ke * in_bytes       # X once per N-block column
+        b_bytes = gk * me * ne * in_bytes       # G once per K-block row
+        c_bytes = max(groups, 1) * ke * ne * 4  # dw written once, f32
+        return roofline.kernel_time_s(flops, a_bytes + b_bytes + c_bytes)
     flops = 2.0 * me * ne * ke + ft_overhead_flops(p, ft_level, gk, gm * gn)
     a_bytes = gn * me * ke * in_bytes
     b_bytes = gm * ke * ne * in_bytes

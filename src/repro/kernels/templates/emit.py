@@ -29,9 +29,15 @@ Layout of the generated kernel's positional refs (see `Layout`):
     [inj_idx, inj_mag, dims]?  scalar prefetch   (FT: all 3; masked-only: dims)
     [gid, row_end]?            scalar prefetch   (grouped specs only)
     a, b [, bias][, residual]  VMEM inputs
-    out [, report]             VMEM outputs
+    out [, extra…][, report]   VMEM outputs
     acc [, colck, rowck]       VMEM scratch
     [amax, bmax]               SMEM scratch      (FT threshold trackers)
+
+Multi-output specs (``spec.extra_outputs``, PR 4) add derived outputs
+between C and the report: "act_grad" writes the derivative of the chain's
+nonlinear activation evaluated at the (verified, corrected) pre-activation
+accumulator — the saved residual `core.ft_dot_fused`'s backward consumes
+instead of recomputing the pre-activation GEMM.
 
 Batched specs (`BatchedKernelSpec`) reuse this body: uniform batched adds a
 leading batch grid axis (a/b/out/report blocks gain a unit leading dim and
@@ -39,7 +45,9 @@ the 5-wide [enable, batch, row, col, k_step] injection layout); grouped
 keeps the 3-D grid but reads its owning group from the scalar-prefetched
 tile→group map and masks rows past the group's `row_end` — per-group
 checksums and correction fall out of per-block state, since row tiles
-never span groups.
+never span groups. The output-stationary tgmm variant (`render_tgmm`) is
+the one structurally different body: its grid walks row tiles as the
+reduction axis and flushes per group.
 """
 from __future__ import annotations
 
@@ -73,11 +81,18 @@ class Layout:
 
 
 def layout(spec: KernelSpec) -> Layout:
+    if spec.tgmm:
+        # [inj?, mag?, dims, gid, row_end] | x, g | dw [, rep] |
+        # acc [, colck, rowck] | [amax, bmax, t0]
+        if spec.ft:
+            return Layout(5, 2, 2, 3, 3)
+        return Layout(3, 2, 1, 1, 0)
     aux = int(spec.needs_bias) + int(spec.needs_residual)
     grp = 2 if spec.grouped else 0      # gid[num_tiles], row_end[G]
+    nxo = len(spec.extra_outputs)
     if spec.ft:
-        return Layout(3 + grp, 2 + aux, 2, 3, 2)
-    return Layout((1 if spec.masked else 0) + grp, 2 + aux, 1, 1, 0)
+        return Layout(3 + grp, 2 + aux, 2 + nxo, 3, 2)
+    return Layout((1 if spec.masked else 0) + grp, 2 + aux, 1 + nxo, 1, 0)
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +180,7 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
         bias_ref = refs.pop(0) if spec.needs_bias else None
         res_ref = refs.pop(0) if spec.needs_residual else None
         out_ref = refs.pop(0)
+        xo_refs = [refs.pop(0) for _ in spec.extra_outputs]
         rep_ref = refs.pop(0) if ft else None
         acc_ref = refs.pop(0)
         colck_ref = rowck_ref = amax_ref = bmax_ref = None
@@ -193,6 +209,18 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
         def _store(y):
             # Batched output blocks are (1, bm, bn) — reshape the 2-D tile.
             out_ref[...] = y.astype(out_ref.dtype).reshape(out_ref.shape)
+
+        def _apply_chain(y, ops_list):
+            """Apply `ops_list` to the accumulator, writing any requested
+            derived outputs at their defining point: act_grad is the first
+            (only) nonlinear op's derivative at its input — i.e. at the
+            *pre-activation*, after verification/correction has run."""
+            for op in ops_list:
+                if not op.linear and "act_grad" in spec.extra_outputs:
+                    ref = xo_refs[spec.extra_outputs.index("act_grad")]
+                    ref[...] = op.grad(y).astype(ref.dtype).reshape(ref.shape)
+                y = op.apply(y, _aux(op))
+            return y
 
         # ---- prologue: first-step scratch init ---------------------------
         @pl.when(s == 0)
@@ -232,10 +260,7 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
 
             @pl.when(last)
             def _flush_plain():
-                y = acc_ref[...].astype(jnp.float32)
-                for op in chain:
-                    y = op.apply(y, _aux(op))
-                _store(y)
+                _store(_apply_chain(acc_ref[...].astype(jnp.float32), chain))
             return
 
         af = a.astype(jnp.float32)
@@ -358,21 +383,199 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
                     acc, d_col, d_row, tau, corrects, bm, bn)
                 _record(rep_ref, det, mag, row_l + i * bm, col_l + j * bn,
                         d_col, d_row, tau, k_elapsed, corrects)
-                for op in chain[split:]:
-                    acc = op.apply(acc, _aux(op))
-                _store(acc)
+                _store(_apply_chain(acc, chain[split:]))
             else:
                 if mode == "tile":
                     _verify_raw()          # corrects acc_ref in place
                 # "inner" verified every step already.
-                y = acc_ref[...]
-                for op in chain:
-                    y = op.apply(y, _aux(op))
-                _store(y)
+                _store(_apply_chain(acc_ref[...], chain))
 
     kernel.__name__ = (f"gemm_{spec.ft_level}"
                        + ("_grouped" if grouped else "")
                        + ("_batched" if batched else "")
                        + ("_masked" if masked else "")
-                       + ("".join("_" + n for n in spec.epilogue)))
+                       + ("".join("_" + n for n in spec.epilogue))
+                       + ("".join("_" + n for n in spec.extra_outputs)))
+    return kernel
+
+
+# ---------------------------------------------------------------------------
+# the output-stationary grouped transpose GEMM (tgmm) template
+# ---------------------------------------------------------------------------
+
+def render_tgmm(spec: KernelSpec, *, t_tiles: int, bm: int, bn: int, bk: int,
+                n_bands: int = 1, verify_step: bool = True,
+                corrects: bool = True, rel_tau: float = 64.0):
+    """The MoE backward-dw kernel: ``dw[g] = X_gᵀ G_g`` over a group-sorted
+    buffer (see `BatchedKernelSpec` docs). Output-stationary over (G, K, N):
+
+      grid = (K/bk, N/bn, t_tiles) — the innermost axis walks row tiles of
+      the buffer (the *reduction* dimension); the output block index is the
+      scalar-prefetched owning group ``gid[t]``, so each (g, ki, ni) block
+      stays VMEM-resident over its group's contiguous tile range. The f32
+      accumulator and per-group running checksums reset on the first tile of
+      a group and flush (final verify → branchless correct → writeback) on
+      its last — per-group ABFT falls out of the flush boundary exactly like
+      per-block ABFT falls out of the k-loop in the forward template.
+
+    Checksums (Huang–Abraham on the transpose product): the column checksum
+    of dw_g is (X_g e_K)ᵀ G_g and the row checksum is X_gᵀ (G_g e_N) — both
+    computed from operand tiles already in VMEM, never from dw.
+
+    Ref list (see `layout`): FT — [inj_idx(4), inj_mag(1), dims(3), gid,
+    row_end | x, g | dw, rep | acc, colck, rowck | amax, bmax, t0]; non-FT —
+    [dims, gid, row_end | x, g | dw | acc]. ``dims`` is int32 [t_buf, N, K]
+    (true trailing dims — K/N ragged edges are masked in-kernel); injection
+    rows/cols are global (K, N) coordinates and ``k_step`` is the row-tile
+    index, which selects the owning group."""
+    ft = spec.ft
+    mode = spec.ft_level
+    assert spec.tgmm and not spec.epilogue
+
+    def kernel(*refs):
+        refs = list(refs)
+        if ft:
+            inj_idx_ref, inj_mag_ref, dims_ref = refs[:3]
+            del refs[:3]
+        else:
+            inj_idx_ref = inj_mag_ref = None
+            dims_ref = refs.pop(0)
+        gid_ref = refs.pop(0)
+        row_end_ref = refs.pop(0)
+        x_ref = refs.pop(0)
+        g_ref = refs.pop(0)
+        out_ref = refs.pop(0)
+        rep_ref = refs.pop(0) if ft else None
+        acc_ref = refs.pop(0)
+        colck_ref = rowck_ref = amax_ref = bmax_ref = t0_ref = None
+        if ft:
+            colck_ref, rowck_ref, amax_ref, bmax_ref, t0_ref = refs
+
+        ki = pl.program_id(0)
+        ni = pl.program_id(1)
+        t = pl.program_id(2)
+        gidx = gid_ref[t]
+        # Group boundaries in the (contiguous, group-sorted) tile walk.
+        first = (t == 0) | (gid_ref[jnp.maximum(t - 1, 0)] != gidx)
+        last = (t == t_tiles - 1) | \
+               (gid_ref[jnp.minimum(t + 1, t_tiles - 1)] != gidx)
+
+        @pl.when(first)
+        def _prologue():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            if ft:
+                colck_ref[...] = jnp.zeros_like(colck_ref)
+                rowck_ref[...] = jnp.zeros_like(rowck_ref)
+                amax_ref[0, 0] = 0.0
+                bmax_ref[0, 0] = 0.0
+                t0_ref[0, 0] = t.astype(jnp.float32)
+                rep_ref[...] = jnp.zeros_like(rep_ref)
+
+        # ---- load + ragged masking (group edge, true K/N edges) ----------
+        tn, tk = dims_ref[1], dims_ref[2]
+        row_hi = row_end_ref[gidx]
+        rows = t * bm + _iota2((bm, 1), 0)
+        x = x_ref[...].astype(jnp.float32)
+        g = g_ref[...].astype(jnp.float32)
+        x_ok = (rows < row_hi) & (ki * bk + _iota2((bm, bk), 1) < tk)
+        g_ok = (rows < row_hi) & (ni * bn + _iota2((bm, bn), 1) < tn)
+        x = jnp.where(x_ok, x, 0.0)
+        g = jnp.where(g_ok, g, 0.0)
+
+        contract_rows = (((0,), (0,)), ((), ()))     # Xᵀ·G without transpose
+        delta = jax.lax.dot_general(x, g, contract_rows,
+                                    preferred_element_type=jnp.float32)
+
+        if not ft:
+            acc_ref[...] += delta
+
+            @pl.when(last)
+            def _flush_plain():
+                out_ref[...] = (acc_ref[...].astype(out_ref.dtype)
+                                .reshape(out_ref.shape))
+            return
+
+        amax_ref[0, 0] = jnp.maximum(amax_ref[0, 0], jnp.max(jnp.abs(x)))
+        bmax_ref[0, 0] = jnp.maximum(bmax_ref[0, 0], jnp.max(jnp.abs(g)))
+        # Rounding-error accumulation follows the live rows reduced so far
+        # for THIS group (from its first tile t0 through the group edge).
+        rows_elapsed = (jnp.minimum((t + 1) * bm, row_hi).astype(jnp.float32)
+                        - t0_ref[0, 0] * bm)
+        rows_elapsed = jnp.maximum(rows_elapsed, 1.0)
+        tau = jnp.maximum(rel_tau * F32EPS * rows_elapsed
+                          * amax_ref[0, 0] * bmax_ref[0, 0], 1e-30)
+
+        # ---- emulated SEU (global (K, N) coordinates, tile-step timed) ---
+        enable, g_row, g_col, inj_k = (inj_idx_ref[0], inj_idx_ref[1],
+                                       inj_idx_ref[2], inj_idx_ref[3])
+        r_loc = g_row - ki * bk
+        c_loc = g_col - ni * bn
+        hit = ((enable == 1) & (t == inj_k)
+               & (r_loc >= 0) & (r_loc < bk) & (c_loc >= 0) & (c_loc < bn))
+        hit_mask = ((_iota2((bk, bn), 0) == r_loc)
+                    & (_iota2((bk, bn), 1) == c_loc) & hit)
+        delta = delta + jnp.where(hit_mask, inj_mag_ref[0], 0.0)
+
+        # ---- per-group running checksums ---------------------------------
+        xsum = jnp.sum(x, axis=1, keepdims=True)             # (bm, 1): X e_K
+        gsum = jnp.sum(g, axis=1, keepdims=True)             # (bm, 1): G e_N
+        if mode == "inner":
+            ck_col = jax.lax.dot_general(xsum, g, contract_rows)   # (1, bn)
+            ck_row = jax.lax.dot_general(x, gsum, contract_rows)   # (bk, 1)
+            d_col = jnp.sum(delta, axis=0, keepdims=True) - ck_col
+            d_row = jnp.sum(delta, axis=1, keepdims=True) - ck_row
+            delta, det, mag, row_l, col_l = _locate_correct_full(
+                delta, d_col, d_row, tau, corrects, bk, bn)
+            acc_ref[...] += delta
+            _record(rep_ref, det, mag, row_l + ki * bk, col_l + ni * bn,
+                    d_col, d_row, tau, rows_elapsed, corrects)
+        else:
+            acc_ref[...] += delta
+            if mode == "block":
+                colck_ref[...] += jax.lax.dot_general(xsum, g, contract_rows)
+            else:  # "tile": one running column checksum per MXU band of dw
+                for b in range(n_bands):
+                    xb = jnp.sum(x[:, b * MXU:(b + 1) * MXU], axis=1,
+                                 keepdims=True)
+                    colck_ref[b:b + 1, :] += jax.lax.dot_general(
+                        xb, g, contract_rows)
+            rowck_ref[...] += jax.lax.dot_general(x, gsum, contract_rows)
+
+            def _verify_raw():
+                acc = acc_ref[...]
+                d_row = jnp.sum(acc, axis=1, keepdims=True) - rowck_ref[...]
+                if mode == "block":
+                    d_col = (jnp.sum(acc, axis=0, keepdims=True)
+                             - colck_ref[0:1, :])
+                    new_acc, det, mag, row_l, col_l = _locate_correct_full(
+                        acc, d_col, d_row, tau, corrects, bk, bn)
+                    acc_ref[...] = new_acc
+                    _record(rep_ref, det, mag, row_l + ki * bk,
+                            col_l + ni * bn, d_col, d_row, tau,
+                            rows_elapsed, corrects)
+                else:
+                    for b in range(n_bands):
+                        band = acc[b * MXU:(b + 1) * MXU]
+                        d_col = (jnp.sum(band, axis=0, keepdims=True)
+                                 - colck_ref[b:b + 1, :])
+                        d_row_b = d_row[b * MXU:(b + 1) * MXU]
+                        new_band, det, mag, row_l, col_l = \
+                            _locate_correct_full(band, d_col, d_row_b, tau,
+                                                 corrects, MXU, bn)
+                        acc_ref[b * MXU:(b + 1) * MXU, :] = new_band
+                        _record(rep_ref, det, mag,
+                                row_l + ki * bk + b * MXU, col_l + ni * bn,
+                                d_col, d_row_b, tau, rows_elapsed, corrects)
+
+            if verify_step:
+                pl.when(jnp.logical_not(last))(_verify_raw)
+
+        @pl.when(last)
+        def _flush():
+            if mode != "inner":
+                _verify_raw()            # final per-group verify + correct
+            out_ref[...] = (acc_ref[...].astype(out_ref.dtype)
+                            .reshape(out_ref.shape))
+
+    kernel.__name__ = f"tgmm_{spec.ft_level}"
     return kernel

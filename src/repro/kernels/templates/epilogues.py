@@ -25,6 +25,13 @@ reason about it:
     (pure elementwise), ``"vector"`` (a (1, bn) slice of an N-vector, e.g.
     bias), or ``"tile"`` (a (bm, bn) slice of an (M, N) array, e.g.
     residual).
+  * ``grad(y)``             — for nonlinear elementwise ops: the derivative
+    d apply/d y evaluated at the *pre-activation* ``y``. This is what the
+    multi-output "act_grad" kernel variant writes as a second VMEM output
+    (PR 4): the fused forward kernel emits ``act'(preact)`` alongside the
+    activated output so the backward pass consumes a saved residual instead
+    of recomputing the pre-activation GEMM. Ops without a ``grad`` simply
+    cannot ride the act_grad variant.
 
 New ops are added with `register` — see the worked example in the
 `repro.kernels` package docstring.
@@ -47,6 +54,7 @@ class EpilogueOp:
     apply: Callable            # (y, aux) -> y'   (aux is None for elementwise)
     aux: Optional[str] = None  # None | "vector" | "tile"
     fold: Optional[Callable] = None  # (colck, rowck, aux, rows) -> (colck, rowck)
+    grad: Optional[Callable] = None  # (y) -> d apply/d y  (nonlinear elementwise)
 
     def __post_init__(self):
         if self.linear and self.fold is None:
@@ -92,14 +100,30 @@ def _relu(y, aux):
     return jnp.maximum(y, 0.0)
 
 
+def _relu_grad(y):
+    return (y > 0.0).astype(y.dtype)
+
+
 def _silu(y, aux):
     return y * (1.0 / (1.0 + jnp.exp(-y)))
+
+
+def _silu_grad(y):
+    s = 1.0 / (1.0 + jnp.exp(-y))
+    return s * (1.0 + y * (1.0 - s))
 
 
 def _gelu(y, aux):
     # tanh approximation — matches jax.nn.gelu(approximate=True).
     return 0.5 * y * (1.0 + jnp.tanh(_SQRT_2_OVER_PI
                                      * (y + 0.044715 * y * y * y)))
+
+
+def _gelu_grad(y):
+    u = _SQRT_2_OVER_PI * (y + 0.044715 * y * y * y)
+    t = jnp.tanh(u)
+    du = _SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * y * y)
+    return 0.5 * (1.0 + t) + 0.5 * y * (1.0 - t * t) * du
 
 
 def activation(name: str) -> Callable:
@@ -109,6 +133,16 @@ def activation(name: str) -> Callable:
     if op.aux is not None:
         raise ValueError(f"'{name}' is not an elementwise activation")
     return lambda y: op.apply(y, None)
+
+
+def activation_grad(name: str) -> Callable:
+    """The derivative of a registered elementwise activation — the math the
+    "act_grad" multi-output variant stores and the jnp backward consumes."""
+    op = get(name)
+    if op.aux is not None or op.grad is None:
+        raise ValueError(f"'{name}' has no registered derivative (needed "
+                         f"for the act_grad multi-output variant)")
+    return op.grad
 
 
 # ---------------------------------------------------------------------------
@@ -138,9 +172,9 @@ register(EpilogueOp("bias", linear=True, apply=_bias_apply, aux="vector",
                     fold=_bias_fold))
 register(EpilogueOp("residual", linear=True, apply=_residual_apply,
                     aux="tile", fold=_residual_fold))
-register(EpilogueOp("relu", linear=False, apply=_relu))
-register(EpilogueOp("silu", linear=False, apply=_silu))
-register(EpilogueOp("gelu", linear=False, apply=_gelu))
+register(EpilogueOp("relu", linear=False, apply=_relu, grad=_relu_grad))
+register(EpilogueOp("silu", linear=False, apply=_silu, grad=_silu_grad))
+register(EpilogueOp("gelu", linear=False, apply=_gelu, grad=_gelu_grad))
 
 
 def reference_apply(chain, y, *, bias=None, residual=None):

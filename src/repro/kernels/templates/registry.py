@@ -55,7 +55,9 @@ def kernel_call(a: jax.Array, b: jax.Array,
                 ft: Optional[FTConfig] = None,
                 interpret: bool = False, out_dtype=None):
     """Launch the rendered variant. Returns (C, report) — report is None
-    for non-FT specs.
+    for non-FT specs. Multi-output specs (``spec.extra_outputs``) return
+    ((C, extra…), report) — the derived outputs ride between C and the
+    report in the pallas_call's output list.
 
     Operand contract (enforced by `kernels.ops.gemm_call`, the padding
     front door): a (M, K), b (K, N) padded to the tile grid; bias (1, N)
@@ -98,6 +100,9 @@ def kernel_call(a: jax.Array, b: jax.Array,
 
     out_specs = [pl.BlockSpec((bm, bn), lambda i, j, s, *_: (i, j))]
     out_shape = [jax.ShapeDtypeStruct((m, n), out_dtype)]
+    for _ in spec.extra_outputs:
+        out_specs.append(pl.BlockSpec((bm, bn), lambda i, j, s, *_: (i, j)))
+        out_shape.append(jax.ShapeDtypeStruct((m, n), out_dtype))
     scratch = [pltpu.VMEM((bm, bn), jnp.dtype(spec.acc_dtype))]
     prefetch = []
     if spec.ft:
@@ -122,26 +127,137 @@ def kernel_call(a: jax.Array, b: jax.Array,
         dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
                              pltpu.ARBITRARY))
 
+    multi = len(out_shape) > 1           # FT report and/or extra outputs
     if prefetch:
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=len(prefetch),
             grid=grid,
             in_specs=in_specs,
-            out_specs=out_specs if spec.ft else out_specs[0],
+            out_specs=out_specs if multi else out_specs[0],
             scratch_shapes=scratch,
         )
         call = pl.pallas_call(
             kernel, grid_spec=grid_spec,
-            out_shape=out_shape if spec.ft else out_shape[0],
+            out_shape=out_shape if multi else out_shape[0],
             compiler_params=compiler_params, interpret=interpret)
         result = call(*prefetch, *operands)
     else:
         call = pl.pallas_call(
-            kernel, grid=grid, in_specs=in_specs, out_specs=out_specs[0],
-            out_shape=out_shape[0], scratch_shapes=scratch,
+            kernel, grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs if multi else out_specs[0],
+            out_shape=out_shape if multi else out_shape[0],
+            scratch_shapes=scratch,
             compiler_params=compiler_params, interpret=interpret)
         result = call(*operands)
 
+    if not multi:
+        return result, None
+    result = list(result)
+    rep = result.pop() if spec.ft else None
+    out = tuple(result) if spec.extra_outputs else result[0]
+    return out, rep
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_groups", "spec", "params", "ft",
+                                    "interpret", "out_dtype"))
+def tgmm_kernel_call(x: jax.Array, g: jax.Array,
+                     inj_idx: Optional[jax.Array] = None,
+                     inj_mag: Optional[jax.Array] = None,
+                     dims: Optional[jax.Array] = None,
+                     gid: Optional[jax.Array] = None,
+                     row_end: Optional[jax.Array] = None, *,
+                     n_groups: int,
+                     spec: BatchedKernelSpec, params: KernelParams,
+                     ft: Optional[FTConfig] = None,
+                     interpret: bool = False, out_dtype=None):
+    """Launch the output-stationary grouped transpose GEMM (``spec.tgmm``):
+    ``dw[g] = X_gᵀ G_g`` with x (t_buf, K), g (t_buf, N) group-sorted
+    buffers sharing one layout (``gid`` int32[t_buf/bm], ``row_end``
+    int32[G]). Returns (dw (G, K, N) f32-by-default, report|None); the
+    report is (G, gk, gn, W) — per *group* blocks, since the accumulator
+    flushes at group boundaries.
+
+    Output blocks of EMPTY groups are never visited by the grid and hold
+    unspecified memory — `kernels.grouped.dispatch.tgmm_buffer_call` (the
+    padding/masking front door) zeroes them; call through it."""
+    assert spec.tgmm, spec
+    bm, bn, bk = params.bm, params.bn, params.bk
+    t_buf, k = x.shape
+    t2, n = g.shape
+    assert t_buf == t2, (x.shape, g.shape)
+    assert t_buf % bm == 0 and n % bn == 0 and k % bk == 0, \
+        ((t_buf, n, k), params)
+    assert gid is not None and row_end is not None
+    assert gid.shape == (t_buf // bm,) and row_end.shape == (n_groups,), \
+        (gid.shape, row_end.shape, t_buf // bm, n_groups)
+    from .. import search
+    need = MXU if spec.ft_level == "tile" else 1
+    assert bk % need == 0, (params, spec)   # "tile" bands slice dw's K rows
+    assert bm % search.sublane(x.dtype.itemsize) == 0, (params, spec)
+
+    grid = (k // bk, n // bn, t_buf // bm)
+    out_dtype = out_dtype or jnp.float32    # dw is a gradient — default f32
+    n_bands = bk // MXU if spec.ft_level == "tile" else 1
+    ft = ft or FTConfig(level=spec.ft_level if spec.ft else "block",
+                        action="correct" if spec.ft else "off")
+    kernel = emit.render_tgmm(
+        spec, t_tiles=grid[2], bm=bm, bn=bn, bk=bk, n_bands=n_bands,
+        verify_step=(ft.verify == "step"), corrects=ft.corrects,
+        rel_tau=ft.rel_tau)
+    lay = emit.layout(spec)
+
+    if spec.ft:
+        assert inj_idx is not None and inj_mag is not None
+        if dims is None:
+            dims = jnp.array([t_buf, n, k], jnp.int32)
+        prefetch = [inj_idx, inj_mag, dims]
+    else:
+        assert dims is not None
+        prefetch = [dims]
+    prefetch += [gid, row_end]
+    gpos = len(prefetch) - 2                # index of `gid` among scalar refs
+    assert len(prefetch) == lay.n_prefetch, (len(prefetch), lay)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda ki, ni, t, *_: (t, ki)),
+        pl.BlockSpec((bm, bn), lambda ki, ni, t, *_: (t, ni)),
+    ]
+    # Output-stationary: the scalar-prefetched owning group IS the leading
+    # output block index — the accumulator stays resident across the
+    # group's contiguous row-tile range and flushes at the boundary.
+    out_specs = [pl.BlockSpec((1, bk, bn),
+                              lambda ki, ni, t, *pf: (pf[gpos][t], ki, ni))]
+    out_shape = [jax.ShapeDtypeStruct((n_groups, k, n), out_dtype)]
+    scratch = [pltpu.VMEM((bk, bn), jnp.dtype(spec.acc_dtype))]
+    if spec.ft:
+        out_specs.append(pl.BlockSpec(
+            (1, 1, 1, REPORT_WIDTH),
+            lambda ki, ni, t, *pf: (pf[gpos][t], ki, ni, 0)))
+        out_shape.append(jax.ShapeDtypeStruct(
+            (n_groups, grid[0], grid[1], REPORT_WIDTH), jnp.float32))
+        scratch += [pltpu.VMEM((n_bands, bn), jnp.float32),
+                    pltpu.VMEM((bk, 1), jnp.float32),
+                    pltpu.SMEM((1, 1), jnp.float32),
+                    pltpu.SMEM((1, 1), jnp.float32),
+                    pltpu.SMEM((1, 1), jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(prefetch),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs if spec.ft else out_specs[0],
+        scratch_shapes=scratch,
+    )
+    call = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=out_shape if spec.ft else out_shape[0],
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
+                                 pltpu.ARBITRARY)),
+        interpret=interpret)
+    result = call(*prefetch, x, g)
     if spec.ft:
         out, rep = result
         return out, rep

@@ -21,6 +21,15 @@ from . import epilogues
 
 FT_LEVELS = ("off", "inner", "tile", "block")
 
+#: Registered *derived* kernel outputs ("multi-output" support, PR 4).
+#: "act_grad" — the derivative of the chain's (single) nonlinear activation
+#: evaluated at the pre-activation, written as a second VMEM output from the
+#: forward kernel so a custom_vjp can consume a saved residual instead of
+#: recomputing the pre-activation GEMM in the backward pass. It is computed
+#: from the *corrected* accumulator (after the folded checksum comparison),
+#: so an SEU corrected in the forward kernel never reaches the saved grad.
+EXTRA_OUTPUTS = ("act_grad",)
+
 #: dtype string → (short tag, element bytes) for variant keys / VMEM math.
 _DTYPES = {"float32": ("f32", 4), "bfloat16": ("bf16", 2),
            "float16": ("f16", 2)}
@@ -33,6 +42,10 @@ class KernelSpec:
     epilogue: Tuple[str, ...] = ()
     acc_dtype: str = "float32"
     out_dtype: Optional[str] = None   # None → follow the input dtype
+    #: Derived second-class outputs the kernel writes alongside C (see
+    #: `EXTRA_OUTPUTS`). Each adds one (bm, bn) VMEM output block and one
+    #: (M, N) HBM stream — the autotuner charges both.
+    extra_outputs: Tuple[str, ...] = ()
 
     #: Structure flags the emitter branches on. The base spec is the 2-D
     #: GEMM; `BatchedKernelSpec` overrides these (kept as plain class
@@ -41,6 +54,7 @@ class KernelSpec:
     batched = False
     grouped = False
     shared_b = False
+    tgmm = False
 
     def __post_init__(self):
         if self.ft_level not in FT_LEVELS:
@@ -62,6 +76,21 @@ class KernelSpec:
                              "checksum algebra's dtype)")
         if self.out_dtype is not None and self.out_dtype not in _DTYPES:
             raise ValueError(f"unsupported out_dtype {self.out_dtype!r}")
+        object.__setattr__(self, "extra_outputs", tuple(self.extra_outputs))
+        for name in self.extra_outputs:
+            if name not in EXTRA_OUTPUTS:
+                raise ValueError(f"unknown extra output {name!r}; "
+                                 f"registered: {EXTRA_OUTPUTS}")
+        if "act_grad" in self.extra_outputs:
+            nonlin = [n for n in self.epilogue
+                      if not epilogues.get(n).linear]
+            if len(nonlin) != 1:
+                raise ValueError(
+                    "act_grad needs exactly one nonlinear op in the chain "
+                    f"(the saved act'(preact) residual), got {self.epilogue}")
+            if epilogues.get(nonlin[0]).grad is None:
+                raise ValueError(f"epilogue '{nonlin[0]}' has no registered "
+                                 f"derivative — cannot emit act_grad")
 
     # -- structure ---------------------------------------------------------
 
@@ -95,6 +124,8 @@ class KernelSpec:
         parts = []
         if self.epilogue:
             parts.append("+".join(self.epilogue))
+        if self.extra_outputs:
+            parts.append("xo_" + "+".join(self.extra_outputs))
         if self.acc_dtype != "float32":
             parts.append(f"acc{_DTYPES[self.acc_dtype][0]}")
         if self.out_dtype is not None:
@@ -104,32 +135,46 @@ class KernelSpec:
     def extra_vmem_bytes(self, bm: int, bn: int, in_bytes: int) -> int:
         """Added VMEM working set of the fused epilogue: double-buffered aux
         operand tiles (the accumulator itself is already counted by
-        `KernelParams.vmem_bytes`). Fused chains shift the budget, so the
-        candidate search must see this."""
+        `KernelParams.vmem_bytes`), plus one (bm, bn) output block per extra
+        output. Fused chains shift the budget, so the candidate search must
+        see this."""
         extra = 0
         if self.needs_bias:
             extra += 2 * bn * in_bytes
         if self.needs_residual:
             extra += 2 * bm * bn * in_bytes
+        extra += len(self.extra_outputs) * bm * bn * in_bytes
         return extra
+
+    def vmem_bytes(self, params, in_bytes: int, ft_level: str) -> int:
+        """The variant's full VMEM working set for one tile config — the
+        single model shared by the candidate search and budget clamping.
+        The base variant delegates to `KernelParams.vmem_bytes` and adds the
+        fused-epilogue/extra-output buffers; structurally different bodies
+        (the tgmm variant) override this wholesale."""
+        return (params.vmem_bytes(in_bytes, ft_level)
+                + self.extra_vmem_bytes(params.bm, params.bn, in_bytes))
 
     def epilogue_flops(self, me: int, ne: int) -> float:
         """Elementwise epilogue FLOPs over the executed output (a small
-        roofline term — ~5 flops per nonlinear op element)."""
+        roofline term — ~5 flops per nonlinear op element; an act_grad
+        output pays roughly one more activation evaluation)."""
         per_elem = sum(1.0 if epilogues.get(n).linear else 5.0
                        for n in self.epilogue)
+        per_elem += 5.0 * len(self.extra_outputs)
         return per_elem * me * ne
 
     def extra_hbm_bytes(self, me: int, ne: int, in_bytes: int) -> float:
         """Added HBM traffic of the fused variant: aux operands are read
-        once. (The unfused composition instead re-reads AND re-writes the
-        whole C between passes — that delta is the fusion win the
-        fused_epilogue benchmark reports.)"""
+        once, extra outputs are written once. (The unfused composition
+        instead re-reads AND re-writes the whole C between passes — that
+        delta is the fusion win the fused_epilogue benchmark reports.)"""
         extra = 0.0
         if self.needs_bias:
             extra += ne * in_bytes
         if self.needs_residual:
             extra += me * ne * in_bytes
+        extra += len(self.extra_outputs) * me * ne * in_bytes
         return extra
 
 
@@ -155,25 +200,44 @@ class BatchedKernelSpec(KernelSpec):
         Because every row tile is wholly owned by one group, checksums,
         verification, and correction are naturally per group: an SEU in one
         expert's rows can never contaminate a neighboring group.
+      * tgmm (``tgmm=True``, PR 4) — the grouped *transpose* GEMM of the MoE
+        backward dw: ``dw[g] = X_gᵀ G_g`` over the same group-sorted buffer
+        layout, but **output-stationary over (G, K, N)**: the grid's
+        innermost axis walks row tiles (the reduction dim), the output block
+        index is the scalar-prefetched owning group, and the accumulator +
+        running per-group checksums flush whenever the group id changes
+        between consecutive row tiles (groups are contiguous in the buffer,
+        so each (g, k, n) output block is visited over one contiguous tile
+        range). Exactly the useful T·K·N FLOPs — the only padding is the
+        same ≤ G·(bm-1) alignment rows the forward grouped kernel pays.
 
     Aux-operand epilogues (bias/residual) would need per-batch streams; the
-    batched variants support aux-free chains only (activations etc.).
+    batched variants support aux-free chains only (activations etc.), and
+    the tgmm variant is epilogue-free (it produces a gradient).
     """
     shared_b: bool = False
     grouped: bool = False
+    tgmm: bool = False
 
     batched = True
 
     def __post_init__(self):
         super().__post_init__()
-        if self.grouped:
+        if self.grouped or self.tgmm:
             if self.shared_b:
                 raise ValueError("grouped GEMM has per-group B operands")
-            # Grouped dispatch always masks the ragged group edges.
+            if self.grouped and self.tgmm:
+                raise ValueError("tgmm is its own body — not grouped=True")
+            # Grouped/tgmm dispatch always masks the ragged group edges.
             object.__setattr__(self, "masked", True)
         if self.needs_bias or self.needs_residual:
             raise ValueError("batched/grouped variants support aux-free "
                              f"epilogue chains only, got {self.epilogue}")
+        if self.tgmm and self.epilogue:
+            raise ValueError("the tgmm variant is epilogue-free, got "
+                             f"{self.epilogue}")
+        if self.extra_outputs:
+            raise ValueError("extra outputs are a 2-D variant feature")
 
     def variant_key(self) -> str:
         """Batched variants render a different body (batch axis / group
@@ -181,9 +245,26 @@ class BatchedKernelSpec(KernelSpec):
         even for an empty epilogue chain. The batch/group *count* component
         (`/b_*` / `/g_*`) is added separately by `tune_cache.cache_key`."""
         base = super().variant_key()
-        tag = "grouped" if self.grouped else (
-            "batched_sharedB" if self.shared_b else "batched")
+        tag = ("tgmm" if self.tgmm else
+               "grouped" if self.grouped else
+               "batched_sharedB" if self.shared_b else "batched")
         return f"{base}.{tag}" if base else tag
+
+    def vmem_bytes(self, params, in_bytes: int, ft_level: str) -> int:
+        """The tgmm body holds a different working set than the forward
+        template: operand tiles are (bm, bk) + (bm, bn) slices of the two
+        buffers, the accumulator is the (bk, bn) *output* block, and the
+        checksum scratch follows the output block's row count (bk)."""
+        if not self.tgmm:
+            return super().vmem_bytes(params, in_bytes, ft_level)
+        bm, bn, bk = params.bm, params.bn, params.bk
+        operands = 2 * (bm * bk + bm * bn) * in_bytes
+        acc = bk * bn * 4
+        if ft_level == "off":
+            return operands + acc
+        from ..autotune import MXU
+        n_bands = bk // MXU if ft_level == "tile" else 1
+        return operands + acc + max(n_bands, 1) * bn * 4 + bk * 4
 
 
 def fused(bias: bool = False, act: Optional[str] = None,

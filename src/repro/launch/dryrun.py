@@ -208,7 +208,8 @@ def build_lowered(arch: str, shape_name: str, mesh, *, ft_on: bool = True,
             c_struct = _with_sharding(
                 c_struct, _cache_specs_tree(c_struct, cfg, shape), mesh)
             ctx = Ctx(ft=run.ft, key=None, dtype=jnp.bfloat16,
-                      attn_shard=run.attn_shard)
+                      attn_shard=run.attn_shard,
+                      attn_impl=run.attn_impl)
 
             def fn(params, cache, **binputs):
                 extra = binputs.get("patches", binputs.get("frames"))
@@ -230,7 +231,8 @@ def build_lowered(arch: str, shape_name: str, mesh, *, ft_on: bool = True,
             c_struct = _with_sharding(
                 c_struct, _cache_specs_tree(c_struct, cfg, shape), mesh)
             ctx = Ctx(ft=run.ft, key=None, dtype=jnp.bfloat16,
-                      attn_shard=run.attn_shard)
+                      attn_shard=run.attn_shard,
+                      attn_impl=run.attn_impl)
 
             def fn(params, token, cache):
                 return mod.decode_step(params, token, cache, cfg, ctx)

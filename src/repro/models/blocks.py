@@ -6,13 +6,21 @@ Conventions:
   * `Ctx` carries the FT policy + per-step injection key + compute dtype;
     call sites derive deterministic sub-keys from their name (crc32) so an
     injection campaign exercises every GEMM in the model;
-  * attention is a flash-style query-chunked scan (jax.checkpoint'd chunk
-    body) — O(chunk × S) transient memory, never materializing S×S, in both
-    forward and backward. Required for the 32k prefill shapes.
+  * training/prefill attention: on the pallas FT backend the core runs the
+    `kernels.flashft` ragged-causal kernel (PR 4) — ONE Pallas launch with
+    both in-kernel GEMMs ABFT-protected, no O(chunk × S) score transient in
+    the forward, GQA served through the K/V index maps (KV never
+    repeat-materialized); the backward recomputes through the chunked-jnp
+    oracle (jax.checkpoint'd chunk body), so its GEMMs ride the protected
+    batched kernel. Elsewhere (and under ``Ctx.attn_impl="chunked"``) the
+    flash-style query-chunked scan runs end to end — O(chunk × S) transient
+    memory, never materializing S×S, in both directions. Required for the
+    32k prefill shapes.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import zlib
 from typing import Any, Dict, Optional, Tuple
 
@@ -21,7 +29,17 @@ import jax.numpy as jnp
 
 from repro.core import ft_dot, ft_dot_fused, ft_batched_dot, telemetry
 from repro.core import loops
+from repro.core.ft_gemm import _float0
 from repro.core.policy import FTConfig, FT_OFF
+
+
+def named_subkey(key: Optional[jax.Array], name: str) -> Optional[jax.Array]:
+    """THE per-call-site key derivation (crc32 of the site name) — shared
+    by `Ctx.subkey` and the ctx-free attention cores so every GEMM of an
+    injection campaign sees the same deterministic sub-key either way."""
+    if key is None:
+        return None
+    return jax.random.fold_in(key, zlib.crc32(name.encode()))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,16 +47,21 @@ class Ctx:
     """Per-call context: FT policy, injection key, activation dtype,
     attention sharding scheme ("heads" = Megatron-SP head-TP inside the
     attention core with seq gathered per layer; "none" = leave placement to
-    GSPMD propagation — a §Perf comparison axis)."""
+    GSPMD propagation — a §Perf comparison axis).
+
+    ``attn_impl`` selects the training/prefill attention core: "auto"
+    (default — the flashft kernel when the FT backend is pallas and the
+    geometry is eligible, the chunked scan otherwise), "flash" (force the
+    kernel), or "chunked" (force the query-chunked jnp path — the oracle
+    the flash path is validated against)."""
     ft: FTConfig = FT_OFF
     key: Optional[jax.Array] = None
     dtype: Any = jnp.bfloat16
     attn_shard: str = "heads"
+    attn_impl: str = "auto"
 
     def subkey(self, name: str) -> Optional[jax.Array]:
-        if self.key is None:
-            return None
-        return jax.random.fold_in(self.key, zlib.crc32(name.encode()))
+        return named_subkey(self.key, name)
 
     def dot(self, name: str, x: jax.Array, w: jax.Array) -> jax.Array:
         return ft_dot(x, w, ft=self.ft, key=self.subkey(name))
@@ -152,29 +175,27 @@ def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
                             ).reshape(b, s, h * n_rep, dh)
 
 
-def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                      causal: bool, chunk: int, ctx: Ctx,
-                      q_offset: int = 0) -> jax.Array:
-    """Query-chunked attention. q: (B,Sq,H,dh); k,v: (B,Sk,KVH,dh).
-    Never materializes (Sq, Sk) scores — per chunk only — and GQA is
-    computed as a *grouped* batched matmul over (B, KVH) with the rep·chunk
-    rows folded together: KV is never repeat-materialized (the v0 baseline
-    paid n_rep× KV bytes; §Perf)."""
+def _chunked_core(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool, chunk: int, ft: FTConfig,
+                  key: Optional[jax.Array],
+                  q_offset: int = 0) -> Tuple[jax.Array, telemetry.FTReport]:
+    """The query-chunked jnp attention core. q: (B,Sq,H,dh); k,v:
+    (B,Sk,KVH,dh) → ((B,Sq,H,dh), FTReport). Never materializes (Sq, Sk)
+    scores — per chunk only — and GQA is computed as a *grouped* batched
+    matmul over (B, KVH) with the rep·chunk rows folded together: KV is
+    never repeat-materialized (the v0 baseline paid n_rep× KV bytes;
+    §Perf). This is BOTH the oracle the flashft path is validated against
+    and the recompute body of the flash custom_vjp's backward — its GEMMs
+    ride `ft_batched_dot`, so the attention backward stays ABFT-protected
+    on every backend."""
     b, sq, h, dh = q.shape
     _, sk, kvh, _ = k.shape
     n_rep = h // kvh
-    if ctx.attn_shard == "heads":
-        # Megatron-SP: seq gathered, heads TP-sharded through the core
-        # (GSPMD pads when head count ∤ mesh — measured in §Roofline's
-        # useful ratio); o-proj reduce-scatters back to seq sharding.
-        from repro.distributed.sharding import shard as _shard
-        q = _shard(q, "batch", None, "heads", None)
-        k = _shard(k, "batch", None, "kv_heads", None)
-        v = _shard(v, "batch", None, "kv_heads", None)
     scale = dh ** -0.5
     kT = jnp.swapaxes(k, 1, 2).swapaxes(2, 3)           # (B, KVH, dh, Sk)
     vT = jnp.swapaxes(v, 1, 2)                          # (B, KVH, Sk, dh)
     kpos = jnp.arange(sk)
+    subkey = functools.partial(named_subkey, key)
 
     def chunk_fn(qc: jax.Array, qpos: jax.Array):
         # qc: (B, C, H, dh) → grouped scores (B, KVH, rep·C, Sk). FT records
@@ -186,13 +207,14 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             # (B, C, KVH, rep, dh) → (B, KVH, rep·C, dh)
             qg = qc.reshape(b, c, kvh, n_rep, dh).transpose(0, 2, 3, 1, 4)
             qg = qg.reshape(b, kvh, n_rep * c, dh)
-            scores = ctx.bdot("attn_qk", qg, kT).astype(jnp.float32) * scale
+            scores = ft_batched_dot(qg, kT, ft=ft, key=subkey("attn_qk")
+                                    ).astype(jnp.float32) * scale
             if causal:
                 mask = qpos[:, None] >= kpos[None, :]   # (C, Sk)
                 maskg = jnp.tile(mask, (n_rep, 1))      # (rep·C, Sk)
                 scores = jnp.where(maskg[None, None], scores, -1e30)
             p = jax.nn.softmax(scores, axis=-1).astype(qc.dtype)
-            out = ctx.bdot("attn_pv", p, vT)            # (B, KVH, rep·C, dh)
+            out = ft_batched_dot(p, vT, ft=ft, key=subkey("attn_pv"))
             out = out.reshape(b, kvh, n_rep, c, dh).transpose(0, 3, 1, 2, 4)
             return out.reshape(b, c, h, dh)             # (B, C, H, dh)
         return telemetry.scoped(inner)
@@ -203,9 +225,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         chunk = sq  # ragged smoke shapes — single chunk
     n_chunks = sq // chunk
     if n_chunks == 1:
-        out, rep = chunk_fn(q, q_offset + jnp.arange(sq))
-        telemetry.record_report(rep)
-        return out
+        return chunk_fn(q, q_offset + jnp.arange(sq))
 
     qs = q.reshape(b, n_chunks, chunk, h, dh).swapaxes(0, 1)
     pos = (q_offset + jnp.arange(sq)).reshape(n_chunks, chunk)
@@ -216,8 +236,137 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         return rep.merge(rep_c), out
 
     rep, outs = loops.scan(body, telemetry.FTReport.empty(), (qs, pos))
+    return outs.swapaxes(0, 1).reshape(b, sq, h, dh), rep
+
+
+# ---------------------------------------------------------------------------
+# flashft-routed training attention (PR 4)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _flash_attn_cvjp(ft: FTConfig, causal, chunk, q_offset, q3, k3, v3, key):
+    """Flash-kernel attention over head-major 3-D operands: q3 (B·H, Sq,
+    dh); k3, v3 (B·KVH, Sk, dh). Forward = ONE `kernels.flashft` launch
+    (both in-kernel GEMMs ABFT-protected per kv-step, GQA via the K/V index
+    maps, no score transient); backward = recompute through the chunked
+    oracle, whose GEMMs ride the protected batched kernel. Returns
+    (out3, det, maxres)."""
+    from repro.kernels import ops as kops
+    n_rep = q3.shape[0] // k3.shape[0]
+    out, rep = kops.flash_ft(q3, k3, v3, ft=ft, causal=causal, n_rep=n_rep)
+    det = jnp.sum(rep[..., 0]).astype(jnp.int32)
+    maxres = jnp.max(rep[..., 5])
+    return out, det, maxres
+
+
+def _flash_attn_fwd(ft, causal, chunk, q_offset, q3, k3, v3, key):
+    out = _flash_attn_cvjp(ft, causal, chunk, q_offset, q3, k3, v3, key)
+    return out, (q3, k3, v3, key)
+
+
+def _flash_attn_bwd(ft, causal, chunk, q_offset, res, cts):
+    g3, _, _ = cts                     # ignore summary cotangents
+    q3, k3, v3, key = res
+    bh, sq, dh = q3.shape
+    bkvh, sk, _ = k3.shape
+    n_rep = bh // bkvh
+    # Fold the GQA repetition into the head axis of a (B'=B·KVH, H'=n_rep,
+    # KVH'=1) problem — row (b·KVH + kv)·n_rep + r of q3 is exactly head r
+    # of batch b·KVH + kv, so the chunked oracle reproduces the kernel's
+    # head→kv-head mapping and its vjp transposes it.
+    q4 = q3.reshape(bkvh, n_rep, sq, dh).transpose(0, 2, 1, 3)
+    k4 = k3[:, :, None, :]
+    v4 = v3[:, :, None, :]
+
+    def ref(q4, k4, v4):
+        return _chunked_core(q4, k4, v4, causal=causal, chunk=chunk, ft=ft,
+                             key=key, q_offset=q_offset)[0]
+
+    _, vjp = jax.vjp(ref, q4, k4, v4)
+    g4 = g3.reshape(bkvh, n_rep, sq, dh).transpose(0, 2, 1, 3)
+    dq4, dk4, dv4 = vjp(g4.astype(q3.dtype))
+    dq3 = dq4.transpose(0, 2, 1, 3).reshape(bh, sq, dh)
+    return dq3, dk4[:, :, 0, :], dv4[:, :, 0, :], _float0(key)
+
+
+_flash_attn_cvjp.defvjp(_flash_attn_fwd, _flash_attn_bwd)
+
+
+def _flash_attention(q, k, v, *, causal, chunk, ft, key, q_offset):
+    """4-D front: (B,Sq,H,dh) × (B,Sk,KVH,dh) → (B,Sq,H,dh) through the
+    flashft kernel, recording the FT summary at the caller's trace level
+    (outside the custom_vjp boundary, like ft_dot)."""
+    if ft.inject_rate > 0.0:
+        # The kernel has no stochastic-injection hook (deterministic SEUs
+        # only); keeping the key would inject into the BACKWARD recompute
+        # but not the forward — an inconsistent fault model. Campaigns
+        # route to the chunked oracle under "auto"; a forced flash drops
+        # the key so both directions run the same (clean) model.
+        key = None
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    q3 = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    k3 = k.transpose(0, 2, 1, 3).reshape(b * kvh, sk, dh)
+    v3 = v.transpose(0, 2, 1, 3).reshape(b * kvh, sk, dh)
+    out3, det, maxres = _flash_attn_cvjp(ft, causal, chunk, q_offset,
+                                         q3, k3, v3, key)
+    scope = telemetry.current_scope()
+    if scope is not None:
+        scope.record_summary(det, maxres, ft.corrects)
+    return out3.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)
+
+
+def _use_flash(ctx: Ctx, ft: FTConfig, causal: bool, sq: int, sk: int,
+               q_offset: int) -> bool:
+    """Resolve the attention core for this call site (see `Ctx.attn_impl`).
+    The flash kernel's causal mask is bottom-right aligned on the true
+    lengths, so causal dispatch needs q_offset ≡ Sk − Sq (the self-attention
+    q_offset=0, Sq=Sk case and the decode convention both satisfy it)."""
+    if ctx.attn_impl == "chunked":
+        return False
+    geometry_ok = not causal or (sk >= sq and sk - sq == q_offset)
+    if ctx.attn_impl == "flash":
+        if not geometry_ok:
+            raise ValueError(
+                f"attn_impl='flash' needs bottom-right-aligned causal "
+                f"geometry (q_offset == Sk - Sq), got Sq={sq}, Sk={sk}, "
+                f"q_offset={q_offset}")
+        return True
+    # auto: the kernel carries the FT policy in-kernel, so it serves the
+    # pallas backend; stochastic (key-driven) SEU campaigns stay on the
+    # jnp oracle, whose injector hooks the accumulator directly.
+    return (ft.enabled and ft.backend == "pallas" and geometry_ok
+            and not (ft.inject_rate > 0.0 and ctx.key is not None))
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk: int, ctx: Ctx,
+                      q_offset: int = 0) -> jax.Array:
+    """Training/prefill attention core. q: (B,Sq,H,dh); k,v: (B,Sk,KVH,dh).
+
+    On the pallas FT backend (or ``ctx.attn_impl="flash"``) this routes to
+    the `kernels.flashft` ragged-causal kernel: one Pallas launch, both
+    in-kernel GEMMs ABFT-protected, GQA via K/V index maps, and no
+    O(chunk·Sk) score transient in the forward; the backward recomputes
+    through the chunked oracle so its GEMMs ride the protected batched
+    kernel. Otherwise (and under ``ctx.attn_impl="chunked"``) the
+    query-chunked jnp scan runs both directions — kept as the oracle."""
+    if ctx.attn_shard == "heads":
+        # Megatron-SP: seq gathered, heads TP-sharded through the core
+        # (GSPMD pads when head count ∤ mesh — measured in §Roofline's
+        # useful ratio); o-proj reduce-scatters back to seq sharding.
+        from repro.distributed.sharding import shard as _shard
+        q = _shard(q, "batch", None, "heads", None)
+        k = _shard(k, "batch", None, "kv_heads", None)
+        v = _shard(v, "batch", None, "kv_heads", None)
+    ft = ctx.ft if ctx.ft.protect_attention else FT_OFF
+    if _use_flash(ctx, ft, causal, q.shape[1], k.shape[1], q_offset):
+        return _flash_attention(q, k, v, causal=causal, chunk=chunk, ft=ft,
+                                key=ctx.key, q_offset=q_offset)
+    out, rep = _chunked_core(q, k, v, causal=causal, chunk=chunk, ft=ft,
+                             key=ctx.key, q_offset=q_offset)
     telemetry.record_report(rep)
-    return outs.swapaxes(0, 1).reshape(b, sq, h, dh)
+    return out
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,

@@ -8,6 +8,8 @@ LoRA adapters on top of the shared weights — an orthogonal detail).
 Structure: n_layers mamba blocks in `n_groups = n_layers // attn_every`
 groups; after each group the shared transformer block (attention + MLP)
 runs. Decode keeps 54 SSM states + one KV cache per shared-block application.
+The shared block's training attention rides `blocks.chunked_attention` and
+therefore the flashft kernel on the pallas FT backend (PR 4).
 """
 from __future__ import annotations
 

@@ -6,6 +6,13 @@ residual FFN per layer). Also the backbone for phi-3-vision.
 
 Layers are scanned (stacked params) with optional per-layer remat — keeps
 the HLO size O(1) in depth, which the 512-device dry-run depends on.
+
+Training/prefill attention routes through `blocks.chunked_attention`, which
+since PR 4 dispatches to the `kernels.flashft` ragged-causal kernel on the
+pallas FT backend (one protected Pallas launch, chunked-oracle recompute in
+the backward) — so a train-step jaxpr on that backend carries no large
+dot_general outside registry-emitted kernels (tests/test_backward_ft.py's
+protection audit).
 """
 from __future__ import annotations
 

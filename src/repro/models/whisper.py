@@ -6,6 +6,12 @@ Faithful structure: bidirectional encoder over audio frames (sinusoidal
 positions), causal decoder with learned positions, per-layer cross-attention
 into the encoder output, GELU MLPs. Norm is RMSNorm (simplification vs.
 LayerNorm — noted in DESIGN.md).
+
+Both the causal decoder self-attention and the non-causal cross-attention
+(decoder queries over 1500 audio-frame KVs — the cross-length case) route
+through `blocks.chunked_attention`, i.e. since PR 4 the `kernels.flashft`
+kernel on the pallas FT backend; the chunked-jnp scan stays available as
+the oracle behind `Ctx.attn_impl="chunked"`.
 """
 from __future__ import annotations
 

@@ -30,7 +30,8 @@ def make_serve_fns(cfg: ModelConfig, run: RunConfig
                    ) -> Tuple[Callable, Callable]:
     mod = model_zoo.module_for(cfg)
     dtype = jnp.bfloat16 if run.dtype == "bfloat16" else jnp.float32
-    ctx = Ctx(ft=run.ft, key=None, dtype=dtype, attn_shard=run.attn_shard)
+    ctx = Ctx(ft=run.ft, key=None, dtype=dtype, attn_shard=run.attn_shard,
+              attn_impl=run.attn_impl)
 
     def prefill_fn(params, tokens, cache, extra=None):
         kw = {}

@@ -50,7 +50,7 @@ def make_train_step(cfg: ModelConfig, run: RunConfig,
 
     def train_step(params, opt_state, batch, step, inject_key=None):
         ctx = Ctx(ft=run.ft, key=inject_key, dtype=dtype,
-                  attn_shard=run.attn_shard)
+                  attn_shard=run.attn_shard, attn_impl=run.attn_impl)
 
         def loss_f(p, b):
             loss, metrics = mod.loss_fn(p, b, cfg, ctx, remat=remat,

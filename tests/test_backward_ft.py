@@ -1,0 +1,537 @@
+"""Backward-path FT conformance suite (PR 4).
+
+The paper's protection story is only end-to-end if the *backward* GEMMs —
+lower arithmetic intensity, where unfused checksums cost the most (Kosaian &
+Rashmi) — are covered like the forward ones. Four pillars:
+
+  1. **Injection matrix** — land a deterministic SEU inside each backward
+     GEMM (dense dx/dw, grouped dbuf, grouped tgmm-dw, fused-epilogue
+     dx/dw + the saved act'(preact) residual path) at every FT level on
+     both backends, and assert the corrected gradients match the clean run
+     **bit-for-bit**. Integer-valued operands make the checksum algebra
+     exact, so correction subtracts exactly the injected magnitude — any
+     residue is a real conformance bug, not float noise.
+  2. **Gradient checks** — `check_grads`-style first-order directional
+     derivatives plus oracle comparisons for `ft_dot_fused` across every
+     registered epilogue chain and for `ft_grouped_matmul` including the
+     ragged last group, pallas vs xla vs the jnp oracle.
+  3. **No-recompute** — `ft_dot_fused`'s backward consumes the saved
+     act_grad residual: the grad jaxpr carries exactly 3 full GEMMs
+     (forward, dx, dw), not 4 (asserted on the jaxpr, both backends).
+  4. **Protection audit** — the jaxpr of one optimizer step (dense and
+     MoE) on the pallas backend contains ZERO dot_generals above a FLOP
+     threshold outside registry-emitted kernels (`tools.audit`) — the
+     regression gate against reintroducing jnp GEMM fallbacks.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import ft_dot, ft_dot_fused, ft_grouped_matmul
+from repro.core.policy import FTConfig, InjectionSpec
+from repro.kernels.grouped import layout as glayout
+
+
+def _ints(shape, seed, lo=-3, hi=4, dtype=jnp.float32):
+    """Integer-valued float arrays: checksum sums/products stay exact in
+    f32, so detection thresholds see zero rounding residual and correction
+    is bit-exact."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, size=shape), dtype)
+
+
+#: (backend, level) matrix. The jnp checksum path does not branch on the
+#: level, so one xla row keeps the suite fast; the pallas kernels implement
+#: all three granularities.
+MATRIX = [("xla", "block"), ("pallas", "block"), ("pallas", "tile"),
+          ("pallas", "inner")]
+
+
+# ---------------------------------------------------------------------------
+# 1. backward injection matrix — corrected grads match clean bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,level", MATRIX)
+@pytest.mark.parametrize("target", ["dx", "dw"])
+def test_dense_bwd_injection_roundtrip(backend, level, target):
+    x = _ints((32, 64), seed=1)
+    w = _ints((64, 48), seed=2)
+    ftc = FTConfig(level=level, backend=backend)
+    inj = (target, InjectionSpec(row=2, col=3, magnitude=384.0, k_step=0))
+
+    clean = jax.grad(lambda x, w: jnp.sum(ft_dot(x, w, ft=ftc)),
+                     argnums=(0, 1))(x, w)
+    hurt = jax.grad(lambda x, w: jnp.sum(ft_dot(x, w, ft=ftc,
+                                                bwd_inject=inj)),
+                    argnums=(0, 1))(x, w)
+    for c, h in zip(clean, hurt):
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(h))
+
+
+@pytest.mark.parametrize("backend,level", MATRIX)
+def test_dense_bwd_detect_only_leaves_error(backend, level):
+    """action="detect" must NOT silently fix the backward SEU — the
+    corrupted gradient element survives, proving the injection actually
+    landed inside the backward GEMM (the correction in the test above is
+    doing real work)."""
+    x = _ints((32, 64), seed=3)
+    w = _ints((64, 48), seed=4)
+    ftc = FTConfig(level=level, backend=backend, action="detect")
+    inj = ("dx", InjectionSpec(row=2, col=3, magnitude=384.0, k_step=0))
+    clean = jax.grad(lambda x: jnp.sum(ft_dot(x, w, ft=ftc)))(x)
+    hurt = jax.grad(lambda x: jnp.sum(ft_dot(x, w, ft=ftc,
+                                             bwd_inject=inj)))(x)
+    err = np.asarray(hurt) - np.asarray(clean)
+    assert abs(err[2, 3] - 384.0) < 1e-3
+    err[2, 3] = 0.0
+    np.testing.assert_allclose(err, 0.0, atol=1e-5)
+
+
+def _skewed_gids(t, g, seed):
+    rng = np.random.default_rng(seed)
+    probs = 1.0 / np.arange(1, g + 1)
+    if g > 2:
+        probs[g // 2] = 0.0              # empty group in the middle
+    probs /= probs.sum()
+    return jnp.asarray(np.sort(rng.choice(g, size=t, p=probs)), jnp.int32)
+
+
+@pytest.mark.parametrize("backend,level", MATRIX)
+@pytest.mark.parametrize("target", ["dbuf", "dw"])
+def test_grouped_bwd_injection_roundtrip(backend, level, target):
+    """The tgmm path: an SEU in the grouped backward dw (the
+    output-stationary kernel on pallas, the segment-checksum einsum on
+    xla) — and in dbuf (the grouped kernel on wᵀ) — is corrected to the
+    clean gradients bit-for-bit, including with an empty group and a
+    ragged last group in the layout."""
+    t, g, k, n = 61, 4, 96, 40
+    gids = _skewed_gids(t, g, seed=5)
+    x = _ints((t, k), seed=6)
+    w = _ints((g, k, n), seed=7, lo=-2, hi=3)
+    ftc = FTConfig(level=level, backend=backend)
+    inj = (target, InjectionSpec(row=1, col=2, magnitude=512.0, k_step=0))
+
+    clean = jax.grad(lambda x, w: jnp.sum(ft_grouped_matmul(x, w, gids,
+                                                            ft=ftc)),
+                     argnums=(0, 1))(x, w)
+    hurt = jax.grad(lambda x, w: jnp.sum(ft_grouped_matmul(
+        x, w, gids, ft=ftc, bwd_inject=inj)), argnums=(0, 1))(x, w)
+    for c, h in zip(clean, hurt):
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(h))
+
+
+@pytest.mark.parametrize("backend,level", MATRIX)
+@pytest.mark.parametrize("target", ["dx", "dw"])
+def test_fused_bwd_injection_roundtrip(backend, level, target):
+    """Fused-epilogue backward: dpre = g ⊙ act'(preact) feeds both
+    backward GEMMs from the SAVED residual; relu keeps dpre integer-valued
+    so the corrected grads are bit-exact."""
+    x = _ints((32, 64), seed=8)
+    w = _ints((64, 48), seed=9)
+    bias = _ints((48,), seed=10, lo=-2, hi=3)
+    ftc = FTConfig(level=level, backend=backend)
+    inj = (target, InjectionSpec(row=2, col=3, magnitude=384.0, k_step=0))
+
+    f = lambda x, w, bi=None: jnp.sum(ft_dot_fused(
+        x, w, bias=bias, act="relu", ft=ftc, bwd_inject=bi))
+    clean = jax.grad(f, argnums=(0, 1))(x, w)
+    hurt = jax.grad(lambda x, w: f(x, w, inj), argnums=(0, 1))(x, w)
+    for c, h in zip(clean, hurt):
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(h))
+
+
+@pytest.mark.parametrize("backend,level", MATRIX)
+def test_fused_residual_path_fwd_injection(backend, level):
+    """The saved-residual path under a FORWARD SEU: the fault is corrected
+    on the accumulator before act'(preact) is computed, so both the output
+    and the gradients (which consume the saved residual) match the clean
+    run bit-for-bit."""
+    x = _ints((32, 64), seed=11)
+    w = _ints((64, 48), seed=12)
+    bias = _ints((48,), seed=13, lo=-2, hi=3)
+    ftc = FTConfig(level=level, backend=backend)
+    inj = InjectionSpec(row=4, col=5, magnitude=640.0, k_step=0)
+
+    f = lambda x, w, sp=None: jnp.sum(ft_dot_fused(
+        x, w, bias=bias, act="relu", ft=ftc, spec=sp))
+    (y0, clean) = jax.value_and_grad(f, argnums=(0, 1))(x, w)
+    (y1, hurt) = jax.value_and_grad(lambda x, w: f(x, w, inj),
+                                    argnums=(0, 1))(x, w)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    for c, h in zip(clean, hurt):
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(h))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_bwd_injection_detection_reported(backend):
+    """The backward correction is observable: with action="detect" the
+    corrupted element survives (asserted above); with action="correct" the
+    two runs agree — and flipping the magnitude flips nothing, proving
+    symmetric correction rather than coincidence."""
+    x = _ints((32, 64), seed=14)
+    w = _ints((64, 48), seed=15)
+    ftc = FTConfig(level="block", backend=backend)
+    g1 = jax.grad(lambda x: jnp.sum(ft_dot(x, w, ft=ftc, bwd_inject=(
+        "dx", InjectionSpec(row=0, col=0, magnitude=384.0)))))(x)
+    g2 = jax.grad(lambda x: jnp.sum(ft_dot(x, w, ft=ftc, bwd_inject=(
+        "dx", InjectionSpec(row=0, col=0, magnitude=-384.0)))))(x)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
+
+# ---------------------------------------------------------------------------
+# 2. gradient checks: epilogue chains × backends vs jnp oracle
+# ---------------------------------------------------------------------------
+
+def _directional_check(f, args, grads, seed, eps=1e-3, tol=2e-2):
+    """First-order check à la check_grads: (f(x+εu) − f(x−εu)) / 2ε must
+    match ⟨grad, u⟩ along a random direction u."""
+    rng = np.random.default_rng(seed)
+    us = [jnp.asarray(rng.normal(size=a.shape), a.dtype) for a in args]
+    plus = f(*[a + eps * u for a, u in zip(args, us)])
+    minus = f(*[a - eps * u for a, u in zip(args, us)])
+    num = (plus - minus) / (2 * eps)
+    lin = sum(jnp.sum(g * u) for g, u in zip(grads, us))
+    np.testing.assert_allclose(float(num), float(lin),
+                               rtol=tol, atol=tol)
+
+
+FUSED_CHAINS = [(True, None), (False, "relu"), (False, "gelu"),
+                (True, "relu"), (True, "gelu"), (True, "silu")]
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("with_bias,act", FUSED_CHAINS)
+def test_fused_grads_every_chain(backend, with_bias, act):
+    rng = np.random.default_rng(16)
+    x = jnp.asarray(rng.normal(size=(24, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 40)), jnp.float32)
+    bias = (jnp.asarray(rng.normal(size=(40,)), jnp.float32)
+            if with_bias else None)
+    ftc = FTConfig(level="block", backend=backend)
+
+    def f(x, w):
+        return jnp.sum(jnp.sin(ft_dot_fused(x, w, bias=bias, act=act,
+                                            ft=ftc)))
+
+    def f_ref(x, w):
+        from repro.kernels.templates import epilogues
+        y = x @ w
+        if bias is not None:
+            y = y + bias
+        if act is not None:
+            y = epilogues.activation(act)(y)
+        return jnp.sum(jnp.sin(y))
+
+    grads = jax.grad(f, argnums=(0, 1))(x, w)
+    ref = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    for got, want in zip(grads, ref):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+    _directional_check(f, (x, w), grads, seed=17)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_grouped_grads_ragged_last_group(backend):
+    """First-order + oracle gradient checks for ft_grouped_matmul with a
+    ragged (non-tile-multiple) last group and an empty middle group."""
+    t, g, k, n = 53, 4, 64, 32
+    gids = _skewed_gids(t, g, seed=18)
+    assert int(jnp.sum(gids == g - 1)) % 8 != 0   # genuinely ragged last
+    rng = np.random.default_rng(19)
+    x = jnp.asarray(rng.normal(size=(t, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(g, k, n)), jnp.float32)
+    ftc = FTConfig(level="block", backend=backend)
+
+    def f(x, w):
+        return jnp.sum(jnp.sin(ft_grouped_matmul(x, w, gids, ft=ftc)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(jnp.einsum("tk,tkn->tn", x, w[gids])))
+
+    grads = jax.grad(f, argnums=(0, 1))(x, w)
+    ref = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    for got, want in zip(grads, ref):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+    _directional_check(f, (x, w), grads, seed=20)
+    # the empty group's dw is exactly zero, not garbage
+    empty = g // 2
+    assert int(jnp.sum(gids == empty)) == 0
+    assert not np.asarray(grads[1][empty]).any()
+
+
+# ---------------------------------------------------------------------------
+# 3. the fused backward no longer recomputes the pre-activation GEMM
+# ---------------------------------------------------------------------------
+
+def test_fused_bwd_no_preact_recompute_xla():
+    from repro.tools import audit
+    m, k, n = 32, 64, 48
+    x = _ints((m, k), seed=21)
+    w = _ints((k, n), seed=22)
+    bias = _ints((n,), seed=23)
+    ftc = FTConfig(level="block", backend="xla")
+    f = lambda x, w: jnp.sum(ft_dot_fused(x, w, bias=bias, act="gelu",
+                                          ft=ftc))
+    acc = audit.flop_accounting(jax.grad(f, argnums=(0, 1)), x, w)
+    full = 2.0 * m * n * k
+    n_full = sum(1 for d in acc["records"] if d.flops == full)
+    # forward + dx + dw — the 4th (pre-activation recompute) is gone.
+    assert n_full == 3, [(d.flops, d.lhs_shape) for d in acc["records"]]
+
+
+def test_fused_bwd_no_preact_recompute_pallas():
+    from repro.tools import audit
+    x = _ints((32, 64), seed=24)
+    w = _ints((64, 48), seed=25)
+    bias = _ints((48,), seed=26)
+    ftc = FTConfig(level="block", backend="pallas")
+
+    def make_vg():
+        # A FRESH closure per trace: jax's tracing cache is keyed on the
+        # callable, so reusing one would return the pre-toggle jaxpr.
+        return jax.value_and_grad(
+            lambda x, w: jnp.sum(ft_dot_fused(x, w, bias=bias, act="gelu",
+                                              ft=ftc)), argnums=(0, 1))
+
+    # ONE multi-output forward kernel (emitting act_grad) + dx + dw.
+    # (count_primitives, not str().count: the printer let-binds repeated
+    # sub-jaxprs and undercounts launches.)
+    assert audit.count_primitives(make_vg(), x, w) == 3
+    # …and the legacy flag restores the 4-launch remat-style backward.
+    from repro.core import ft_gemm
+    ft_gemm.FUSED_BWD_SAVE_RESIDUAL = False
+    try:
+        n_legacy = audit.count_primitives(make_vg(), x, w)
+    finally:
+        ft_gemm.FUSED_BWD_SAVE_RESIDUAL = True
+    assert n_legacy == 4
+
+
+def test_tgmm_kernel_single_launch():
+    """The grouped backward dw is ONE pallas launch on the pallas backend
+    (no segment-summed einsum fallback left in the jaxpr)."""
+    t, g, k, n = 61, 4, 96, 40
+    gids = _skewed_gids(t, g, seed=27)
+    x = _ints((t, k), seed=28)
+    w = _ints((g, k, n), seed=29, lo=-2, hi=3)
+    ftc = FTConfig(level="block", backend="pallas")
+    f = lambda w: jnp.sum(ft_grouped_matmul(x, w, gids, ft=ftc))
+    from repro.tools import audit
+    # fwd grouped + bwd dbuf grouped + bwd tgmm = 3 launches
+    assert audit.count_primitives(jax.value_and_grad(f), w) == 3
+    viol = audit.unprotected_dots(jax.grad(f), w, min_flops=2.0 * t * k * n)
+    assert viol == []
+
+
+# ---------------------------------------------------------------------------
+# 4. telemetry summary cotangents: loud error, not silent drop
+# ---------------------------------------------------------------------------
+
+def test_grouped_summary_cotangent_raises():
+    """Regression (satellite): _ft_grouped_bwd used to silently drop the
+    (det, maxres) summary cotangents. They are now symbolic-zero-checked:
+    differentiating through maxres raises a clear error, while ordinary
+    y-gradients (and telemetry threading scan/remat carries — covered by
+    the protection-audit tests' value_and_grad) still work."""
+    from repro.core.ft_gemm import _ft_grouped_cvjp
+    t, g = 24, 2
+    gids = jnp.asarray([0] * 14 + [1] * 10, jnp.int32)
+    x = _ints((t, 32), seed=30)
+    w = _ints((g, 32, 16), seed=31)
+    lay = glayout.make_layout(gids, g, 8)
+    buf = glayout.scatter_rows(x, lay)
+    ftc = FTConfig(level="block")
+
+    def through_maxres(w):
+        _y, _det, maxres = _ft_grouped_cvjp(ftc, None, None, buf, w,
+                                            lay.gid, lay.row_end, None)
+        return maxres
+
+    with pytest.raises(ValueError, match="telemetry"):
+        jax.grad(through_maxres)(w)
+
+    def through_y(w):
+        y, _det, _maxres = _ft_grouped_cvjp(ftc, None, None, buf, w,
+                                            lay.gid, lay.row_end, None)
+        return jnp.sum(y)
+
+    assert jax.grad(through_y)(w).shape == w.shape
+
+
+def test_moe_layer_grads_flow_with_telemetry():
+    """The stop_gradient at the telemetry boundary keeps full train-path
+    differentiation working: an MoE layer (grouped matmuls + report
+    threading) differentiates cleanly on both backends."""
+    from repro.configs.base import MoEConfig
+    from repro.models import moe as moe_lib
+    from repro.models.blocks import Ctx
+    mc = MoEConfig(n_experts=4, top_k=2, expert_d_ff=32)
+    d = 16
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), d, mc, 2, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d), jnp.float32)
+    for backend in ("xla", "pallas"):
+        ctx = Ctx(ft=FTConfig(level="block", backend=backend),
+                  dtype=jnp.float32)
+
+        def loss(p):
+            y, aux = moe_lib.apply_moe(p, x, mc, ctx)
+            return jnp.sum(jnp.sin(y)) + 0.01 * aux
+
+        grads = jax.grad(loss)(p)
+        assert all(bool(jnp.all(jnp.isfinite(g)))
+                   for g in jax.tree.leaves(grads))
+
+
+# ---------------------------------------------------------------------------
+# 5. flash-routed attention: oracle equivalence + protected backward
+# ---------------------------------------------------------------------------
+
+def _attn_args(seed, b=2, sq=32, h=4, kvh=2, dh=16, sk=None):
+    rng = np.random.default_rng(seed)
+    sk = sq if sk is None else sk
+    q = jnp.asarray(rng.normal(size=(b, sq, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sk, kvh, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sk, kvh, dh)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_attention_flash_matches_chunked_oracle(causal):
+    """chunked_attention on the pallas backend routes through the flashft
+    kernel; the chunked jnp path (attn_impl="chunked") is the oracle —
+    forward and gradients must agree (GQA, both masks)."""
+    from repro.models.blocks import Ctx, chunked_attention
+    q, k, v = _attn_args(seed=32)
+    ftc = FTConfig(level="block", backend="pallas")
+    flash = Ctx(ft=ftc, dtype=jnp.float32, attn_shard="none")
+    oracle = Ctx(ft=ftc, dtype=jnp.float32, attn_shard="none",
+                 attn_impl="chunked")
+
+    def run(ctx):
+        f = lambda q, k, v: jnp.sum(jnp.sin(chunked_attention(
+            q, k, v, causal=causal, chunk=16, ctx=ctx)))
+        out = chunked_attention(q, k, v, causal=causal, chunk=16, ctx=ctx)
+        return out, jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+
+    of, gf = run(flash)
+    oc, gc = run(oracle)
+    np.testing.assert_allclose(np.asarray(of), np.asarray(oc),
+                               rtol=1e-5, atol=1e-5)
+    for a, b_ in zip(gf, gc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_attention_flash_cross_length_non_causal():
+    """Whisper's cross-attention shape: Sq ≠ Skv, non-causal."""
+    from repro.models.blocks import Ctx, chunked_attention
+    q, k, v = _attn_args(seed=33, sq=24, sk=45)
+    ftc = FTConfig(level="block", backend="pallas")
+    of = chunked_attention(q, k, v, causal=False, chunk=16,
+                          ctx=Ctx(ft=ftc, dtype=jnp.float32,
+                                  attn_shard="none"))
+    oc = chunked_attention(q, k, v, causal=False, chunk=16,
+                          ctx=Ctx(ft=ftc, dtype=jnp.float32,
+                                  attn_shard="none", attn_impl="chunked"))
+    np.testing.assert_allclose(np.asarray(of), np.asarray(oc),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attention_flash_single_kernel_no_score_transient():
+    """The forward is ONE pallas launch with no dot_general outside it —
+    the O(chunk·S) jnp score transient is gone from the fwd path."""
+    from repro.models.blocks import Ctx, chunked_attention
+    q, k, v = _attn_args(seed=34)
+    ctx = Ctx(ft=FTConfig(level="block", backend="pallas"),
+              dtype=jnp.float32, attn_shard="none")
+    s = str(jax.make_jaxpr(lambda q, k, v: chunked_attention(
+        q, k, v, causal=True, chunk=16, ctx=ctx))(q, k, v))
+    assert s.count("pallas_call") == 1
+    assert "dot_general" not in s.split("pallas_call")[0]
+
+
+# ---------------------------------------------------------------------------
+# 6. protection audit — zero unprotected large dot_generals per train step
+# ---------------------------------------------------------------------------
+
+#: Anything ≥ this is a "large" GEMM that must run in a registry kernel.
+#: The only open dots allowed below it are the MoE router einsums
+#: (2·T·d·E ≈ 33 kFLOP at this scale — ~16× under the threshold; the
+#: smallest protected projection is ~524 kFLOP — ~5× over it).
+AUDIT_MIN_FLOPS = 1e5
+
+
+def _optimizer_step(cfg):
+    from repro.configs.base import RunConfig
+    from repro.models import model_zoo
+    from repro.optim import adamw
+    from repro.train import train_loop
+    run = RunConfig(model=cfg, ft=FTConfig(level="block", backend="pallas"),
+                    dtype="float32", attn_chunk=32)
+    tc = train_loop.TrainConfig(total_steps=10, warmup_steps=2)
+    opt_cfg = adamw.AdamWConfig()
+    step = train_loop.make_train_step(cfg, run, opt_cfg, tc)
+    params = model_zoo.module_for(cfg).init(cfg, jax.random.PRNGKey(0),
+                                            jnp.float32)
+    opt_state = train_loop.init_opt_state(params, opt_cfg, tc)
+    batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
+             "labels": jnp.zeros((2, 32), jnp.int32)}
+    return (lambda p, o, b: step(p, o, b, jnp.zeros((), jnp.int32)),
+            params, opt_state, batch)
+
+
+def _audit_cfgs():
+    from repro.configs.base import ModelConfig, MoEConfig
+    dense = ModelConfig(arch_id="audit-dense", family="dense", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                        d_ff=128, vocab_size=512)
+    moe = ModelConfig(arch_id="audit-moe", family="moe", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab_size=512,
+                      moe=MoEConfig(n_experts=4, top_k=2, expert_d_ff=64))
+    return {"dense": dense, "moe": moe}
+
+
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_protection_audit_train_step(family):
+    """The acceptance criterion: a full optimizer step's jaxpr (forward,
+    backward, AdamW update) on the pallas backend has ZERO dot_generals at
+    or above AUDIT_MIN_FLOPS outside pallas kernels — every large GEMM,
+    including all backward GEMMs, runs under in-kernel ABFT."""
+    from repro.tools import audit
+    cfg = _audit_cfgs()[family]
+    fn, params, opt_state, batch = _optimizer_step(cfg)
+    viol = audit.unprotected_dots(fn, params, opt_state, batch,
+                                  min_flops=AUDIT_MIN_FLOPS)
+    assert viol == [], [(v.flops, v.lhs_shape, v.rhs_shape) for v in viol]
+    acc = audit.flop_accounting(fn, params, opt_state, batch)
+    assert acc["kernel_fraction"] > 0.99
+    assert acc["n_kernel_dots"] > 0
+
+
+def test_protection_audit_catches_regressions():
+    """The audit is not vacuous: the same step with the xla (jnp checksum)
+    backend HAS large open dot_generals — so a future fallback
+    reintroduction would fail the gate above."""
+    from repro.configs.base import RunConfig
+    from repro.models import model_zoo
+    from repro.optim import adamw
+    from repro.tools import audit
+    from repro.train import train_loop
+    cfg = _audit_cfgs()["dense"]
+    run = RunConfig(model=cfg, ft=FTConfig(level="block", backend="xla"),
+                    dtype="float32", attn_chunk=32)
+    tc = train_loop.TrainConfig(total_steps=10, warmup_steps=2)
+    opt_cfg = adamw.AdamWConfig()
+    step = train_loop.make_train_step(cfg, run, opt_cfg, tc)
+    params = model_zoo.module_for(cfg).init(cfg, jax.random.PRNGKey(0),
+                                            jnp.float32)
+    opt_state = train_loop.init_opt_state(params, opt_cfg, tc)
+    batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
+             "labels": jnp.zeros((2, 32), jnp.int32)}
+    viol = audit.unprotected_dots(
+        lambda p, o, b: step(p, o, b, jnp.zeros((), jnp.int32)),
+        params, opt_state, batch, min_flops=AUDIT_MIN_FLOPS)
+    assert len(viol) > 0
