@@ -7,6 +7,14 @@ tests/test_flashft.py), so attention HBM bytes drop from O(S²) to O(S):
 
     unfused ≈ B·H·S²·12 / 2 (causal)      fused ≈ B·H·S·dh·3·2 + O bytes
 
+Since PR 5 the BACKWARD is flash-shaped too: the forward saves the per-row
+(m, l) softmax statistics and the dedicated dQ/dK/dV kernels consume them —
+vs the PR-4 oracle recompute, which re-ran the whole forward through the
+chunked-jnp path (one extra softmax pass + an O(chunk·S) score transient
+per chunk). The backward section gates: 3 total Pallas launches for
+fwd+grad, zero open dot_generals, an injected backward-GEMM SEU corrected
+in interpret mode, and reports the modeled transient-memory drop.
+
 Derived column reports the per-layer reduction at the assigned shapes and
 the projected new memory-roofline term for the hillclimbed cells (§Perf).
 Correctness of the kernel itself (incl. in-kernel ABFT + SEU correction) is
@@ -18,8 +26,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import ONLINE_BLOCK, InjectionSpec
+from repro.core.policy import FTConfig, ONLINE_BLOCK, InjectionSpec
 from repro.kernels import ops, ref
+from repro.tools import audit
 from .common import emit
 
 
@@ -27,6 +36,17 @@ def traffic(b, h, s, dh, causal=True):
     unfused = b * h * s * s * 12 * (0.5 if causal else 1.0)
     fused = b * h * s * dh * 2 * 4        # q,k,v in + o out, bf16
     return unfused, fused
+
+
+def bwd_transient(b, h, s, dh, chunk=512):
+    """Peak transient of the attention backward: the PR-4 oracle recompute
+    materialized an O(chunk·S) score block per chunk (f32, ×3 for
+    scores/p/ds live at once under vjp); the dedicated kernels keep the
+    (bq, bkv) block in VMEM — the HBM-side residual is just the three O(S)
+    statistic columns (m, l, di)."""
+    oracle = b * h * chunk * s * 4 * 3
+    kernel = b * h * s * 4 * 3
+    return oracle, kernel
 
 
 def run() -> None:
@@ -37,12 +57,58 @@ def run() -> None:
     v = jax.random.normal(ks[2], (2, 256, 64))
     spec = InjectionSpec(row=5, col=7, magnitude=500.0, k_step=0)
     out, rep = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK, spec=spec,
-                            inj_bh=1, inj_q_block=1)
+                            inj_bh=1, inj_q_block=1, bq=128, bkv=128)
     want = ref.flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
     emit("flash_ft/correctness", float("nan"),
          f"seu_corrected=1 detections={int(rep[..., 0].sum())}")
+
+    # ---- dedicated flash backward (PR 5) --------------------------------
+    g = jax.random.normal(jax.random.PRNGKey(3), q.shape)
+    out_s, m, l, _ = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK, causal=True,
+                                  save_stats=True, bq=128, bkv=128)
+    clean = ops.flash_ft_bwd(q, k, v, out_s, m, l, g, ft=ONLINE_BLOCK,
+                             causal=True, bq=128, bkv=128)
+    inj = ops.flash_ft_bwd(q, k, v, out_s, m, l, g, ft=ONLINE_BLOCK,
+                           causal=True, bq=128, bkv=128,
+                           inject=InjectionSpec(row=3, col=5,
+                                                magnitude=400.0, k_step=1),
+                           inj_target="dv", inj_bh=1, inj_blk=1)
+    dev = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(inj[:3], clean[:3]))
+    assert dev < 2e-3, dev
+    det = int(inj[3][..., 0].sum() + inj[4][..., 0].sum())
+    assert det >= 1, det
+
+    # structural gate: fwd+grad = 3 dedicated launches, no open GEMMs
+    from repro.models.blocks import Ctx, chunked_attention
+    rngq = jax.random.PRNGKey(4)
+    q4 = jax.random.normal(rngq, (2, 32, 2, 16))
+    ctx = Ctx(ft=FTConfig(level="block", backend="pallas"),
+              dtype=jnp.float32, attn_shard="none")
+
+    def gradfn(q4):
+        f = lambda x: jnp.sum(chunked_attention(x, q4, q4, causal=True,
+                                                chunk=16, ctx=ctx))
+        return jax.grad(f)(q4)
+
+    launches = audit.count_primitives(gradfn, q4)
+    opens = audit.unprotected_dots(gradfn, q4, min_flops=1.0)
+    assert launches == 3 and opens == [], (launches, opens)
+    emit("flash_ft/backward", float("nan"),
+         f"bwd_seu_corrected=1 detections={det} launches_fwd_bwd=3 "
+         f"open_dots=0")
+
+    # backward transient-memory model at the assigned shapes
+    for name, b, h, s, dh in [
+        ("qwen2_train_4k", 256, 28, 4096, 128),
+        ("arctic_train_4k", 256, 56, 4096, 128),
+    ]:
+        orc, kern = bwd_transient(b, h, s, dh)
+        emit(f"flash_ft/bwd_transient_{name}", float("nan"),
+             f"oracle={orc/2**30:.1f}GiB kernel={kern/2**30:.3f}GiB "
+             f"reduction_x={orc/max(kern,1):.0f}")
 
     # HBM traffic model at the assigned shapes (per layer, global)
     for name, b, h, s, dh in [

@@ -11,6 +11,8 @@ exercised end to end on one small training run:
                      device layout (resharding restore).
 
 Run:  PYTHONPATH=src python examples/fault_tolerance_demo.py
+(set REPRO_DEMO_SMOKE=1 for the shortened CI variant — same three acts and
+the same assertions, fewer optimizer steps)
 """
 import os
 import shutil
@@ -33,6 +35,12 @@ SHAPE = ShapeConfig("demo", 128, 4, "train")
 RUN = RunConfig(model=CFG, ft=ONLINE_BLOCK, dtype="float32",
                 learning_rate=1e-3, attn_chunk=64)
 
+#: CI smoke mode: same acts/assertions, fewer steps (examples are part of
+#: the CI gate since PR 5 — they used to rot unchecked).
+SMOKE = bool(os.environ.get("REPRO_DEMO_SMOKE"))
+STEPS = 16 if SMOKE else 40
+CKPT_AT = 8 if SMOKE else 20
+
 
 def losses_of(history):
     return [round(h["loss"], 6) for h in history]
@@ -40,10 +48,10 @@ def losses_of(history):
 
 def main() -> None:
     print("A. SDC campaign vs clean run " + "-" * 40)
-    tc = train_loop.TrainConfig(total_steps=40, warmup_steps=5, log_every=10,
-                                ckpt_every=10_000)
+    tc = train_loop.TrainConfig(total_steps=STEPS, warmup_steps=5,
+                                log_every=10, ckpt_every=10_000)
     clean = train_loop.train(CFG, RUN, SHAPE, tc, log=lambda s: None)
-    tc_inj = train_loop.TrainConfig(total_steps=40, warmup_steps=5,
+    tc_inj = train_loop.TrainConfig(total_steps=STEPS, warmup_steps=5,
                                     log_every=10, ckpt_every=10_000,
                                     inject_every=1)   # SEUs EVERY step
     hostile = train_loop.train(CFG, RUN, SHAPE, tc_inj, log=print)
@@ -55,14 +63,14 @@ def main() -> None:
           f"train like a clean one\n")
     assert drift < 5e-3
 
-    print("B. fail-stop: kill at step 20, resume, reach the same state "
-          + "-" * 8)
+    print(f"B. fail-stop: kill at step {CKPT_AT}, resume, reach the same "
+          "state " + "-" * 8)
     ckpt_dir = "/tmp/repro_ft_demo_ckpt"
     shutil.rmtree(ckpt_dir, ignore_errors=True)
-    tc_b = train_loop.TrainConfig(total_steps=40, warmup_steps=5,
-                                  log_every=10, ckpt_every=20)
+    tc_b = train_loop.TrainConfig(total_steps=STEPS, warmup_steps=5,
+                                  log_every=10, ckpt_every=CKPT_AT)
     train_loop.train(CFG, RUN, SHAPE, tc_b, ckpt_dir=ckpt_dir,
-                     stop_at=20, log=lambda s: None)        # "crash" at 20
+                     stop_at=CKPT_AT, log=lambda s: None)   # "crash" here
     resumed = train_loop.train(CFG, RUN, SHAPE, tc_b, ckpt_dir=ckpt_dir,
                                resume=True, log=lambda s: None)
     straight = train_loop.train(CFG, RUN, SHAPE, tc_b, log=lambda s: None)

@@ -148,7 +148,13 @@ PARAM_RULES: Tuple[Tuple[str, Tuple], ...] = (
 
 def spec_for_path(path: str, ndim: int, n_stacked: int = 0) -> P:
     """PartitionSpec for a parameter at pytree `path` with `ndim` dims,
-    `n_stacked` leading stacked-layer dims (unsharded)."""
+    `n_stacked` leading stacked-layer dims (unsharded).
+
+    A matched rule whose rank EXCEEDS the array's raises: silently
+    replicating on a rank mismatch (the pre-PR-5 behaviour) meant a
+    sharding-rule typo de-sharded a weight with no signal — the array kept
+    training, just all-gathered everywhere. Missing leading dims are still
+    filled with None (scanned stacks, vmapped prefixes)."""
     for pat, axes in PARAM_RULES:
         if re.search(pat, path):
             if axes is None:
@@ -159,7 +165,12 @@ def spec_for_path(path: str, ndim: int, n_stacked: int = 0) -> P:
             if len(want) < ndim:           # extra leading dims → replicate
                 want = [None] * (ndim - len(want)) + want
             if len(want) != ndim:
-                return P()
+                raise ValueError(
+                    f"sharding rule {pat!r} names {len(body)} dims "
+                    f"(+{n_stacked} stacked) for param {path!r}, but the "
+                    f"array has ndim={ndim} — a rank-mismatched rule would "
+                    f"silently replicate (de-shard) this weight; fix the "
+                    f"PARAM_RULES entry or the n_stacked inference")
             return logical_to_spec(want)
     return P()
 

@@ -89,6 +89,42 @@ Worked example — protecting an MoE expert FFN end to end, BOTH directions
     # `benchmarks/backward_path.py` reports the fraction of train-step
     # GEMM FLOPs under in-kernel ABFT (and gates it ≥ 0.99 in CI).
 
+Worked example — flash attention protected in BOTH directions (PR 5; what
+`models.blocks.chunked_attention` runs on the pallas backend)::
+
+    from repro.kernels import ops
+    # forward: ONE launch; save_stats adds the per-row (m, l) softmax
+    # statistics — the saved residual of the dedicated backward.
+    out, m, l, rep = ops.flash_ft(q, k, v, ft=ft, causal=True,
+                                  n_rep=n_rep, save_stats=True)
+    # backward: TWO launches (dQ; dK/dV) — zero oracle recompute. The four
+    # backward GEMMs (dP=g·Vᵀ, dV=Pᵀ·g, dQ=dS·K, dK=dSᵀ·Q) and the S
+    # recompute all carry in-kernel checksums + branchless correction.
+    dq, dk, dv, rep_dq, rep_dkv = ops.flash_ft_bwd(
+        q, k, v, out, m, l, g, ft=ft, causal=True, n_rep=n_rep)
+
+    # Tuning the flash variants explicitly — each direction owns a cache
+    # key (existing keys unchanged):
+    #   spec = templates.FlashKernelSpec(ft_level="block", direction="dq",
+    #                                    dh=128)
+    #   autotune.best_params(Sq, Skv, 128, 4, ft_level="block", spec=spec,
+    #                        batch=B*H)    # key gains /v_flashbwd_dq/b_*
+    # (bm, bn) come back as the (stationary, streamed) seq blocks; the
+    # head dim never tiles (spec.dh, not bk).
+
+    # Worked injection campaign — stochastic SEUs INSIDE the kernels (the
+    # MPGemmFI lesson: the injector must live in the kernel it measures;
+    # a campaign whose jaxpr falls back to a jnp oracle measures nothing):
+    #   ftc = FTConfig(level="block", backend="pallas", inject_rate=1.0)
+    #   out, rep = ops.flash_ft(q, k, v, ft=ftc, key=jax.random.PRNGKey(0))
+    #   assert float(rep[..., 0].sum()) > 0          # detections happened
+    #   # ... and per-GEMM deterministic SEUs for conformance tests:
+    #   ops.flash_ft_bwd(..., inject=InjectionSpec(row=5, col=9,
+    #                    magnitude=777.0, k_step=1), inj_target="dk",
+    #                    inj_bh=1, inj_blk=1)
+    # `tools.audit.pallas_call_names` asserts the campaign's jaxpr contains
+    # the flash kernels (tests/test_flash_backward.py).
+
 The epilogue extension hook is unchanged (register an `EpilogueOp` — give
 it a ``grad`` rule and it can also ride the act_grad multi-output variant
 — see `templates/epilogues.py`); batched/grouped specs accept aux-free
@@ -103,7 +139,11 @@ Other modules:
                  causal runs on fitted blocks, no padded fallback) + GQA
                  via K/V index maps (n_rep — KV never repeat-materialized);
                  since PR 4 this is the training attention core on the
-                 pallas backend (`models.blocks.chunked_attention`)
+                 pallas backend (`models.blocks.chunked_attention`), and
+                 since PR 5 its BACKWARD is first-class too: saved (m, l)
+                 statistics, dedicated dQ/dK/dV kernels, degenerate-row
+                 zeroing, and the in-kernel stochastic SEU hook
+                 (`templates.emit.stochastic_seu`) for fault campaigns
   grouped/    -- batched & grouped subsystem (layout + dispatch, PR 3;
                  tgmm backward-dw kernel, PR 4)
   ops.py      -- dispatching front doors (padding, autotune, interpret)

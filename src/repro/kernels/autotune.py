@@ -166,7 +166,12 @@ def best_params(m: int, n: int, k: int, in_bytes: int = 4, *,
     VMEM budget (aux-operand buffers) and the roofline intensity (aux HBM
     reads + elementwise FLOPs), so the variant is part of the cache key
     (`spec.variant_key()`) and of the candidate space: two variants of one
-    shape class can legitimately tune to different tiles.
+    shape class can legitimately tune to different tiles. Flash-attention
+    variants (`templates.FlashKernelSpec`, PR 5) reinterpret the problem as
+    (m, n, k) = (stationary seq dim, streamed seq dim, lane-padded head
+    dim): the winner's (bm, bn) become the (bq, bkv)-style sequence blocks
+    and bk is advisory (the head dim never tiles — the spec's own VMEM and
+    roofline models ignore it).
 
     ``batch``/``groups`` make the selection batched-aware: a uniform batch
     count multiplies every roofline term, a ragged group count adds

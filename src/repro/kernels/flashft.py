@@ -1,9 +1,9 @@
-"""Flash attention with fused online ABFT — the beyond-paper kernel.
+"""Flash attention with fused online ABFT — the beyond-paper kernel family.
 
 The paper's core insight is that ABFT only becomes ~free when its memory
 operations are fused into a kernel that already holds the data in fast
 memory. We apply that insight to the other GEMM-dominated hot spot of every
-assigned architecture: attention.
+assigned architecture: attention — in BOTH directions.
 
 Forward flash attention (online softmax over kv blocks; scores never touch
 HBM) where BOTH in-kernel GEMMs are ABFT-protected per kv-step:
@@ -15,20 +15,49 @@ HBM) where BOTH in-kernel GEMMs are ABFT-protected per kv-step:
     SEU is corrected branchlessly before Δ is rescaled into the
     accumulator.
 
-One SEU per (q-block × kv-step) interval is detected AND corrected —
-matching the paper's SEU model at the same granularity as its threadblock
-k-loop. The HBM traffic is exactly flash attention's (Q, K, V, O — no S×S
-materialization), so the memory-roofline term for attention drops from
-O(S²)-scaled to O(S)-scaled; checksum traffic is VMEM-only.
+With ``save_stats`` the forward additionally writes the per-row softmax
+statistics (m = running row max of the scaled scores, l = running row sum
+of exp) as extra VMEM outputs — the saved residual of the dedicated
+backward (PR 5), which replaces the chunked-jnp oracle recompute:
+
+  * `_flash_dq_kernel`  — q-block-stationary: recomputes S from (m, l),
+    then dP = g·Vᵀ and dQ = Σ_kv dS·K, each GEMM checksum-verified and
+    branchlessly corrected per kv-step;
+  * `_flash_dkv_kernel` — kv-block-stationary (GQA folds the n_rep query
+    heads of a KV head into the reduction walk): S recompute + dP = g·Vᵀ,
+    dV = Σ_q Pᵀ·g and dK = Σ_q dSᵀ·Q, all verified per q-step.
+
+So the four backward GEMMs of the attention train step (dP, dV, dQ, dK)
+carry in-kernel ABFT exactly like the two forward ones; one SEU per
+(stationary block × reduction step × GEMM) is detected AND corrected, and
+the backward's HBM traffic is flash-shaped (Q, K, V, g, dQ, dK, dV + three
+O(S) statistic columns — no S×S materialization, no O(chunk·S) oracle
+transient).
+
+Fully-masked query rows (a ragged Sq edge, or a causal row whose kv span is
+empty) are *m-degenerate*: their running max never leaves −∞, so the
+pre-fix kernel flushed `exp(0)=1` garbage weights (and `acc/1e-30` when
+nothing accumulated). Degenerate rows are now zeroed at every step AND at
+flush, their saved stats are written as (m=−∞, l=0), and the backward maps
+l=0 to p≡0 — so both directions return exact zeros for such rows.
+
+Stochastic SEU campaigns (`ft.inject_rate` > 0 with an injection key) run
+IN-KERNEL through `templates.emit.stochastic_seu`: two words derived from
+the campaign key ride in via scalar prefetch and a counter-based hash draws
+one Bernoulli(rate) SEU per stationary output block per direction — so a
+forced-flash fault campaign exercises the kernels it measures instead of
+silently running clean (the MPGemmFI injector/kernel-disagreement pitfall).
 
 Ragged sequence lengths take the masked dispatch of the GEMM kernels: the
 true (Sq, Skv) ride in via scalar prefetch, kv blocks wholly past the true
-Skv are skipped, and padded KV positions are masked to -inf after the
-(linear) score verification and before softmax — so the ops wrapper fits
-the seq blocks to the ragged lengths instead of padding to full class
-tiles, and non-causal ragged Skv is exact.
+Skv are skipped, and padded positions are masked after the (linear) score
+verification and before softmax.
 
-Validated in interpret mode against ref.flash_ft_ref (tests/test_flashft.py).
+Launch construction lives in `templates.registry` (flash_fwd_call /
+flash_dq_call / flash_dkv_call) and tile selection in `autotune.best_params`
+under `templates.spec.FlashKernelSpec` variant keys (``/v_flashfwd*``,
+``/v_flashbwd_dq``, ``/v_flashbwd_dkv``). Validated in interpret mode
+against jnp oracles (tests/test_flashft.py, tests/test_flash_backward.py).
 """
 from __future__ import annotations
 
@@ -38,45 +67,62 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from .pallas_compat import CompilerParams as _CompilerParams
 
 from repro.core.policy import FTConfig, InjectionSpec
+from .templates import emit as temit
+from .templates import registry as tregistry
 
 F32EPS = float(jnp.finfo(jnp.float32).eps)
 NEG_INF = -1e30
-REPORT_WIDTH = 8
+REPORT_WIDTH = temit.REPORT_WIDTH
+
+#: Contract flag `models.blocks` checks before launching a stochastic
+#: (`ft.inject_rate`-driven) campaign down the flash path: True means the
+#: kernels honor the campaign key in-kernel (both directions). A build that
+#: cannot (e.g. a future backend without the hook) must flip this so forced
+#: campaigns raise instead of silently measuring a clean run.
+SUPPORTS_STOCHASTIC_INJECTION = True
+
+#: Deterministic backward-injection targets (`encode_bwd_injection`):
+#: which of the four backward GEMMs the SEU lands in. "dp_q"/"dp_kv" hit the
+#: dP = g·Vᵀ product inside the dq / dkv kernel respectively.
+BWD_TARGETS = {"dp_q": 0, "dq": 1, "dp_kv": 0, "dv": 2, "dk": 3}
+_DQ_KERNEL_TARGETS = ("dp_q", "dq")
+_DKV_KERNEL_TARGETS = ("dp_kv", "dv", "dk")
+
+#: Per-kernel salts for the stochastic hook — one independent stream per
+#: direction from a single campaign key.
+SALT_FWD, SALT_DQ, SALT_DKV = 0x51, 0x52, 0x53
+
+_CONTRACT_ROWS = (((0,), (0,)), ((), ()))     # Aᵀ·B without a transpose
 
 
 def _iota2(shape, dim):
     return jax.lax.broadcasted_iota(jnp.int32, shape, dim)
 
 
-def _verify_correct(mat, d_col, d_row, tau, corrects):
-    """Branchless locate+correct of one SEU in `mat` from residuals."""
-    bm, bn = mat.shape
-    dc = d_col[0, :]
-    dr = d_row[:, 0]
-    col = jnp.argmax(jnp.abs(dc)).astype(jnp.int32)
-    row = jnp.argmax(jnp.abs(dr)).astype(jnp.int32)
-    detected = jnp.maximum(jnp.max(jnp.abs(dc)), jnp.max(jnp.abs(dr))) > tau
-    mag = jnp.where(detected, jnp.sum(jnp.where(
-        jax.lax.iota(jnp.int32, bn) == col, dc, 0.0)), 0.0)
-    if corrects:
-        hit = ((_iota2((bm, bn), 0) == row) & (_iota2((bm, bn), 1) == col)
-               & detected)
-        mat = mat - jnp.where(hit, mag, 0.0)
-    return mat, detected, mag
+def _row_mask(q_start, bq, width, true_sq):
+    """(bq, width) mask of live query rows (rows past true Sq are dead)."""
+    return q_start + _iota2((bq, width), 0) < true_sq
 
 
-def _flash_ft_kernel(inj_ref, mag_ref, dims_ref,
+# ---------------------------------------------------------------------------
+# forward kernel
+# ---------------------------------------------------------------------------
+
+def _flash_ft_kernel(inj_ref, mag_ref, rng_ref, dims_ref,
                      q_ref, k_ref, v_ref,
-                     o_ref, rep_ref,
-                     acc_ref, m_ref, l_ref,
-                     *, kv_steps: int, bq: int, bkv: int, dh: int,
-                     causal: bool, scale: float, corrects: bool,
-                     rel_tau: float, protect_qk: bool):
+                     *out_and_scratch,
+                     kv_steps: int, q_blocks: int, bq: int, bkv: int,
+                     dh: int, causal: bool, scale: float, corrects: bool,
+                     rel_tau: float, protect_qk: bool, save_stats: bool,
+                     inject_rate: float, bit_shift: int):
+    refs = list(out_and_scratch)
+    o_ref = refs.pop(0)
+    m_out_ref = refs.pop(0) if save_stats else None
+    l_out_ref = refs.pop(0) if save_stats else None
+    rep_ref, acc_ref, m_ref, l_ref = refs
+
     h = pl.program_id(0)
     qi = pl.program_id(1)
     s = pl.program_id(2)
@@ -104,6 +150,15 @@ def _flash_ft_kernel(inj_ref, mag_ref, dims_ref,
     if causal:
         run = run & (kv_start <= q_start + bq - 1 + c_off)
 
+    # One stochastic SEU per (head, q-block) with probability inject_rate,
+    # landing in the PV accumulator at a uniformly drawn (kv step, row,
+    # col) — the in-kernel campaign hook (see templates.emit). The step is
+    # drawn over the block's LIVE kv span, not the grid extent, so the
+    # realized rate matches the nominal one under causal/ragged skipping.
+    n_live = _live_kv_steps(true_skv, q_start, bq, bkv, c_off, causal)
+    st_hit, st_step, st_row, st_col = temit.stochastic_seu(
+        rng_ref, SALT_FWD, h * q_blocks + qi, n_live, bq, dh, inject_rate)
+
     @pl.when(run)
     def _step():
         q = q_ref[0].astype(jnp.float32)                 # (bq, dh)
@@ -111,8 +166,6 @@ def _flash_ft_kernel(inj_ref, mag_ref, dims_ref,
         v = v_ref[0].astype(jnp.float32)
 
         scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
-        det_qk = jnp.zeros((), bool)
-        mag_qk = jnp.zeros(())
         if protect_qk:
             ck_col = jnp.dot(jnp.sum(q, 0, keepdims=True), k.T)   # (1,bkv)
             ck_row = jnp.dot(q, jnp.sum(k.T, 1, keepdims=True))   # (bq,1)
@@ -121,8 +174,12 @@ def _flash_ft_kernel(inj_ref, mag_ref, dims_ref,
             tau_qk = jnp.maximum(
                 rel_tau * F32EPS * dh
                 * jnp.max(jnp.abs(q)) * jnp.max(jnp.abs(k)), 1e-30)
-            scores, det_qk, mag_qk = _verify_correct(
-                scores, d_col, d_row, tau_qk, corrects)
+            scores, det_qk, mag_qk, row_qk, col_qk = \
+                temit._locate_correct_full(scores, d_col, d_row, tau_qk,
+                                           corrects, bq, bkv)
+            temit._record(rep_ref, det_qk, mag_qk, row_qk + q_start,
+                          col_qk + kv_start, d_col, d_row, tau_qk,
+                          (s + 1.0) * 1.0, corrects)
         scores = scores * scale
 
         # ---- emulated SEU on the scores accumulator ----------------------
@@ -132,29 +189,38 @@ def _flash_ft_kernel(inj_ref, mag_ref, dims_ref,
         hit = ((enable == 1) & (g_h == h) & (g_qi == qi) & (g_s == s))
         # injection lands in the Δ=PV accumulator below (paper §5.3 semantics)
 
-        # Ragged edge masking: padded KV positions (past the true Skv) must
-        # not receive attention — masked to -inf *after* the linear-GEMM
-        # checksum verification above (zero-padded K rows are
-        # checksum-neutral) and *before* softmax, exactly like the causal
-        # mask. This is what lets the ops wrapper fit bq/bkv to the ragged
-        # lengths instead of padding either dispatch to full class tiles.
-        # The causal∧kv-edge conjunction uses the TRUE lengths: causal with
-        # Sq ≠ Skv is bottom-right aligned via the dynamic offset above.
+        # Ragged edge masking: padded KV positions (past the true Skv) and
+        # padded/dead QUERY rows (past the true Sq) must not receive
+        # attention — masked to -inf *after* the linear-GEMM checksum
+        # verification above (zero-padded operand rows are checksum-neutral)
+        # and *before* softmax, exactly like the causal mask. Dead query
+        # rows therefore stay m-degenerate and flush as exact zeros below
+        # instead of accumulating exp(0)=1 garbage weights.
         kpos = kv_start + _iota2((bq, bkv), 1)
         scores = jnp.where(kpos < true_skv, scores, NEG_INF)
+        scores = jnp.where(_row_mask(q_start, bq, bkv, true_sq), scores,
+                           NEG_INF)
         if causal:
             qpos = q_start + _iota2((bq, bkv), 0)
             scores = jnp.where(qpos + c_off >= kpos, scores, NEG_INF)
 
         m_prev = m_ref[...]                               # (bq, 1)
         m_new = jnp.maximum(m_prev, jnp.max(scores, 1, keepdims=True))
-        p = jnp.exp(scores - m_new)                       # (bq, bkv)
-        alpha = jnp.exp(m_prev - m_new)                   # (bq, 1)
+        # m-degenerate rows (every position masked so far — dead ragged
+        # rows, empty causal spans) would see exp(−∞ − (−∞)) = 1 here;
+        # clamp the exponent and zero their weights so they accumulate
+        # nothing.
+        good = m_new > 0.5 * NEG_INF                      # (bq, 1)
+        p = jnp.exp(jnp.minimum(scores - m_new, 0.0))     # (bq, bkv)
+        p = jnp.where(good, p, 0.0)
+        alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))  # (bq, 1)
 
         delta = jnp.dot(p, v, preferred_element_type=jnp.float32)  # (bq, dh)
         inj_mask = ((_iota2((bq, dh), 0) == g_row)
                     & (_iota2((bq, dh), 1) == g_col) & hit)
         delta = delta + jnp.where(inj_mask, mag_ref[0], 0.0)
+        delta = temit.apply_seu(delta, st_row, st_col,
+                                st_hit & (st_step == s), bit_shift)
 
         # ---- fused ABFT on the PV GEMM ------------------------------------
         ck_col = jnp.dot(jnp.sum(p, 0, keepdims=True), v)          # (1, dh)
@@ -168,97 +234,422 @@ def _flash_ft_kernel(inj_ref, mag_ref, dims_ref,
         eff_kv = jnp.minimum(true_skv - kv_start, bkv).astype(jnp.float32)
         tau = jnp.maximum(rel_tau * F32EPS * eff_kv * jnp.max(jnp.abs(v)),
                           1e-30)
-        delta, det_pv, mag_pv = _verify_correct(delta, d_col, d_row, tau,
-                                                corrects)
+        delta, det_pv, mag_pv, row_pv, col_pv = temit._locate_correct_full(
+            delta, d_col, d_row, tau, corrects, bq, dh)
+        temit._record(rep_ref, det_pv, mag_pv, row_pv + q_start, col_pv,
+                      d_col, d_row, tau, eff_kv, corrects)
 
         acc_ref[...] = acc_ref[...] * alpha + delta
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, 1, keepdims=True)
         m_ref[...] = m_new
 
-        det = det_qk | det_pv
-        detf = det.astype(jnp.float32)
-        rep_ref[0, 0, 0] += detf
-        rep_ref[0, 0, 1] += detf if corrects else 0.0
-        rep_ref[0, 0, 4] = jnp.where(det_pv, mag_pv, rep_ref[0, 0, 4])
-        rep_ref[0, 0, 5] = jnp.maximum(
-            rep_ref[0, 0, 5],
-            jnp.maximum(jnp.max(jnp.abs(d_col)), jnp.max(jnp.abs(d_row))))
-        rep_ref[0, 0, 6] = tau
+    @pl.when(s == kv_steps - 1)
+    def _flush():
+        # m-degenerate rows (m still −∞: dead ragged rows, empty causal kv
+        # spans, or q-blocks whose every kv block was skipped) flush exact
+        # zeros — never `garbage_acc / 1e-30` — and their saved statistics
+        # are the degenerate markers (m=−∞, l=0) the backward kernels map
+        # to p ≡ 0.
+        m_fin = m_ref[...]
+        l_fin = l_ref[...]
+        good = (m_fin > 0.5 * NEG_INF) & (l_fin > 0.0)
+        linv = jnp.where(good, 1.0 / jnp.maximum(l_fin, 1e-30), 0.0)
+        o_ref[0] = (acc_ref[...] * linv).astype(o_ref.dtype)
+        if save_stats:
+            m_out_ref[0] = jnp.where(good, m_fin, NEG_INF
+                                     ).astype(m_out_ref.dtype)
+            l_out_ref[0] = jnp.where(good, l_fin, 0.0
+                                     ).astype(l_out_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# backward kernels — shared per-step softmax/score recompute
+# ---------------------------------------------------------------------------
+
+def _recompute_p(q, k, m, linv, *, q_start, kv_start, bq, bkv, true_sq,
+                 true_skv, c_off, causal, scale, rel_tau, corrects,
+                 protect_qk, rep_ref):
+    """Rebuild the (bq, bkv) probability block from the saved statistics:
+    p = exp(scale·QKᵀ − m) / l with the kv-edge/causal/dead-row masks of the
+    forward. The S = QKᵀ recompute is checksum-verified like the forward's
+    (the backward's fifth GEMM). Degenerate rows (l=0 ⇒ linv=0) come out
+    exactly zero. Returns (p, scores_scaled, det)."""
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    det = jnp.zeros((), bool)
+    if protect_qk:
+        ck_col = jnp.dot(jnp.sum(q, 0, keepdims=True), k.T)
+        ck_row = jnp.dot(q, jnp.sum(k.T, 1, keepdims=True))
+        d_col = jnp.sum(scores, 0, keepdims=True) - ck_col
+        d_row = jnp.sum(scores, 1, keepdims=True) - ck_row
+        tau_qk = jnp.maximum(
+            rel_tau * F32EPS * q.shape[1]
+            * jnp.max(jnp.abs(q)) * jnp.max(jnp.abs(k)), 1e-30)
+        scores, det, mag, row_l, col_l = temit._locate_correct_full(
+            scores, d_col, d_row, tau_qk, corrects, bq, bkv)
+        temit._record(rep_ref, det, mag, row_l + q_start, col_l + kv_start,
+                      d_col, d_row, tau_qk, 1.0, corrects)
+    scores = scores * scale
+    live = ((kv_start + _iota2((bq, bkv), 1) < true_skv)
+            & _row_mask(q_start, bq, bkv, true_sq))
+    if causal:
+        qpos = q_start + _iota2((bq, bkv), 0)
+        live = live & (qpos + c_off >= kv_start + _iota2((bq, bkv), 1))
+    # exp is clamped so masked/degenerate entries cannot overflow before
+    # they are zeroed (m is the row max over *live* positions only).
+    p = jnp.exp(jnp.minimum(scores - m, 0.0)) * linv
+    p = jnp.where(live, p, 0.0)
+    return p, scores, det
+
+
+def _verify_dp(dp, g, v, rep_ref, *, bq, bkv, dh, rel_tau, corrects,
+               q_start, kv_start):
+    """Checksum-verify (and correct) the dP = g·Vᵀ product."""
+    ck_col = jnp.dot(jnp.sum(g, 0, keepdims=True), v.T)          # (1, bkv)
+    ck_row = jnp.dot(g, jnp.sum(v, 0, keepdims=True).T)          # (bq, 1)
+    d_col = jnp.sum(dp, 0, keepdims=True) - ck_col
+    d_row = jnp.sum(dp, 1, keepdims=True) - ck_row
+    tau = jnp.maximum(rel_tau * F32EPS * dh * jnp.max(jnp.abs(g))
+                      * jnp.max(jnp.abs(v)), 1e-30)
+    dp, det, mag, row_l, col_l = temit._locate_correct_full(
+        dp, d_col, d_row, tau, corrects, bq, bkv)
+    temit._record(rep_ref, det, mag, row_l + q_start, col_l + kv_start,
+                  d_col, d_row, tau, float(dh), corrects)
+    return dp
+
+
+def _verify_delta(delta, a, b, eff, rep_ref, *, row_off, rel_tau, corrects,
+                  transpose_a):
+    """Checksum-verify (and correct) one accumulator delta of the backward
+    GEMMs — the shared Huang–Abraham step for dQ = dS·K
+    (``transpose_a=False``: delta = a·b) and dV = Pᵀ·g / dK = dSᵀ·Q
+    (``transpose_a=True``: delta = aᵀ·b, contraction over rows, no
+    materialized transpose). ``eff`` is the live contraction length driving
+    the rounding-aware threshold."""
+    if transpose_a:
+        ck_col = jax.lax.dot_general(jnp.sum(a, 1, keepdims=True), b,
+                                     _CONTRACT_ROWS)             # (1, n)
+        ck_row = jax.lax.dot_general(a, jnp.sum(b, 1, keepdims=True),
+                                     _CONTRACT_ROWS)             # (m, 1)
+    else:
+        ck_col = jnp.dot(jnp.sum(a, 0, keepdims=True), b)
+        ck_row = jnp.dot(a, jnp.sum(b, 1, keepdims=True))
+    d_col = jnp.sum(delta, 0, keepdims=True) - ck_col
+    d_row = jnp.sum(delta, 1, keepdims=True) - ck_row
+    tau = jnp.maximum(rel_tau * F32EPS * eff * jnp.max(jnp.abs(a))
+                      * jnp.max(jnp.abs(b)), 1e-30)
+    delta, det, mag, row_l, col_l = temit._locate_correct_full(
+        delta, d_col, d_row, tau, corrects, *delta.shape)
+    temit._record(rep_ref, det, mag, row_l + row_off, col_l, d_col, d_row,
+                  tau, eff, corrects)
+    return delta
+
+
+def _live_kv_steps(true_skv, q_start, bq, bkv, c_off, causal: bool):
+    """Number of kv steps a q-block actually executes (the ragged kv edge
+    and, for causal dispatch, the bottom-right-aligned bound) — the live
+    span the stochastic hook draws its step over."""
+    kv_hi = true_skv
+    if causal:
+        kv_hi = jnp.minimum(kv_hi, q_start + bq + c_off)
+    return jnp.maximum((kv_hi + bkv - 1) // bkv, 0)
+
+
+def _flash_dq_kernel(inj_ref, mag_ref, rng_ref, dims_ref,
+                     q_ref, k_ref, v_ref, g_ref, m_ref, l_ref, di_ref,
+                     dq_ref, rep_ref, acc_ref, *,
+                     kv_steps: int, q_blocks: int, bq: int, bkv: int,
+                     dh: int, causal: bool, scale: float, corrects: bool,
+                     rel_tau: float, protect_qk: bool, inject_rate: float,
+                     bit_shift: int):
+    """dQ = Σ_kv (P ∘ (g·Vᵀ − di))·scale·K — q-block stationary, kv blocks
+    as the reduction walk (the forward's grid transposed onto gradients).
+    Both in-step GEMMs (dP and the dQ delta) are verified per kv-step."""
+    h = pl.program_id(0)
+    qi = pl.program_id(1)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        rep_ref[...] = jnp.zeros_like(rep_ref)
+
+    true_sq = dims_ref[0]
+    true_skv = dims_ref[1]
+    q_start = qi * bq
+    kv_start = s * bkv
+    c_off = true_skv - true_sq
+    run = (kv_start < true_skv) & (q_start < true_sq)
+    if causal:
+        run = run & (kv_start <= q_start + bq - 1 + c_off)
+
+    enable, target, g_h, g_blk, g_s, g_row, g_col = (inj_ref[i]
+                                                     for i in range(7))
+    det_hit = (enable == 1) & (g_h == h) & (g_blk == qi) & (g_s == s)
+    n_live = _live_kv_steps(true_skv, q_start, bq, bkv, c_off, causal)
+    st_hit, st_step, st_row, st_col = temit.stochastic_seu(
+        rng_ref, SALT_DQ, h * q_blocks + qi, n_live, bq, dh, inject_rate)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, dh)
+        v = v_ref[0].astype(jnp.float32)
+        g = g_ref[0].astype(jnp.float32)                  # (bq, dh)
+        m = m_ref[0]                                      # (bq, 1) f32
+        l = l_ref[0]
+        di = di_ref[0]
+        linv = jnp.where(l > 0.0, 1.0 / jnp.maximum(l, 1e-30), 0.0)
+
+        p, _, _ = _recompute_p(
+            q, k, m, linv, q_start=q_start, kv_start=kv_start, bq=bq,
+            bkv=bkv, true_sq=true_sq, true_skv=true_skv, c_off=c_off,
+            causal=causal, scale=scale, rel_tau=rel_tau, corrects=corrects,
+            protect_qk=protect_qk, rep_ref=rep_ref)
+
+        dp = jnp.dot(g, v.T, preferred_element_type=jnp.float32)  # (bq,bkv)
+        inj_dp = ((_iota2((bq, bkv), 0) == g_row)
+                  & (_iota2((bq, bkv), 1) == g_col)
+                  & det_hit & (target == BWD_TARGETS["dp_q"]))
+        dp = dp + jnp.where(inj_dp, mag_ref[0], 0.0)
+        dp = _verify_dp(dp, g, v, rep_ref, bq=bq, bkv=bkv, dh=dh,
+                        rel_tau=rel_tau, corrects=corrects,
+                        q_start=q_start, kv_start=kv_start)
+
+        ds = p * (dp - di) * scale                        # (bq, bkv)
+        delta = jnp.dot(ds, k, preferred_element_type=jnp.float32)
+        inj_dq = ((_iota2((bq, dh), 0) == g_row)
+                  & (_iota2((bq, dh), 1) == g_col)
+                  & det_hit & (target == BWD_TARGETS["dq"]))
+        delta = delta + jnp.where(inj_dq, mag_ref[0], 0.0)
+        delta = temit.apply_seu(delta, st_row, st_col,
+                                st_hit & (st_step == s), bit_shift)
+
+        eff_kv = jnp.minimum(true_skv - kv_start, bkv).astype(jnp.float32)
+        delta = _verify_delta(delta, ds, k, eff_kv, rep_ref,
+                              row_off=q_start, rel_tau=rel_tau,
+                              corrects=corrects, transpose_a=False)
+        acc_ref[...] += delta
 
     @pl.when(s == kv_steps - 1)
     def _flush():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _flash_dkv_kernel(inj_ref, mag_ref, rng_ref, dims_ref,
+                      q_ref, g_ref, m_ref, l_ref, di_ref, k_ref, v_ref,
+                      dk_ref, dv_ref, rep_ref, dk_acc, dv_acc, *,
+                      q_steps: int, n_rep: int, kv_blocks: int, bq: int,
+                      bkv: int, dh: int, causal: bool, scale: float,
+                      corrects: bool, rel_tau: float, protect_qk: bool,
+                      inject_rate: float, bit_shift: int):
+    """dV = Σ_q Pᵀ·g and dK = Σ_q dSᵀ·Q·scale — kv-block stationary. The
+    reduction walk covers (n_rep × q-blocks): GQA is served by the same
+    query-head index maps as the forward (query head b·n_rep + r reads KV
+    head b), so the per-KV-head gradient sums its n_rep query heads without
+    repeat-materializing anything. All three in-step GEMMs verified."""
+    b = pl.program_id(0)
+    kvi = pl.program_id(1)
+    r = pl.program_id(2)
+    qi = pl.program_id(3)
+
+    @pl.when((r == 0) & (qi == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+        rep_ref[...] = jnp.zeros_like(rep_ref)
+
+    true_sq = dims_ref[0]
+    true_skv = dims_ref[1]
+    q_start = qi * bq
+    kv_start = kvi * bkv
+    c_off = true_skv - true_sq
+    run = (kv_start < true_skv) & (q_start < true_sq)
+    if causal:
+        run = run & (kv_start <= q_start + bq - 1 + c_off)
+
+    h_q = b * n_rep + r                      # the query head of this step
+    enable, target, g_h, g_blk, g_s, g_row, g_col = (inj_ref[i]
+                                                     for i in range(7))
+    det_hit = (enable == 1) & (g_h == h_q) & (g_blk == kvi) & (g_s == qi)
+    # Live (r, qi) span of this kv block: q blocks past the true Sq and,
+    # for causal dispatch, q blocks wholly above the bottom-right bound
+    # never execute — the stochastic step is drawn over the live walk only
+    # (uniform realized rate), and compared against the step's live index.
+    qi_hi = jnp.minimum((true_sq + bq - 1) // bq, q_steps)
+    qi_lo = (jnp.maximum((kv_start - c_off) // bq, 0) if causal
+             else jnp.zeros((), jnp.int32))
+    span = jnp.maximum(qi_hi - qi_lo, 0)
+    n_live = jnp.where(kv_start < true_skv, n_rep * span, 0)
+    st_hit, st_step, st_row, st_col = temit.stochastic_seu(
+        rng_ref, SALT_DKV, b * kv_blocks + kvi, n_live, bkv, dh,
+        inject_rate)
+    step_idx = r * span + (qi - qi_lo)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, dh)
+        g = g_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, dh)
+        v = v_ref[0].astype(jnp.float32)
+        m = m_ref[0]
+        l = l_ref[0]
+        di = di_ref[0]
+        linv = jnp.where(l > 0.0, 1.0 / jnp.maximum(l, 1e-30), 0.0)
+
+        p, _, _ = _recompute_p(
+            q, k, m, linv, q_start=q_start, kv_start=kv_start, bq=bq,
+            bkv=bkv, true_sq=true_sq, true_skv=true_skv, c_off=c_off,
+            causal=causal, scale=scale, rel_tau=rel_tau, corrects=corrects,
+            protect_qk=protect_qk, rep_ref=rep_ref)
+
+        dp = jnp.dot(g, v.T, preferred_element_type=jnp.float32)  # (bq,bkv)
+        inj_dp = ((_iota2((bq, bkv), 0) == g_row)
+                  & (_iota2((bq, bkv), 1) == g_col)
+                  & det_hit & (target == BWD_TARGETS["dp_kv"]))
+        dp = dp + jnp.where(inj_dp, mag_ref[0], 0.0)
+        dp = _verify_dp(dp, g, v, rep_ref, bq=bq, bkv=bkv, dh=dh,
+                        rel_tau=rel_tau, corrects=corrects,
+                        q_start=q_start, kv_start=kv_start)
+
+        eff_q = jnp.maximum(
+            jnp.minimum(true_sq - q_start, bq), 1).astype(jnp.float32)
+
+        # ---- dV delta: Pᵀ·g ---------------------------------------------
+        dv_delta = jax.lax.dot_general(p, g, _CONTRACT_ROWS,
+                                       preferred_element_type=jnp.float32)
+        inj_dv = ((_iota2((bkv, dh), 0) == g_row)
+                  & (_iota2((bkv, dh), 1) == g_col)
+                  & det_hit & (target == BWD_TARGETS["dv"]))
+        dv_delta = dv_delta + jnp.where(inj_dv, mag_ref[0], 0.0)
+        dv_delta = temit.apply_seu(dv_delta, st_row, st_col,
+                                   st_hit & (st_step == step_idx), bit_shift)
+        dv_delta = _verify_delta(dv_delta, p, g, eff_q, rep_ref,
+                                 row_off=kv_start, rel_tau=rel_tau,
+                                 corrects=corrects, transpose_a=True)
+        dv_acc[...] += dv_delta
+
+        # ---- dK delta: dSᵀ·Q --------------------------------------------
+        ds = p * (dp - di) * scale                        # (bq, bkv)
+        dk_delta = jax.lax.dot_general(ds, q, _CONTRACT_ROWS,
+                                       preferred_element_type=jnp.float32)
+        inj_dk = ((_iota2((bkv, dh), 0) == g_row)
+                  & (_iota2((bkv, dh), 1) == g_col)
+                  & det_hit & (target == BWD_TARGETS["dk"]))
+        dk_delta = dk_delta + jnp.where(inj_dk, mag_ref[0], 0.0)
+        dk_delta = _verify_delta(dk_delta, ds, q, eff_q, rep_ref,
+                                 row_off=kv_start, rel_tau=rel_tau,
+                                 corrects=corrects, transpose_a=True)
+        dk_acc[...] += dk_delta
+
+    @pl.when((r == n_rep - 1) & (qi == q_steps - 1))
+    def _flush():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# jit'd entry points (launch construction lives in templates.registry)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal", "ft",
+                                             "interpret", "protect_qk",
+                                             "scale", "n_rep", "save_stats"))
+def flash_ft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                       inj_idx: jax.Array, inj_mag: jax.Array,
+                       dims: Optional[jax.Array] = None,
+                       rng: Optional[jax.Array] = None, *,
+                       bq: int = 128, bkv: int = 128, causal: bool = True,
+                       ft: FTConfig, interpret: bool = False,
+                       protect_qk: bool = True, scale: float = None,
+                       n_rep: int = 1, save_stats: bool = False):
+    """q: (BH, Sq, dh); k, v: (BH/n_rep, Skv, dh); dh lane-aligned (pad to
+    128 in the ops wrapper). ``n_rep`` is the GQA query-group width: query
+    head h reads KV head h // n_rep straight through the K/V *index maps*,
+    so grouped-query attention runs without repeat-materializing the KV
+    operands. inj_idx int32[6] = [enable, bh, q_block, kv_step, row, col];
+    inj_mag f32[1]; dims int32[2] true (Sq, Skv) for the masked ragged path
+    (None → the padded shapes are the true lengths); rng int32[3] =
+    [enable, seed0, seed1] drives the in-kernel stochastic SEU hook
+    (`encode_rng`; None → disabled). Returns (out (BH, Sq, dh), report) —
+    or (out, m, l, report) with ``save_stats`` (the per-row softmax
+    statistics (BH, Sq, 1) f32 the dedicated backward consumes)."""
+    bh, sq, dh = q.shape
+    bkvh, skv, _ = k.shape
+    assert bh == bkvh * n_rep, (q.shape, k.shape, n_rep)
+    assert sq % bq == 0 and skv % bkv == 0, (q.shape, k.shape, bq, bkv)
+    if dims is None:
+        dims = jnp.array([sq, skv], jnp.int32)
+    if rng is None:
+        rng = jnp.zeros((3,), jnp.int32)
+    # dh here may be the 128-padded width; callers pass the true-dh scale
+    scale = scale if scale is not None else dh ** -0.5
+    return tregistry.flash_fwd_call(
+        q, k, v, inj_idx, inj_mag, rng, dims, bq=bq, bkv=bkv, causal=causal,
+        ft=ft, interpret=interpret, protect_qk=protect_qk, scale=scale,
+        n_rep=n_rep, save_stats=save_stats)
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal", "ft",
                                              "interpret", "protect_qk",
                                              "scale", "n_rep"))
-def flash_ft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                       inj_idx: jax.Array, inj_mag: jax.Array,
-                       dims: Optional[jax.Array] = None, *,
-                       bq: int = 128, bkv: int = 128, causal: bool = True,
-                       ft: FTConfig, interpret: bool = False,
-                       protect_qk: bool = True, scale: float = None,
-                       n_rep: int = 1):
-    """q: (BH, Sq, dh); k, v: (BH/n_rep, Skv, dh); dh lane-aligned (pad to
-    128 in the ops wrapper). ``n_rep`` is the GQA query-group width: query
-    head h reads KV head h // n_rep straight through the K/V *index maps*,
-    so grouped-query attention runs without repeat-materializing the KV
-    operands (the chunked-jnp path's grouped-bdot trick, in-kernel).
-    inj_idx int32[6] = [enable, bh, q_block, kv_step, row, col]; inj_mag
-    f32[1]; dims int32[2] true (Sq, Skv) for the masked ragged path (None →
-    the padded shapes are the true lengths). Returns
-    (out (BH, Sq, dh), report)."""
+def flash_ft_dq(q: jax.Array, k: jax.Array, v: jax.Array, g: jax.Array,
+                m: jax.Array, l: jax.Array, di: jax.Array,
+                inj_idx: jax.Array, inj_mag: jax.Array, dims: jax.Array,
+                rng: Optional[jax.Array] = None, *,
+                bq: int = 128, bkv: int = 128, causal: bool = True,
+                ft: FTConfig, interpret: bool = False,
+                protect_qk: bool = True, scale: float = None,
+                n_rep: int = 1):
+    """The dQ half of the dedicated flash backward: ONE Pallas launch over
+    the saved (m, l) statistics and the precomputed di = rowsum(g ∘ o) —
+    zero chunked-oracle recompute, no S×S transient. Operands padded to the
+    (bq, bkv)-fitted grid by the ops wrapper; m/l/di are (BH, Sq, 1) f32
+    with degenerate rows marked (m=−∞, l=0). inj_idx is the int32[7]
+    deterministic-SEU vector (`encode_bwd_injection`). Returns (dq, rep)."""
     bh, sq, dh = q.shape
-    bkvh, skv, _ = k.shape
-    assert bh == bkvh * n_rep, (q.shape, k.shape, n_rep)
-    assert sq % bq == 0 and skv % bkv == 0, (q.shape, k.shape, bq, bkv)
-    grid = (bh, sq // bq, skv // bkv)
-    if dims is None:
-        dims = jnp.array([sq, skv], jnp.int32)
-    # dh here may be the 128-padded width; callers pass the true-dh scale
+    assert bh == k.shape[0] * n_rep, (q.shape, k.shape, n_rep)
+    assert sq % bq == 0 and k.shape[1] % bkv == 0, (q.shape, k.shape, bq,
+                                                    bkv)
+    if rng is None:
+        rng = jnp.zeros((3,), jnp.int32)
     scale = scale if scale is not None else dh ** -0.5
+    return tregistry.flash_dq_call(
+        q, k, v, g, m, l, di, inj_idx, inj_mag, rng, dims, bq=bq, bkv=bkv,
+        causal=causal, ft=ft, interpret=interpret, protect_qk=protect_qk,
+        scale=scale, n_rep=n_rep)
 
-    kernel = functools.partial(
-        _flash_ft_kernel, kv_steps=grid[2], bq=bq, bkv=bkv, dh=dh,
-        causal=causal, scale=scale, corrects=ft.corrects,
-        rel_tau=ft.rel_tau, protect_qk=protect_qk)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, dh), lambda b, i, s, *_: (b, i, 0)),
-            pl.BlockSpec((1, bkv, dh),
-                         lambda b, i, s, *_: (b // n_rep, s, 0)),
-            pl.BlockSpec((1, bkv, dh),
-                         lambda b, i, s, *_: (b // n_rep, s, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, bq, dh), lambda b, i, s, *_: (b, i, 0)),
-            pl.BlockSpec((1, 1, REPORT_WIDTH), lambda b, i, s, *_: (b, i, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((bq, dh), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
-            jax.ShapeDtypeStruct((bh, sq // bq, REPORT_WIDTH), jnp.float32),
-        ],
-        compiler_params=_CompilerParams(
-            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
-                                 pltpu.ARBITRARY),
-        ),
-        interpret=interpret,
-    )(inj_idx, inj_mag, dims, q, k, v)
+@functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal", "ft",
+                                             "interpret", "protect_qk",
+                                             "scale", "n_rep"))
+def flash_ft_dkv(q: jax.Array, k: jax.Array, v: jax.Array, g: jax.Array,
+                 m: jax.Array, l: jax.Array, di: jax.Array,
+                 inj_idx: jax.Array, inj_mag: jax.Array, dims: jax.Array,
+                 rng: Optional[jax.Array] = None, *,
+                 bq: int = 128, bkv: int = 128, causal: bool = True,
+                 ft: FTConfig, interpret: bool = False,
+                 protect_qk: bool = True, scale: float = None,
+                 n_rep: int = 1):
+    """The dK/dV half of the dedicated flash backward: ONE kv-stationary
+    Pallas launch whose reduction walk covers the n_rep GQA query heads ×
+    q blocks of each KV head (same K/V index maps as the forward — nothing
+    repeat-materialized). Returns (dk, dv, rep) per KV head."""
+    bh, sq, dh = q.shape
+    assert bh == k.shape[0] * n_rep, (q.shape, k.shape, n_rep)
+    assert sq % bq == 0 and k.shape[1] % bkv == 0, (q.shape, k.shape, bq,
+                                                    bkv)
+    if rng is None:
+        rng = jnp.zeros((3,), jnp.int32)
+    scale = scale if scale is not None else dh ** -0.5
+    return tregistry.flash_dkv_call(
+        q, k, v, g, m, l, di, inj_idx, inj_mag, rng, dims, bq=bq, bkv=bkv,
+        causal=causal, ft=ft, interpret=interpret, protect_qk=protect_qk,
+        scale=scale, n_rep=n_rep)
 
+
+# ---------------------------------------------------------------------------
+# injection encoders
+# ---------------------------------------------------------------------------
 
 def encode_injection(spec: Optional[InjectionSpec], bh: int = 0,
                      q_block: int = 0):
@@ -267,3 +658,36 @@ def encode_injection(spec: Optional[InjectionSpec], bh: int = 0,
     idx = jnp.array([1, bh, q_block, spec.k_step, spec.row, spec.col],
                     jnp.int32)
     return idx, jnp.array([spec.magnitude], jnp.float32)
+
+
+def encode_bwd_injection(spec: Optional[InjectionSpec], target: str = "dq",
+                         bh: int = 0, blk: int = 0):
+    """Deterministic SEU vectors for the backward kernels. ``target`` names
+    the backward GEMM the SEU lands in — "dp_q"/"dq" (dq kernel; ``blk`` is
+    the q-block, ``spec.k_step`` the kv step) or "dp_kv"/"dv"/"dk" (dkv
+    kernel; ``blk`` is the kv block, ``spec.k_step`` the q step; ``bh`` is
+    always the QUERY head). Returns (inj_dq int32[7], inj_dkv int32[7],
+    mag f32[1]) with only the targeted kernel's vector enabled."""
+    zero = jnp.zeros((7,), jnp.int32)
+    if spec is None:
+        return zero, zero, jnp.zeros((1,), jnp.float32)
+    if target not in BWD_TARGETS:
+        raise ValueError(f"unknown backward injection target {target!r}; "
+                         f"one of {tuple(BWD_TARGETS)}")
+    vec = jnp.array([1, BWD_TARGETS[target], bh, blk, spec.k_step,
+                     spec.row, spec.col], jnp.int32)
+    mag = jnp.array([spec.magnitude], jnp.float32)
+    if target in _DQ_KERNEL_TARGETS:
+        return vec, zero, mag
+    return zero, vec, mag
+
+
+def encode_rng(key: Optional[jax.Array], ft: FTConfig) -> jax.Array:
+    """int32[3] = [enable, seed0, seed1] for the in-kernel stochastic SEU
+    hook — seeds derived from the campaign key; disabled (zeros) when no
+    key is supplied or the policy's inject_rate is 0."""
+    if key is None or ft.inject_rate <= 0.0:
+        return jnp.zeros((3,), jnp.int32)
+    seeds = jax.random.randint(key, (2,), 0, jnp.iinfo(jnp.int32).max,
+                               dtype=jnp.int32)
+    return jnp.concatenate([jnp.ones((1,), jnp.int32), seeds])

@@ -298,14 +298,62 @@ def ft_matmul_report(a: jax.Array, b: jax.Array, *,
                      out_dtype=out_dtype)
 
 
+def _flash_spec(ft: FTConfig, direction: str, dh_p: int,
+                save_stats: bool = False):
+    from .templates.spec import FlashKernelSpec
+    return FlashKernelSpec(ft_level=ft.level if ft.enabled else "off",
+                           direction=direction, dh=dh_p,
+                           save_stats=save_stats)
+
+
+def _flash_fit(dim: int, cap: int, align: int) -> int:
+    """Fitted flash block edge: ≤ cap (the autotuned/user tile), ≤ the
+    128-padded dim (never over-tile), aligned to `align`."""
+    cap = max(min(cap, ((dim + 127) // 128) * 128), align)
+    return search.fit_tile(dim, cap, align)
+
+
+def _pad3(x, s_to, d_to, value=0.0):
+    return jnp.pad(x, ((0, 0), (0, s_to - x.shape[1]),
+                       (0, d_to - x.shape[2])), constant_values=value)
+
+
+def _check_flash_injection(kernel: str, *, head: int, n_heads: int,
+                           blk: int, n_blks: int, step: int, n_steps: int,
+                           q_span, kv_span, sq: int, skv: int,
+                           causal: bool) -> None:
+    """A deterministic flash InjectionSpec addresses a concrete grid cell;
+    with autotuned (bq, bkv) the grid shape is no longer fixed, so a stale
+    (block, step) target could fall outside the grid — or on a cell the
+    causal/ragged dispatch skips — and the SEU would silently never land.
+    That is exactly the silently-clean-campaign failure mode this kernel
+    family exists to prevent, so fail loudly instead. ``q_span``/``kv_span``
+    are the (start, stop) row/col ranges of the targeted cell."""
+    ok = (0 <= head < n_heads and 0 <= blk < n_blks
+          and 0 <= step < n_steps)
+    if ok:
+        (q0, q1), (kv0, _) = q_span, kv_span
+        ok = q0 < sq and kv0 < skv and (
+            not causal or kv0 <= q1 - 1 + (skv - sq))
+    if not ok:
+        raise ValueError(
+            f"{kernel}: deterministic injection targets head {head} of "
+            f"{n_heads}, block {blk} of {n_blks}, step {step} of {n_steps} "
+            f"— a cell the fitted grid never executes (autotuned/fitted "
+            f"tiles, ragged true lengths, or causal skipping). The SEU "
+            f"would silently never land; pin bq/bkv or fix the injection "
+            f"target.")
+
+
 def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
              ft: FTConfig = ONLINE_BLOCK, causal: bool = True,
              spec: Optional[InjectionSpec] = None,
              inj_bh: int = 0, inj_q_block: int = 0,
-             bq: int = 128, bkv: int = 128,
+             bq: Optional[int] = None, bkv: Optional[int] = None,
              interpret: Optional[bool] = None,
              protect_qk: bool = True,
-             n_rep: int = 1) -> Tuple[jax.Array, jax.Array]:
+             n_rep: int = 1, save_stats: bool = False,
+             key: Optional[jax.Array] = None):
     """Flash attention with fused in-kernel ABFT (see kernels/flashft.py).
     q: (BH, Sq, dh); k, v: (BH/n_rep, Skv, dh) — ``n_rep`` is the GQA
     query-group width (query head h reads KV head h//n_rep via the K/V
@@ -318,7 +366,19 @@ def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
     causal∧kv-edge mask is bottom-right aligned on the true lengths
     (query i attends kv j iff j ≤ i + Skv − Sq), so causal cross-length
     attention (Skv ≥ Sq, the decode convention) no longer needs padded
-    shapes. Returns (out, report)."""
+    shapes.
+
+    ``bq``/``bkv`` default to the autotuned tiles (`autotune.best_params`
+    under the ``/v_flashfwd*`` variant key); pass explicit values to pin
+    the grid (tests that address report blocks do). ``key`` drives the
+    in-kernel stochastic SEU hook when ``ft.inject_rate > 0`` — one
+    Bernoulli(rate) SEU per (head, q-block) lands in the PV accumulator at
+    a hash-drawn (step, row, col), so fault campaigns exercise the kernel
+    itself. ``save_stats`` additionally returns the per-row softmax
+    statistics for the dedicated backward.
+
+    Returns (out, report) — or (out, m, l, report) with ``save_stats``
+    (m, l are (BH, Sq) f32; degenerate rows hold (−∞, 0))."""
     from . import flashft
     bh, sq, dh = q.shape
     skv = k.shape[1]
@@ -326,24 +386,156 @@ def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
     assert not causal or skv >= sq, (
         "causal flash_ft is bottom-right aligned: needs Skv >= Sq "
         f"(got Sq={sq}, Skv={skv})")
-    sub = search.sublane(q.dtype.itemsize)
+    in_bytes = q.dtype.itemsize
+    sub = search.sublane(in_bytes)
     dh_p = ((dh + 127) // 128) * 128
-    bq = search.fit_tile(sq, min(bq, ((sq + 127) // 128) * 128), sub)
-    bkv = search.fit_tile(skv, min(bkv, ((skv + 127) // 128) * 128),
-                          autotune.MXU)
+    fspec = _flash_spec(ft, "fwd", dh_p, save_stats)
+    if bq is None or bkv is None:
+        p = autotune.best_params(sq, skv, dh_p, in_bytes,
+                                 ft_level=fspec.ft_level, spec=fspec,
+                                 batch=bh)
+        bq = p.bm if bq is None else bq
+        bkv = p.bn if bkv is None else bkv
+    bq = _flash_fit(sq, bq, sub)
+    bkv = _flash_fit(skv, bkv, autotune.MXU)
     sq_p = ((sq + bq - 1) // bq) * bq
     skv_p = ((skv + bkv - 1) // bkv) * bkv
 
-    def pad3(x, s_to, d_to):
-        return jnp.pad(x, ((0, 0), (0, s_to - x.shape[1]),
-                           (0, d_to - x.shape[2])))
-
-    qp, kp, vp = pad3(q, sq_p, dh_p), pad3(k, skv_p, dh_p), pad3(v, skv_p,
-                                                                 dh_p)
+    if spec is not None:
+        _check_flash_injection(
+            "flash_ft", head=inj_bh, n_heads=bh, blk=inj_q_block,
+            n_blks=sq_p // bq, step=spec.k_step, n_steps=skv_p // bkv,
+            q_span=(inj_q_block * bq, (inj_q_block + 1) * bq),
+            kv_span=(spec.k_step * bkv, (spec.k_step + 1) * bkv),
+            sq=sq, skv=skv, causal=causal)
+    qp, kp, vp = (_pad3(q, sq_p, dh_p), _pad3(k, skv_p, dh_p),
+                  _pad3(v, skv_p, dh_p))
     inj_idx, inj_mag = flashft.encode_injection(spec, inj_bh, inj_q_block)
+    rng = flashft.encode_rng(key, ft)
     dims = jnp.array([sq, skv], jnp.int32)
-    out, rep = flashft.flash_ft_attention(
-        qp, kp, vp, inj_idx, inj_mag, dims, bq=bq, bkv=bkv, causal=causal,
-        ft=ft, interpret=_should_interpret(interpret),
-        protect_qk=protect_qk, scale=dh ** -0.5, n_rep=n_rep)
+    res = flashft.flash_ft_attention(
+        qp, kp, vp, inj_idx, inj_mag, dims, rng, bq=bq, bkv=bkv,
+        causal=causal, ft=ft, interpret=_should_interpret(interpret),
+        protect_qk=protect_qk, scale=dh ** -0.5, n_rep=n_rep,
+        save_stats=save_stats)
+    if save_stats:
+        out, m, l, rep = res
+        return out[:, :sq, :dh], m[:, :sq, 0], l[:, :sq, 0], rep
+    out, rep = res
     return out[:, :sq, :dh], rep
+
+
+def flash_ft_bwd(q: jax.Array, k: jax.Array, v: jax.Array, o: jax.Array,
+                 m: jax.Array, l: jax.Array, g: jax.Array, *,
+                 ft: FTConfig = ONLINE_BLOCK, causal: bool = True,
+                 n_rep: int = 1, key: Optional[jax.Array] = None,
+                 inject: Optional[InjectionSpec] = None,
+                 inj_target: str = "dq", inj_bh: int = 0, inj_blk: int = 0,
+                 bq: Optional[int] = None, bkv: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 protect_qk: bool = True):
+    """The dedicated flash-attention backward (PR 5): dQ/dK/dV as TWO
+    Pallas launches over the forward-saved (m, l) statistics — zero
+    chunked-oracle recompute, no S×S transient, and all four backward
+    GEMMs (dP = g·Vᵀ, dV = Pᵀ·g, dQ = dS·K, dK = dSᵀ·Q) plus the in-kernel
+    S recompute carry the same checksum-verify + branchless-correct ABFT
+    as the forward.
+
+    q, o, g: (BH, Sq, dh); k, v: (BH/n_rep, Skv, dh); m, l: (BH, Sq) f32
+    from ``flash_ft(..., save_stats=True)``. di = rowsum(g ∘ o) is the one
+    elementwise preprocess (no GEMM). Each direction autotunes its own
+    (bq, bkv) under its ``/v_flashbwd_*`` variant key; GQA reuses the
+    forward's K/V index maps, with the dkv kernel folding the n_rep query
+    heads of a KV head into its reduction walk — dk/dv come back per KV
+    head, never repeat-materialized.
+
+    ``inject``/``inj_target`` land a deterministic SEU inside one named
+    backward GEMM ("dp_q"|"dq"|"dp_kv"|"dv"|"dk" — see
+    `flashft.encode_bwd_injection`); ``key`` drives the stochastic
+    in-kernel hook like the forward. Returns
+    (dq, dk, dv, report_dq, report_dkv)."""
+    from . import flashft
+    bh, sq, dh = q.shape
+    bkvh, skv, _ = k.shape
+    assert bh == bkvh * n_rep, (q.shape, k.shape, n_rep)
+    assert o.shape == q.shape and g.shape == q.shape, (o.shape, g.shape)
+    assert m.shape[:2] == (bh, sq) and l.shape[:2] == (bh, sq), \
+        (m.shape, l.shape, (bh, sq))
+    assert not causal or skv >= sq, (
+        "causal flash_ft_bwd is bottom-right aligned: needs Skv >= Sq "
+        f"(got Sq={sq}, Skv={skv})")
+    in_bytes = q.dtype.itemsize
+    sub = search.sublane(in_bytes)
+    dh_p = ((dh + 127) // 128) * 128
+    itp = _should_interpret(interpret)
+    scale = dh ** -0.5
+    neg_inf = flashft.NEG_INF
+
+    # The one elementwise preprocess of the flash backward (no GEMM).
+    di = jnp.sum(g.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    m3 = m.reshape(bh, sq, 1).astype(jnp.float32)
+    l3 = l.reshape(bh, sq, 1).astype(jnp.float32)
+    di3 = di.reshape(bh, sq, 1)
+
+    inj_dq, inj_dkv, inj_mag = flashft.encode_bwd_injection(
+        inject, inj_target, inj_bh, inj_blk)
+    rng = flashft.encode_rng(key, ft)
+    dims = jnp.array([sq, skv], jnp.int32)
+
+    def fitted(direction, stat_dim, stream_dim, batch):
+        fspec = _flash_spec(ft, direction, dh_p)
+        if bq is not None and bkv is not None:
+            return bq, bkv
+        p = autotune.best_params(stat_dim, stream_dim, dh_p, in_bytes,
+                                 ft_level=fspec.ft_level, spec=fspec,
+                                 batch=batch)
+        if direction == "dq":
+            return (p.bm if bq is None else bq,
+                    p.bn if bkv is None else bkv)
+        return (p.bn if bq is None else bq,
+                p.bm if bkv is None else bkv)
+
+    def padded(bq_f, bkv_f):
+        sq_p = ((sq + bq_f - 1) // bq_f) * bq_f
+        skv_p = ((skv + bkv_f - 1) // bkv_f) * bkv_f
+        # Padded query rows carry the degenerate-stat markers (m=−∞, l=0)
+        # so both backward kernels see p ≡ 0 there — exact zeros, no
+        # reliance on the cotangent being zero-padded.
+        return (_pad3(q, sq_p, dh_p), _pad3(k, skv_p, dh_p),
+                _pad3(v, skv_p, dh_p), _pad3(g, sq_p, dh_p),
+                _pad3(m3, sq_p, 1, value=neg_inf), _pad3(l3, sq_p, 1),
+                _pad3(di3, sq_p, 1))
+
+    bq_q, bkv_q = fitted("dq", sq, skv, bh)
+    bq_q = _flash_fit(sq, bq_q, sub)
+    bkv_q = _flash_fit(skv, bkv_q, autotune.MXU)
+    if inject is not None and inj_target in ("dp_q", "dq"):
+        _check_flash_injection(
+            f"flash_ft_bwd[{inj_target}]", head=inj_bh, n_heads=bh,
+            blk=inj_blk, n_blks=-(-sq // bq_q), step=inject.k_step,
+            n_steps=-(-skv // bkv_q),
+            q_span=(inj_blk * bq_q, (inj_blk + 1) * bq_q),
+            kv_span=(inject.k_step * bkv_q, (inject.k_step + 1) * bkv_q),
+            sq=sq, skv=skv, causal=causal)
+    dq, rep_dq = flashft.flash_ft_dq(
+        *padded(bq_q, bkv_q), inj_dq, inj_mag, dims, rng, bq=bq_q,
+        bkv=bkv_q, causal=causal, ft=ft, interpret=itp,
+        protect_qk=protect_qk, scale=scale, n_rep=n_rep)
+
+    bq_k, bkv_k = fitted("dkv", skv, sq, bkvh)
+    bq_k = _flash_fit(sq, bq_k, sub)
+    bkv_k = _flash_fit(skv, bkv_k, autotune.MXU)
+    if inject is not None and inj_target in ("dp_kv", "dv", "dk"):
+        _check_flash_injection(
+            f"flash_ft_bwd[{inj_target}]", head=inj_bh, n_heads=bh,
+            blk=inj_blk, n_blks=-(-skv // bkv_k), step=inject.k_step,
+            n_steps=-(-sq // bq_k),
+            q_span=(inject.k_step * bq_k, (inject.k_step + 1) * bq_k),
+            kv_span=(inj_blk * bkv_k, (inj_blk + 1) * bkv_k),
+            sq=sq, skv=skv, causal=causal)
+    dk, dv, rep_dkv = flashft.flash_ft_dkv(
+        *padded(bq_k, bkv_k), inj_dkv, inj_mag, dims, rng, bq=bq_k,
+        bkv=bkv_k, causal=causal, ft=ft, interpret=itp,
+        protect_qk=protect_qk, scale=scale, n_rep=n_rep)
+    return (dq[:, :sq, :dh], dk[:, :skv, :dh], dv[:, :skv, :dh],
+            rep_dq, rep_dkv)

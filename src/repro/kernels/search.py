@@ -152,6 +152,28 @@ def predicted_time_s(m: int, n: int, k: int, p: KernelParams, *,
         m = m + groups * (p.bm - 1)     # per-group row-alignment padding
     me, ne, ke = executed_dims(m, n, k, p)
     gm, gn, gk = me // p.bm, ne // p.bn, ke // p.bk
+    if spec is not None and spec.flash:
+        # Flash-attention geometry: m = stationary seq dim (q for fwd/dq,
+        # kv for dkv), n = streamed seq dim, k = head dim (never tiled —
+        # spec.dh, not p.bk). Stationary operands are read once; the
+        # streamed pair re-streams once per stationary block row; outputs
+        # are written once per stationary row. The in-kernel GEMMs beyond
+        # the S-GEMM and the softmax chain ride spec.epilogue_flops, the
+        # side streams (g, stats, the extra dkv output) ride
+        # spec.extra_hbm_bytes — same hooks as the fused-epilogue variants.
+        dh = spec.dh
+        flops = 2.0 * me * ne * dh + spec.epilogue_flops(me, ne)
+        if ft_level != "off":
+            # Checksum GEMVs: ~2·(bs + bt)·dh MACs per (stationary,
+            # streamed) block pair per protected GEMM.
+            n_gemms = spec._GEMMS[spec.direction]
+            flops += n_gemms * 4.0 * (p.bm + p.bn) * dh * gm * gn
+        stat_bytes = me * dh * in_bytes            # q (or k∥v via extra)
+        stream_bytes = gm * 2.0 * ne * dh * in_bytes   # k+v (or q+g) re-read
+        out_bytes = me * dh * in_bytes
+        extra = spec.extra_hbm_bytes(me, ne, in_bytes)
+        return batch * roofline.kernel_time_s(
+            flops, stat_bytes + stream_bytes + out_bytes + extra)
     if spec is not None and spec.tgmm:
         tiles = gm
         flops = 2.0 * me * ne * ke

@@ -14,7 +14,7 @@ Entry points: `kernels.ops.gemm_call` / `kernels.ops.grouped_gemm_call`
 `epilogues.register` (extend the variant space).
 """
 from . import emit, epilogues, registry, spec
-from .spec import BatchedKernelSpec, KernelSpec, fused
+from .spec import BatchedKernelSpec, FlashKernelSpec, KernelSpec, fused
 
 __all__ = ["emit", "epilogues", "registry", "spec", "BatchedKernelSpec",
-           "KernelSpec", "fused"]
+           "FlashKernelSpec", "KernelSpec", "fused"]

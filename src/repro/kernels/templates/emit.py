@@ -139,6 +139,83 @@ def _record(rep_ref, det, mag, row_g, col_g, d_col, d_row, tau, k_elapsed,
 
 
 # ---------------------------------------------------------------------------
+# in-kernel stochastic SEU hook (PR 5)
+# ---------------------------------------------------------------------------
+#
+# Stochastic (`ft.inject_rate`-driven) fault campaigns used to live only in
+# the jnp paths (`core.fault_injection.Injector`), so forcing a campaign
+# onto a Pallas kernel silently dropped the injection — the MPGemmFI
+# failure mode where the injector and the kernel disagree and a "campaign"
+# measures a clean run. These helpers are the in-kernel counterpart: a
+# counter-based splitmix32-style hash (deterministic per grid cell, same
+# bits under interpret and compiled modes — unlike the hardware
+# `pltpu.prng_*` primitives, which have no interpret-mode lowering) seeded
+# from the campaign key via two scalar-prefetched int32 words.
+
+
+def _mix32(x):
+    """splitmix32 finalizer on uint32 — full-avalanche integer hash."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> jnp.uint32(16))) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> jnp.uint32(15))) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> jnp.uint32(16))
+
+
+def stochastic_seu(rng_ref, salt: int, block_uid, n_steps,
+                   bm: int, bn: int, rate: float):
+    """Draw one potential SEU for the output block identified by
+    ``block_uid`` (an int32 scalar unique per stationary output block).
+
+    rng_ref — scalar-prefetch int32[3] = [enable, seed0, seed1] (the seeds
+    derive from the campaign key; enable=0 ⇒ never hits). ``salt`` is a
+    static per-kernel/per-GEMM discriminator so the forward and each
+    backward kernel draw independent streams from one key.
+
+    With probability ``rate`` the block suffers one SEU at a uniformly
+    drawn (step, row, col); returns (hit, step, row, col) where ``hit`` is
+    a traced bool and the coordinates are int32 scalars. The caller applies
+    it with `apply_seu` on the step whose LIVE index matches ``step``.
+
+    ``n_steps`` is the number of steps the block actually executes and may
+    be a traced int32 (flash callers pass the causal/ragged live span, not
+    the grid extent — drawing over skipped steps would silently deflate
+    the realized injection rate below the nominal Bernoulli(rate), the
+    exact mis-measurement the hook exists to prevent). n_steps ≤ 0 ⇒ the
+    block never fires."""
+    seed = (rng_ref[1].astype(jnp.uint32)
+            ^ _mix32(rng_ref[2].astype(jnp.uint32)
+                     + jnp.uint32((salt * 0x9E3779B9) & 0xFFFFFFFF)))
+    h0 = _mix32(seed ^ (block_uid.astype(jnp.uint32)
+                        * jnp.uint32(0x85EBCA6B)))
+    u = (h0 >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / (1 << 24))
+    n_steps = jnp.asarray(n_steps, jnp.int32)
+    hit = (rng_ref[0] == 1) & (u < rate) & (n_steps > 0)
+    h1, h2, h3 = _mix32(h0 + jnp.uint32(1)), _mix32(h0 + jnp.uint32(2)), \
+        _mix32(h0 + jnp.uint32(3))
+
+    def _bounded(h, n):
+        return ((h & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+                % jnp.maximum(jnp.asarray(n, jnp.int32), 1))
+
+    return hit, _bounded(h1, n_steps), _bounded(h2, bm), _bounded(h3, bn)
+
+
+def apply_seu(delta, row, col, hit_now, bit_shift: int):
+    """Land the drawn SEU on one element of a (bm, bn) accumulator delta —
+    the same magnitude model as `core.fault_injection.Injector`: the hit
+    element scales by 2**bit_shift (a high-order mantissa/exponent flip),
+    with an absolute 2**bit_shift offset when the element is ~0 so the flip
+    stays observable."""
+    bm, bn = delta.shape
+    mask = ((_iota2((bm, bn), 0) == row) & (_iota2((bm, bn), 1) == col)
+            & hit_now)
+    mag = delta * (2.0 ** bit_shift - 1.0)
+    mag = jnp.where(jnp.abs(mag) > 1e-6, mag,
+                    jnp.full_like(mag, 2.0 ** bit_shift))
+    return delta + jnp.where(mask, mag, 0.0)
+
+
+# ---------------------------------------------------------------------------
 # the template
 # ---------------------------------------------------------------------------
 

@@ -159,6 +159,184 @@ def kernel_call(a: jax.Array, b: jax.Array,
     return out, rep
 
 
+# ---------------------------------------------------------------------------
+# flash-attention variants (PR 5) — the registry's launch builders for the
+# `kernels.flashft` kernel family. The kernel bodies live in flashft (online
+# softmax is its own body, not an emit.render product); tile selection rides
+# `autotune.best_params` under `spec.FlashKernelSpec` variant keys; these
+# functions own the grid/BlockSpec plumbing, exactly like `kernel_call` does
+# for the 2-D template. Called from the jit'd wrappers in flashft — not
+# jit'd themselves.
+# ---------------------------------------------------------------------------
+
+def flash_fwd_call(q, k, v, inj_idx, inj_mag, rng, dims, *, bq: int,
+                   bkv: int, causal: bool, ft: FTConfig, interpret: bool,
+                   protect_qk: bool, scale: float, n_rep: int,
+                   save_stats: bool):
+    """Forward flash-FT launch. Returns (out, report) or, with
+    ``save_stats``, (out, m, l, report) — m/l are (BH, Sq, 1) f32 per-row
+    softmax statistics (degenerate rows marked m=−∞, l=0)."""
+    from .. import flashft
+
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    grid = (bh, sq // bq, skv // bkv)
+    kernel = functools.partial(
+        flashft._flash_ft_kernel, kv_steps=grid[2], q_blocks=grid[1],
+        bq=bq, bkv=bkv, dh=dh, causal=causal, scale=scale,
+        corrects=ft.corrects, rel_tau=ft.rel_tau, protect_qk=protect_qk,
+        save_stats=save_stats, inject_rate=ft.inject_rate,
+        bit_shift=ft.inject_bit_shift)
+
+    out_specs = [pl.BlockSpec((1, bq, dh), lambda b, i, s, *_: (b, i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((bh, sq, dh), q.dtype)]
+    if save_stats:
+        for _ in ("m", "l"):
+            out_specs.append(pl.BlockSpec((1, bq, 1),
+                                          lambda b, i, s, *_: (b, i, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((bh, sq, 1), jnp.float32))
+    out_specs.append(pl.BlockSpec((1, 1, REPORT_WIDTH),
+                                  lambda b, i, s, *_: (b, i, 0)))
+    out_shape.append(jax.ShapeDtypeStruct((bh, sq // bq, REPORT_WIDTH),
+                                          jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, s, *_: (b, i, 0)),
+            pl.BlockSpec((1, bkv, dh),
+                         lambda b, i, s, *_: (b // n_rep, s, 0)),
+            pl.BlockSpec((1, bkv, dh),
+                         lambda b, i, s, *_: (b // n_rep, s, 0)),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+    )
+    result = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
+                                 pltpu.ARBITRARY),
+        ),
+        interpret=interpret,
+    )(inj_idx, inj_mag, rng, dims, q, k, v)
+    return tuple(result)
+
+
+def flash_dq_call(q, k, v, g, m, l, di, inj_idx, inj_mag, rng, dims, *,
+                  bq: int, bkv: int, causal: bool, ft: FTConfig,
+                  interpret: bool, protect_qk: bool, scale: float,
+                  n_rep: int):
+    """dQ backward launch (q-block stationary, kv-step reduction walk).
+    Returns (dq (BH, Sq, dh), report (BH, Sq/bq, W))."""
+    from .. import flashft
+
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    grid = (bh, sq // bq, skv // bkv)
+    kernel = functools.partial(
+        flashft._flash_dq_kernel, kv_steps=grid[2], q_blocks=grid[1],
+        bq=bq, bkv=bkv, dh=dh, causal=causal, scale=scale,
+        corrects=ft.corrects, rel_tau=ft.rel_tau, protect_qk=protect_qk,
+        inject_rate=ft.inject_rate, bit_shift=ft.inject_bit_shift)
+
+    q_spec = pl.BlockSpec((1, bq, dh), lambda b, i, s, *_: (b, i, 0))
+    kv_spec = pl.BlockSpec((1, bkv, dh),
+                           lambda b, i, s, *_: (b // n_rep, s, 0))
+    stat_spec = pl.BlockSpec((1, bq, 1), lambda b, i, s, *_: (b, i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, stat_spec, stat_spec,
+                  stat_spec],
+        out_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, s, *_: (b, i, 0)),
+            pl.BlockSpec((1, 1, REPORT_WIDTH),
+                         lambda b, i, s, *_: (b, i, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((bq, dh), jnp.float32)],
+    )
+    dq, rep = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+            jax.ShapeDtypeStruct((bh, sq // bq, REPORT_WIDTH), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
+                                 pltpu.ARBITRARY),
+        ),
+        interpret=interpret,
+    )(inj_idx, inj_mag, rng, dims, q, k, v, g, m, l, di)
+    return dq, rep
+
+
+def flash_dkv_call(q, k, v, g, m, l, di, inj_idx, inj_mag, rng, dims, *,
+                   bq: int, bkv: int, causal: bool, ft: FTConfig,
+                   interpret: bool, protect_qk: bool, scale: float,
+                   n_rep: int):
+    """dK/dV backward launch (kv-block stationary; the reduction walk covers
+    the n_rep GQA query heads × q blocks of each KV head). Returns
+    (dk, dv (BKVH, Skv, dh), report (BKVH, Skv/bkv, W))."""
+    from .. import flashft
+
+    bh, sq, dh = q.shape
+    bkvh, skv, _ = k.shape
+    grid = (bkvh, skv // bkv, n_rep, sq // bq)
+    kernel = functools.partial(
+        flashft._flash_dkv_kernel, q_steps=grid[3], n_rep=n_rep,
+        kv_blocks=grid[1], bq=bq, bkv=bkv, dh=dh, causal=causal,
+        scale=scale, corrects=ft.corrects, rel_tau=ft.rel_tau,
+        protect_qk=protect_qk, inject_rate=ft.inject_rate,
+        bit_shift=ft.inject_bit_shift)
+
+    q_spec = pl.BlockSpec((1, bq, dh),
+                          lambda b, kvi, r, qi, *_: (b * n_rep + r, qi, 0))
+    stat_spec = pl.BlockSpec((1, bq, 1),
+                             lambda b, kvi, r, qi, *_: (b * n_rep + r, qi, 0))
+    kv_spec = pl.BlockSpec((1, bkv, dh),
+                           lambda b, kvi, r, qi, *_: (b, kvi, 0))
+    out_spec = pl.BlockSpec((1, bkv, dh),
+                            lambda b, kvi, r, qi, *_: (b, kvi, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[q_spec, q_spec, stat_spec, stat_spec, stat_spec,
+                  kv_spec, kv_spec],
+        out_specs=[
+            out_spec, out_spec,
+            pl.BlockSpec((1, 1, REPORT_WIDTH),
+                         lambda b, kvi, r, qi, *_: (b, kvi, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((bkv, dh), jnp.float32),
+                        pltpu.VMEM((bkv, dh), jnp.float32)],
+    )
+    dk, dv, rep = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bkvh, skv, dh), k.dtype),
+            jax.ShapeDtypeStruct((bkvh, skv, dh), v.dtype),
+            jax.ShapeDtypeStruct((bkvh, skv // bkv, REPORT_WIDTH),
+                                 jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
+                                 pltpu.ARBITRARY, pltpu.ARBITRARY),
+        ),
+        interpret=interpret,
+    )(inj_idx, inj_mag, rng, dims, q, g, m, l, di, k, v)
+    return dk, dv, rep
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_groups", "spec", "params", "ft",
                                     "interpret", "out_dtype"))

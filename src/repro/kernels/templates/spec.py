@@ -55,6 +55,7 @@ class KernelSpec:
     grouped = False
     shared_b = False
     tgmm = False
+    flash = False
 
     def __post_init__(self):
         if self.ft_level not in FT_LEVELS:
@@ -265,6 +266,111 @@ class BatchedKernelSpec(KernelSpec):
         from ..autotune import MXU
         n_bands = bk // MXU if ft_level == "tile" else 1
         return operands + acc + max(n_bands, 1) * bn * 4 + bk * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashKernelSpec(KernelSpec):
+    """Variant descriptor for the flash-attention kernel family (PR 5).
+
+    The flash kernels (`kernels.flashft`) are not emitted by `emit.render` —
+    online softmax is its own body — but they ARE registry variants: each
+    direction has its own working set, roofline, and therefore its own
+    autotuning cache key. This spec is the handle the autotuner pipeline
+    (`autotune.best_params` → `search` → `tune_cache`) uses for them.
+
+    The (m, n, k) problem dims map to the attention geometry as
+    (stationary seq dim, streamed seq dim, lane-padded head dim): the tile
+    params come back as bm → the stationary block (bq for "fwd"/"dq", bkv
+    for "dkv"), bn → the streamed block, bk → advisory only (the head dim is
+    always streamed whole — `vmem_bytes` models it via `self.dh`, never
+    `params.bk`).
+
+    Directions:
+      * "fwd" — the forward kernel (2 in-kernel GEMMs: S = QKᵀ, Δ = PV);
+        ``save_stats`` adds the per-row (m, l) softmax-statistic outputs the
+        dedicated backward consumes.
+      * "dq"  — q-block-stationary backward: recomputes S from the saved
+        stats and runs dP = g·Vᵀ and dQ = dS·K (3 GEMMs).
+      * "dkv" — kv-block-stationary backward: S recompute + dP = g·Vᵀ,
+        dV = Pᵀ·g, dK = dSᵀ·Q (4 GEMMs).
+
+    Cache-key tags are ``flashfwd[_stats]`` / ``flashbwd_dq`` /
+    ``flashbwd_dkv`` — new ``/v_*`` components, so existing cache entries
+    (plain GEMM, fused, batched, tgmm) are untouched.
+    """
+    direction: str = "fwd"
+    dh: int = 128            # lane-padded head dim (streamed whole)
+    save_stats: bool = False
+
+    flash = True
+
+    _GEMMS = {"fwd": 2, "dq": 3, "dkv": 4}
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.direction not in self._GEMMS:
+            raise ValueError(f"flash direction must be one of "
+                             f"{tuple(self._GEMMS)}, got {self.direction!r}")
+        if self.dh % 128 != 0 or self.dh <= 0:
+            raise ValueError(f"flash dh must be lane-padded (128-multiple), "
+                             f"got {self.dh}")
+        if self.epilogue or self.extra_outputs:
+            raise ValueError("flash variants take no epilogue chain / extra "
+                             "outputs (softmax statistics are built in)")
+        if self.save_stats and self.direction != "fwd":
+            raise ValueError("save_stats is a forward-direction feature")
+
+    def variant_key(self) -> str:
+        tag = {"fwd": "flashfwd", "dq": "flashbwd_dq",
+               "dkv": "flashbwd_dkv"}[self.direction]
+        if self.save_stats:
+            tag += "_stats"
+        return tag
+
+    def vmem_bytes(self, params, in_bytes: int, ft_level: str) -> int:
+        """Flash working set: double-buffered operand tiles over the full
+        head dim, the f32 accumulator(s), the (stationary × streamed) score
+        transients, and the per-row statistic columns. ``params.bk`` is
+        ignored — the head dim never tiles."""
+        bs, bt = params.bm, params.bn          # stationary / streamed blocks
+        dh = self.dh
+        trans = 3 * bs * bt * 4                # scores, p, ds (≤3 live)
+        if self.direction == "fwd":
+            tiles = 2 * (bs * dh + 2 * bt * dh) * in_bytes
+            acc = bs * dh * 4 + 2 * bs * 4     # acc + m/l scratch
+            stats = 2 * bs * 4 if self.save_stats else 0
+            return tiles + acc + trans + stats
+        if self.direction == "dq":
+            # stationary: q, g + (m, l, di); streamed: k, v
+            tiles = 2 * ((2 * bs + 2 * bt) * dh + 3 * bs) * in_bytes
+            acc = bs * dh * 4
+            return tiles + acc + trans
+        # "dkv" — stationary: k, v; streamed: q, g + (m, l, di)
+        tiles = 2 * ((2 * bs + 2 * bt) * dh + 3 * bt) * in_bytes
+        acc = 2 * bs * dh * 4                  # dk and dv accumulators
+        return tiles + acc + trans
+
+    def epilogue_flops(self, me: int, ne: int) -> float:
+        """Extra per-(stationary × streamed) element work beyond the one
+        S-GEMM the base roofline charges: the remaining in-kernel GEMMs
+        (each 2·dh MACs per score element) plus the softmax/rescale
+        elementwise chain."""
+        extra_gemms = self._GEMMS[self.direction] - 1
+        return (extra_gemms * 2.0 * self.dh + 12.0) * me * ne
+
+    def extra_hbm_bytes(self, me: int, ne: int, in_bytes: int) -> float:
+        """Streams beyond the base model's A/B/C accounting: the second
+        stationary operand (g for the backwards), the f32 statistic columns,
+        and the extra gradient output of the dkv direction."""
+        extra = 0.0
+        if self.direction != "fwd":
+            extra += me * self.dh * in_bytes       # g rides with q
+            extra += 3 * me * 4                    # m, l, di columns
+        elif self.save_stats:
+            extra += 2 * me * 4                    # m, l written once
+        if self.direction == "dkv":
+            extra += me * self.dh * 4              # second (dk) output, f32
+        return extra
 
 
 def fused(bias: bool = False, act: Optional[str] = None,

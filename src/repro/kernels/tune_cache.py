@@ -49,10 +49,13 @@ def cache_key(device_kind: str, shape_class: str, in_bytes: int,
     tuning).
 
     `variant` is the kernel-template variant (`KernelSpec.variant_key()` —
-    fused epilogue chain + non-default dtypes + batched/grouped body).
-    Fused epilogues change the VMEM budget and the roofline intensity, so
-    two variants of one class may tune to different tiles; the plain
-    variant keeps the empty string so PR-1 cache files stay valid.
+    fused epilogue chain + non-default dtypes + batched/grouped body, and
+    since PR 5 the flash-attention family: ``flashfwd[_stats]`` /
+    ``flashbwd_dq`` / ``flashbwd_dkv``, whose (bm, bn) are the stationary/
+    streamed sequence blocks). Fused epilogues change the VMEM budget and
+    the roofline intensity, so two variants of one class may tune to
+    different tiles; the plain variant keeps the empty string so PR-1
+    cache files stay valid.
 
     `batch` is the batch/group-count component of a batched launch —
     ``"b_<n>"`` (uniform batch count) or ``"g_<n>"`` (ragged group count),

@@ -10,9 +10,12 @@ Conventions:
     `kernels.flashft` ragged-causal kernel (PR 4) — ONE Pallas launch with
     both in-kernel GEMMs ABFT-protected, no O(chunk × S) score transient in
     the forward, GQA served through the K/V index maps (KV never
-    repeat-materialized); the backward recomputes through the chunked-jnp
-    oracle (jax.checkpoint'd chunk body), so its GEMMs ride the protected
-    batched kernel. Elsewhere (and under ``Ctx.attn_impl="chunked"``) the
+    repeat-materialized). Since PR 5 the backward is first-class too: the
+    forward saves the per-row (m, l) softmax statistics and the backward
+    runs the dedicated dQ and dK/dV flash kernels (four ABFT-protected
+    backward GEMMs, zero chunked-oracle recompute); stochastic
+    `ft.inject_rate` campaigns ride the in-kernel SEU hook in both
+    directions. Elsewhere (and under ``Ctx.attn_impl="chunked"``) the
     flash-style query-chunked scan runs end to end — O(chunk × S) transient
     memory, never materializing S×S, in both directions. Required for the
     32k prefill shapes.
@@ -240,40 +243,78 @@ def _chunked_core(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
-# flashft-routed training attention (PR 4)
+# flashft-routed training attention (PR 4; dedicated kernel backward PR 5)
 # ---------------------------------------------------------------------------
+
+#: Trace-time switch (PR 5): True — the flash custom_vjp's backward runs the
+#: dedicated dQ/dK/dV Pallas kernels over the forward-saved (m, l) softmax
+#: statistics (zero chunked-oracle recompute, all four backward GEMMs under
+#: in-kernel ABFT). False — the legacy PR-4 path: the backward recomputes
+#: through the chunked-jnp oracle (protected batched kernels, but an
+#: O(chunk·S) transient and one extra softmax pass). Kept for the
+#: before/after benchmark and as an escape hatch.
+FLASH_BWD_USE_KERNEL = True
+
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
 def _flash_attn_cvjp(ft: FTConfig, causal, chunk, q_offset, q3, k3, v3, key):
     """Flash-kernel attention over head-major 3-D operands: q3 (B·H, Sq,
     dh); k3, v3 (B·KVH, Sk, dh). Forward = ONE `kernels.flashft` launch
     (both in-kernel GEMMs ABFT-protected per kv-step, GQA via the K/V index
-    maps, no score transient); backward = recompute through the chunked
-    oracle, whose GEMMs ride the protected batched kernel. Returns
-    (out3, det, maxres)."""
+    maps, no score transient); backward = the dedicated dQ and dK/dV flash
+    kernels over the saved (m, l) statistics — no oracle recompute (see
+    `FLASH_BWD_USE_KERNEL`). ``key`` drives the in-kernel stochastic SEU
+    hook when ``ft.inject_rate > 0`` — campaigns stay on the kernel path in
+    BOTH directions. Returns (out3, det, maxres)."""
     from repro.kernels import ops as kops
     n_rep = q3.shape[0] // k3.shape[0]
-    out, rep = kops.flash_ft(q3, k3, v3, ft=ft, causal=causal, n_rep=n_rep)
+    out, rep = kops.flash_ft(q3, k3, v3, ft=ft, causal=causal, n_rep=n_rep,
+                             key=key)
     det = jnp.sum(rep[..., 0]).astype(jnp.int32)
     maxres = jnp.max(rep[..., 5])
     return out, det, maxres
 
 
 def _flash_attn_fwd(ft, causal, chunk, q_offset, q3, k3, v3, key):
-    out = _flash_attn_cvjp(ft, causal, chunk, q_offset, q3, k3, v3, key)
-    return out, (q3, k3, v3, key)
+    from repro.kernels import ops as kops
+    n_rep = q3.shape[0] // k3.shape[0]
+    if not FLASH_BWD_USE_KERNEL:
+        out = _flash_attn_cvjp(ft, causal, chunk, q_offset, q3, k3, v3, key)
+        return out, (q3, k3, v3, None, None, None, key)
+    # Multi-output forward: the kernel additionally writes the per-row
+    # softmax statistics (m, l) — the saved residual that lets the backward
+    # run as dedicated kernels instead of recomputing the whole forward.
+    out, m, l, rep = kops.flash_ft(q3, k3, v3, ft=ft, causal=causal,
+                                   n_rep=n_rep, save_stats=True, key=key)
+    det = jnp.sum(rep[..., 0]).astype(jnp.int32)
+    maxres = jnp.max(rep[..., 5])
+    return (out, det, maxres), (q3, k3, v3, out, m, l, key)
 
 
 def _flash_attn_bwd(ft, causal, chunk, q_offset, res, cts):
     g3, _, _ = cts                     # ignore summary cotangents
-    q3, k3, v3, key = res
+    q3, k3, v3, o3, m, l, key = res
     bh, sq, dh = q3.shape
     bkvh, sk, _ = k3.shape
     n_rep = bh // bkvh
-    # Fold the GQA repetition into the head axis of a (B'=B·KVH, H'=n_rep,
-    # KVH'=1) problem — row (b·KVH + kv)·n_rep + r of q3 is exactly head r
-    # of batch b·KVH + kv, so the chunked oracle reproduces the kernel's
-    # head→kv-head mapping and its vjp transposes it.
+    if m is not None:
+        # Dedicated flash backward (PR 5): TWO Pallas launches (dQ; dK/dV)
+        # over the saved statistics + the elementwise di = rowsum(g ∘ o).
+        # All four backward GEMMs (dP, dV, dQ, dK) and the in-kernel S
+        # recompute carry the forward's checksum-verify + branchless
+        # correction; the stochastic campaign key is folded so the backward
+        # draws its own SEU stream.
+        from repro.kernels import ops as kops
+        kb = jax.random.fold_in(key, 0x5B) if key is not None else None
+        dq, dk, dv, _, _ = kops.flash_ft_bwd(
+            q3, k3, v3, o3, m, l, g3.astype(q3.dtype), ft=ft, causal=causal,
+            n_rep=n_rep, key=kb)
+        return dq, dk.astype(k3.dtype), dv.astype(v3.dtype), _float0(key)
+    # Legacy (FLASH_BWD_USE_KERNEL=False): recompute through the chunked
+    # oracle. Fold the GQA repetition into the head axis of a (B'=B·KVH,
+    # H'=n_rep, KVH'=1) problem — row (b·KVH + kv)·n_rep + r of q3 is
+    # exactly head r of batch b·KVH + kv, so the chunked oracle reproduces
+    # the kernel's head→kv-head mapping and its vjp transposes it.
     q4 = q3.reshape(bkvh, n_rep, sq, dh).transpose(0, 2, 1, 3)
     k4 = k3[:, :, None, :]
     v4 = v3[:, :, None, :]
@@ -295,14 +336,21 @@ _flash_attn_cvjp.defvjp(_flash_attn_fwd, _flash_attn_bwd)
 def _flash_attention(q, k, v, *, causal, chunk, ft, key, q_offset):
     """4-D front: (B,Sq,H,dh) × (B,Sk,KVH,dh) → (B,Sq,H,dh) through the
     flashft kernel, recording the FT summary at the caller's trace level
-    (outside the custom_vjp boundary, like ft_dot)."""
-    if ft.inject_rate > 0.0:
-        # The kernel has no stochastic-injection hook (deterministic SEUs
-        # only); keeping the key would inject into the BACKWARD recompute
-        # but not the forward — an inconsistent fault model. Campaigns
-        # route to the chunked oracle under "auto"; a forced flash drops
-        # the key so both directions run the same (clean) model.
-        key = None
+    (outside the custom_vjp boundary, like ft_dot — exactly once per call,
+    even when the call is differentiated; backward-pass corrections are
+    applied but not counted, per DESIGN.md)."""
+    if ft.inject_rate > 0.0 and key is not None:
+        from repro.kernels import flashft as _flashft
+        if not _flashft.SUPPORTS_STOCHASTIC_INJECTION:
+            # A fault campaign whose injections silently do not happen is
+            # worse than a crash: it reports a clean run AS the campaign
+            # result (the MPGemmFI injector/kernel-disagreement pitfall).
+            raise ValueError(
+                "flash attention cannot honor the stochastic injection key "
+                f"(ft.inject_rate={ft.inject_rate}): this build's flashft "
+                "kernels lack the in-kernel SEU hook. Use "
+                "attn_impl='chunked' for the campaign instead of letting a "
+                "forced flash path report a clean run.")
     b, sq, h, dh = q.shape
     _, sk, kvh, _ = k.shape
     q3 = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
@@ -332,11 +380,11 @@ def _use_flash(ctx: Ctx, ft: FTConfig, causal: bool, sq: int, sk: int,
                 f"geometry (q_offset == Sk - Sq), got Sq={sq}, Sk={sk}, "
                 f"q_offset={q_offset}")
         return True
-    # auto: the kernel carries the FT policy in-kernel, so it serves the
-    # pallas backend; stochastic (key-driven) SEU campaigns stay on the
-    # jnp oracle, whose injector hooks the accumulator directly.
-    return (ft.enabled and ft.backend == "pallas" and geometry_ok
-            and not (ft.inject_rate > 0.0 and ctx.key is not None))
+    # auto: the kernel carries the FT policy in-kernel — including the
+    # stochastic SEU hook (PR 5), so key-driven `inject_rate` campaigns
+    # stay on the kernel path in both directions instead of falling back
+    # to the jnp oracle.
+    return ft.enabled and ft.backend == "pallas" and geometry_ok
 
 
 def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -347,9 +395,10 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     On the pallas FT backend (or ``ctx.attn_impl="flash"``) this routes to
     the `kernels.flashft` ragged-causal kernel: one Pallas launch, both
     in-kernel GEMMs ABFT-protected, GQA via K/V index maps, and no
-    O(chunk·Sk) score transient in the forward; the backward recomputes
-    through the chunked oracle so its GEMMs ride the protected batched
-    kernel. Otherwise (and under ``ctx.attn_impl="chunked"``) the
+    O(chunk·Sk) score transient in the forward; the backward runs the
+    dedicated dQ/dK/dV flash kernels over the forward-saved (m, l)
+    statistics — four ABFT-protected backward GEMMs, zero oracle
+    recompute. Otherwise (and under ``ctx.attn_impl="chunked"``) the
     query-chunked jnp scan runs both directions — kept as the oracle."""
     if ctx.attn_shard == "heads":
         # Megatron-SP: seq gathered, heads TP-sharded through the core

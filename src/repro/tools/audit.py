@@ -113,6 +113,32 @@ def count_primitives(fn, *args, primitive: str = "pallas_call",
     return walk(jaxpr)
 
 
+def pallas_call_names(fn, *args, **make_jaxpr_kwargs) -> List[str]:
+    """Kernel names of every pallas_call site in `fn(*args)`'s jaxpr, in
+    traversal order (recursing through every sub-jaxpr — custom_vjp
+    branches, scan bodies, …). The name is the kernel body's function name
+    (e.g. ``_flash_ft_kernel``, ``gemm_block_batched``), which is how tests
+    assert that a campaign's jaxpr contains the kernels it claims to
+    exercise — e.g. that a stochastic-injection attention step runs the
+    flash kernels rather than silently falling back to the oracle."""
+    jaxpr = jax.make_jaxpr(fn, **make_jaxpr_kwargs)(*args)
+    names: List[str] = []
+
+    def walk(j):
+        if isinstance(j, jax.extend.core.ClosedJaxpr):
+            j = j.jaxpr
+        for eqn in j.eqns:
+            if eqn.primitive.name == "pallas_call":
+                info = eqn.params.get("name_and_src_info")
+                names.append(getattr(info, "name", None)
+                             or str(eqn.params.get("name", "")))
+            for sub in _sub_jaxprs(eqn.params):
+                walk(sub)
+
+    walk(jaxpr)
+    return names
+
+
 def unprotected_dots(fn, *args, min_flops: float = 0.0,
                      **make_jaxpr_kwargs) -> List[DotRecord]:
     """Trace `fn(*args)` and return the open (outside-kernel) dot_generals

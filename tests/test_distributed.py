@@ -161,3 +161,22 @@ def test_mesh_construction():
         print("MESH OK", m.devices.shape, m2.devices.shape)
     """)
     assert "MESH OK" in out
+
+
+def test_sharding_rule_rank_mismatch_raises():
+    """A PARAM_RULES entry whose rank disagrees with the array must raise —
+    the pre-PR-5 behaviour silently replicated (de-sharded) the weight,
+    turning a sharding-rule typo into an invisible perf regression."""
+    from repro.distributed import sharding
+
+    # sane paths still resolve
+    spec = sharding.spec_for_path("layers/attn/wq", ndim=2)
+    assert len(spec) == 2
+    # stacked leading dim is filled with None, not an error
+    spec3 = sharding.spec_for_path("layers/attn/wq", ndim=3, n_stacked=1)
+    assert len(spec3) == 3 and spec3[0] is None
+    # rank mismatch (rule names more dims than the array has) raises loudly
+    with pytest.raises(ValueError, match="attn.*wq"):
+        sharding.spec_for_path("layers/attn/wq", ndim=1)
+    with pytest.raises(ValueError, match="de-shard"):
+        sharding.spec_for_path("moe/w_gate", ndim=2)

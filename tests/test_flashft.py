@@ -38,9 +38,11 @@ def test_flash_ft_matches_oracle(shape, causal):
 def test_flash_ft_corrects_injected_seu():
     q, k, v = _qkv(2, 256, 256, 64)
     # SEU in the PV accumulator of head 1, q-block 1, kv-step 0, elem (7, 20)
+    # (bq/bkv pinned: the injection addresses a specific grid block, so the
+    # autotuned tile — which may merge blocks — must not re-shape the grid)
     spec = InjectionSpec(row=7, col=20, magnitude=1000.0, k_step=0)
     out, rep = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK, spec=spec, inj_bh=1,
-                            inj_q_block=1)
+                            inj_q_block=1, bq=128, bkv=128)
     want = ref.flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
@@ -173,7 +175,7 @@ def test_flash_ft_property_seu_corrected(row, col, kv_step, mag, sign):
     spec = InjectionSpec(row=row, col=col, magnitude=sign * mag,
                          k_step=kv_step)
     out, rep = ops.flash_ft(q, k, v, ft=ONLINE_BLOCK, spec=spec,
-                            inj_q_block=1)
+                            inj_q_block=1, bq=128, bkv=128)
     want = ref.flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-3, atol=max(1e-3, 4e-7 * mag))
