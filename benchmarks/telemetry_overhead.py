@@ -1,0 +1,172 @@
+"""Telemetry overhead + attribution campaign gates (PR 8).
+
+Three claims, each emitted as a CSV row and asserted in place so a
+regression fails CI rather than the analysis notebook:
+
+  1. **Launch parity** — per-site attribution adds ZERO pallas launches to
+     a pallas-backend train step. The site matrices ride the existing
+     FTReport pytree; everything per-site is scatter-adds on scalars the
+     step already computed. Counted from the optimizer-step jaxpr
+     (`tools.audit.count_primitives`), attribution on vs off
+     (`telemetry.site_attribution(False)` = the pre-PR-8 global triple).
+  2. **Step overhead** — wall-clock A/B of the jitted xla-backend step in
+     both modes (CPU trend signal; the structural launch-parity row is
+     what transfers to TPU).
+  3. **Attribution campaign** — the ISSUE's acceptance criterion: an
+     injection campaign filtered to ONE named site (an MoE expert GEMM,
+     ``moe_gate``) run through a real `MetricsSink` with a JSONL emitter.
+     The JSONL must parse; detections must attribute to exactly that site
+     (all other sites zero); the SDC-storm detector must fire on it.
+
+``REPRO_BENCH_SMOKE=1`` shrinks shapes. Run via
+``python -m benchmarks.run --only telemetry_overhead``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig, RunConfig
+from repro.core import telemetry
+from repro.core.policy import FTConfig, ONLINE_BLOCK
+from repro.models import model_zoo
+from repro.models.blocks import Ctx
+from repro.tools import audit
+from repro.tools import metrics as metrics_lib
+from .common import emit, time_fn
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def _cfgs(smoke: bool):
+    if smoke:
+        dims = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                    head_dim=16, d_ff=128, vocab_size=512)
+        moe_dims = dict(n_experts=4, top_k=2, expert_d_ff=64)
+        shape = (2, 32)
+    else:
+        dims = dict(n_layers=2, d_model=256, n_heads=8, n_kv_heads=4,
+                    head_dim=32, d_ff=512, vocab_size=2048)
+        moe_dims = dict(n_experts=8, top_k=2, expert_d_ff=256)
+        shape = (2, 128)
+    dense = ModelConfig(arch_id="tel-dense", family="dense", **dims)
+    moe = ModelConfig(arch_id="tel-moe", family="moe",
+                      moe=MoEConfig(**moe_dims), **dims)
+    return dense, moe, shape
+
+
+def _batch(cfg, shape):
+    b, s = shape
+    k = jax.random.PRNGKey(0)
+    return {"tokens": jax.random.randint(k, (b, s), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k, (b, s), 0, cfg.vocab_size)}
+
+
+def _train_step_parts(cfg, shape, backend: str):
+    from repro.optim import adamw
+    from repro.train import train_loop
+    run = RunConfig(model=cfg, ft=FTConfig(level="block", backend=backend),
+                    dtype="float32", attn_chunk=32)
+    tc = train_loop.TrainConfig(total_steps=10, warmup_steps=2)
+    opt_cfg = adamw.AdamWConfig()
+    params = model_zoo.module_for(cfg).init(cfg, jax.random.PRNGKey(0),
+                                            jnp.float32)
+    opt_state = train_loop.init_opt_state(params, opt_cfg, tc)
+    args = (params, opt_state, _batch(cfg, shape), jnp.zeros((), jnp.int32),
+            None)
+    # fresh closure per call: jax's tracing cache is keyed on the callable,
+    # so one reused fn would return the pre-toggle jaxpr
+    mk = lambda: train_loop.make_train_step(cfg, run, opt_cfg, tc)
+    return mk, args
+
+
+# ---------------------------------------------------------------------------
+# 1 + 2: launch parity and wall-clock A/B
+# ---------------------------------------------------------------------------
+
+def _launch_parity(cfg, shape) -> None:
+    mk, args = _train_step_parts(cfg, shape, backend="pallas")
+    n_on = audit.count_primitives(mk(), *args)
+    with telemetry.site_attribution(False):
+        n_off = audit.count_primitives(mk(), *args)
+    extra = n_on - n_off
+    emit("telemetry_overhead/pallas_launch_parity", float("nan"),
+         f"attributed={n_on} baseline={n_off} extra_launches={extra}")
+    assert extra == 0, (
+        f"per-site attribution added {extra} pallas launches "
+        f"({n_off} -> {n_on})")
+
+
+def _step_overhead(cfg, shape) -> None:
+    mk, args = _train_step_parts(cfg, shape, backend="xla")
+    f_on = jax.jit(mk())
+    jax.block_until_ready(f_on(*args)[2]["loss"])     # compile in-mode
+    with telemetry.site_attribution(False):
+        f_off = jax.jit(mk())
+        jax.block_until_ready(f_off(*args)[2]["loss"])
+    us_off = time_fn(f_off, *args)
+    us_on = time_fn(f_on, *args)
+    over = 100.0 * (us_on / us_off - 1.0)
+    emit("telemetry_overhead/step_attributed", us_on,
+         f"baseline_us={us_off:.1f} overhead={over:+.1f}%")
+
+
+# ---------------------------------------------------------------------------
+# 3: single-site injection campaign through the metrics sink
+# ---------------------------------------------------------------------------
+
+def _campaign(cfg, shape, target_site: str = "moe_gate",
+              n_steps: int = 8) -> None:
+    mod = model_zoo.module_for(cfg)
+    params = mod.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+    batch = _batch(cfg, shape)
+    ft = ONLINE_BLOCK.replace(inject_rate=1.0)
+
+    @jax.jit
+    def step(p, key):
+        ctx = Ctx(ft=ft, key=key, dtype=jnp.float32,
+                  inject_sites=(target_site,))
+        loss, mets = mod.loss_fn(p, batch, cfg, ctx, remat=False, chunk=32)
+        return loss, mets["ft"]
+
+    path = os.path.join(tempfile.mkdtemp(prefix="telemetry_bench_"),
+                        "metrics.jsonl")
+    mem = metrics_lib.MemoryEmitter()
+    sink = metrics_lib.MetricsSink(
+        [metrics_lib.JsonlEmitter(path), mem],
+        detector=telemetry.StormDetector(window=8, min_detections=3.0))
+    storms = []
+    sink.on_storm(storms.append)
+    for i in range(n_steps):
+        _, rep = step(params, jax.random.PRNGKey(100 + i))
+        sink.record_ft(rep, step=i)
+        sink.step_end(i)
+    sink.close()
+
+    records = metrics_lib.read_jsonl(path)           # must parse as JSONL
+    assert len(records) == n_steps
+    agg = metrics_lib.aggregate_sites(records)
+    hit = {s: a["detected"] for s, a in agg.items() if a["detected"] > 0}
+    assert target_site in hit, f"no detections at {target_site}: {agg}"
+    assert set(hit) == {target_site}, (
+        f"detections leaked to other sites: {hit}")
+    assert any(a.site == target_site for a in storms), (
+        f"storm detector stayed quiet through {n_steps} injected steps")
+    assert mem.records == records or len(mem.records) == len(records)
+    emit("telemetry_overhead/campaign_single_site", float("nan"),
+         f"site={target_site} detections={hit[target_site]:.0f} "
+         f"steps={n_steps} storms={len(storms)} jsonl_ok=1")
+
+
+def run() -> None:
+    dense, moe, shape = _cfgs(_smoke())
+    _launch_parity(dense, shape)
+    _step_overhead(dense, shape)
+    _campaign(moe, shape)

@@ -205,16 +205,17 @@ def _ft_dot_bwd(ft, spec, bwd_inject, res, cts):
 _ft_dot_cvjp.defvjp(_ft_dot_fwd, _ft_dot_bwd)
 
 
-def _record(det, maxres, corrects: bool) -> None:
+def _record(det, maxres, corrects: bool,
+            site: Optional[str] = None) -> None:
     scope = telemetry.current_scope()
     if scope is not None:
-        scope.record_summary(det, maxres, corrects)
+        scope.record_summary(det, maxres, corrects, site=site)
 
 
 def ft_dot(x: jax.Array, w: jax.Array, ft: FTConfig = FT_OFF,
            key: Optional[jax.Array] = None,
            spec: Optional[InjectionSpec] = None,
-           bwd_inject=None) -> jax.Array:
+           bwd_inject=None, site: Optional[str] = None) -> jax.Array:
     """Fault-tolerant dense projection: (…, K) @ (K, N) → (…, N).
 
     ft    — FTConfig policy (see repro.core.policy).
@@ -223,13 +224,16 @@ def ft_dot(x: jax.Array, w: jax.Array, ft: FTConfig = FT_OFF,
     spec  — optional deterministic single-SEU injection (tests/benchmarks).
     bwd_inject — optional ("dx"|"dw", InjectionSpec): land a deterministic
             SEU inside the named *backward* GEMM (conformance tests).
+    site  — optional structured telemetry label for this call site (e.g.
+            "w_gate"); attributes the recorded (det, max_residual) summary
+            to a stable per-site slot in the step's FTReport.
     """
     _check_bwd_inject(ft, bwd_inject)
     if not ft.enabled and key is None and spec is None:
         # Fast path: a plain dot XLA can pattern-match without custom_vjp.
         return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
     y, det, maxres = _ft_dot_cvjp(ft, spec, bwd_inject, x, w, key)
-    _record(det, maxres, ft.corrects)
+    _record(det, maxres, ft.corrects, site)
     return y
 
 
@@ -373,7 +377,7 @@ def ft_dot_fused(x: jax.Array, w: jax.Array,
                  ft: FTConfig = FT_OFF,
                  key: Optional[jax.Array] = None,
                  spec: Optional[InjectionSpec] = None,
-                 bwd_inject=None) -> jax.Array:
+                 bwd_inject=None, site: Optional[str] = None) -> jax.Array:
     """Fault-tolerant fused-epilogue projection:
     (…, K) @ (K, N) → act((…, N) + bias).
 
@@ -390,7 +394,8 @@ def ft_dot_fused(x: jax.Array, w: jax.Array,
     ("dx"|"dw", InjectionSpec) lands an SEU in the named backward GEMM."""
     _check_bwd_inject(ft, bwd_inject)
     if bias is None and act is None:
-        return ft_dot(x, w, ft=ft, key=key, spec=spec, bwd_inject=bwd_inject)
+        return ft_dot(x, w, ft=ft, key=key, spec=spec, bwd_inject=bwd_inject,
+                      site=site)
     if not ft.enabled and key is None and spec is None:
         # Fast path: plain fused composition XLA pattern-matches.
         y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
@@ -399,7 +404,7 @@ def ft_dot_fused(x: jax.Array, w: jax.Array,
         return _epilogue_fn(act)(y).astype(x.dtype)
     y, det, maxres = _ft_fused_cvjp(ft, spec, act, bwd_inject, x, w, bias,
                                     key)
-    _record(det, maxres, ft.corrects)
+    _record(det, maxres, ft.corrects, site)
     return y
 
 
@@ -470,15 +475,17 @@ _ft_bmm_cvjp.defvjp(_ft_bmm_fwd, _ft_bmm_bwd)
 
 def ft_batched_dot(a: jax.Array, b: jax.Array, ft: FTConfig = FT_OFF,
                    key: Optional[jax.Array] = None,
-                   spec: Optional[InjectionSpec] = None) -> jax.Array:
+                   spec: Optional[InjectionSpec] = None,
+                   site: Optional[str] = None) -> jax.Array:
     """Fault-tolerant batched matmul: (…, M, K) @ (…, K, N) → (…, M, N).
     Leading dims must match (broadcast not supported — callers reshape).
     On `ft.backend == "pallas"` the whole batch runs as one batched Pallas
-    kernel with per-slice checksums/report rows (PR 3)."""
+    kernel with per-slice checksums/report rows (PR 3). `site` labels the
+    call for per-site telemetry attribution (see ft_dot)."""
     if not ft.enabled and key is None and spec is None:
         return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
     y, det, maxres = _ft_bmm_cvjp(ft, spec, a, b, key)
-    _record(det, maxres, ft.corrects)
+    _record(det, maxres, ft.corrects, site)
     return y
 
 
@@ -741,7 +748,8 @@ def ft_grouped_matmul_buffer(buf: jax.Array, w: jax.Array, gid: jax.Array,
                              row_end: jax.Array, ft: FTConfig = FT_OFF,
                              key: Optional[jax.Array] = None,
                              spec: Optional[InjectionSpec] = None,
-                             bwd_inject=None) -> jax.Array:
+                             bwd_inject=None,
+                             site: Optional[str] = None) -> jax.Array:
     """Buffer-space `ft_grouped_matmul`: operate directly on a group-sorted
     (t_buf, K) buffer (see `kernels.grouped.layout`) and return the
     (t_buf, N) result in buffer space — lets a chain of grouped GEMMs over
@@ -755,7 +763,7 @@ def ft_grouped_matmul_buffer(buf: jax.Array, w: jax.Array, gid: jax.Array,
         return _grouped_dot_jnp(buf, w, gid).astype(buf.dtype)
     y_buf, det, maxres = _ft_grouped_cvjp(ft, spec, bwd_inject, buf, w, gid,
                                           row_end, key)
-    _record(det, maxres, ft.corrects)
+    _record(det, maxres, ft.corrects, site)
     return y_buf
 
 
@@ -763,7 +771,8 @@ def ft_grouped_matmul(x: jax.Array, w: jax.Array, group_ids: jax.Array,
                       ft: FTConfig = FT_OFF,
                       key: Optional[jax.Array] = None,
                       spec: Optional[InjectionSpec] = None,
-                      bwd_inject=None) -> jax.Array:
+                      bwd_inject=None,
+                      site: Optional[str] = None) -> jax.Array:
     """Fault-tolerant ragged grouped matmul: y[t] = x[t] @ w[group_ids[t]].
 
     x: (T, K) rows in caller order; w: (G, K, N); group_ids: int32 (T,).
@@ -782,7 +791,7 @@ def ft_grouped_matmul(x: jax.Array, w: jax.Array, group_ids: jax.Array,
     buf = glayout.scatter_rows(x, lay)
     y_buf = ft_grouped_matmul_buffer(buf, w, lay.gid, lay.row_end, ft=ft,
                                      key=key, spec=spec,
-                                     bwd_inject=bwd_inject)
+                                     bwd_inject=bwd_inject, site=site)
     return glayout.gather_rows(y_buf, lay)
 
 

@@ -1,17 +1,163 @@
-"""ABFT error telemetry.
+"""ABFT error telemetry — per-site attribution, SDC-storm detection.
 
 Every `ft_dot`/`ft_einsum` call site contributes a (detected, corrected)
 counter pair. Inside jit we cannot mutate Python state, so call sites return
-their verdicts and the step function aggregates them into an `FTReport` pytree
-that crosses the jit boundary once per step — at 1000+ node scale this is the
-signal SREs alert on (SDC storms on a failing part are a real phenomenon).
+their verdicts and the step function aggregates them into an `FTReport`
+pytree that crosses the jit boundary once per step — at 1000+ node scale
+this is the signal SREs alert on (SDC storms on a failing part are a real
+phenomenon).
+
+Since PR 8 the report is *attributed*: every protected call site carries a
+structured label (``"w_gate"``, ``"attn_qk"``, ``"moe_down"`` …) that a
+trace-time **site registry** maps to a stable small-integer id, and the
+report carries fixed-width site-indexed counter vectors next to the scalar
+totals. The width is ``site_capacity()`` — a static constant, NOT the
+current registry size — so the pytree structure is identical everywhere in
+a trace (scan carries, remat bodies, custom_vjp aux outputs) regardless of
+registration order. Scanned layer stacks place each layer's site vector at
+its own row (``merge_at``), so the per-step report resolves ``(layer,
+site)`` pairs: row 0 is the un-layered residue (lm-head, embeddings), row
+``1 + i`` is layer ``i``.
+
+Scalar totals are computed by exactly the same reduction sequence as
+before the attribution work, so the global triple stays bit-identical —
+the conformance suite asserts ``sum(site_detected) == detected``.
+
+The host side of the pipeline lives in `repro.tools.metrics` (step-boundary
+sink, JSONL/stdout/in-memory emitters); the `StormDetector` here is the
+sliding-window per-site rate alarm it feeds — the runtime signal the
+adaptive-FT policy (`core.policy`, ROADMAP direction 3) subscribes to.
 """
 from __future__ import annotations
 
-from typing import Any, List, NamedTuple
+import contextlib
+import dataclasses
+import math
+from collections import deque
+from typing import (Any, Callable, Dict, List, Mapping, NamedTuple, Optional,
+                    Sequence, Tuple, Union)
 
 import jax
 import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# site registry
+# ---------------------------------------------------------------------------
+
+#: Fixed width of the site axis of every report. A *static* constant: the
+#: report pytree must have identical structure at every point of a trace
+#: (scan carry init happens before the body registers its sites), so the
+#: width cannot follow the registry size. Slot 0 is reserved for
+#: unattributed records; the last slot aliases every registration past
+#: capacity (the "_overflow" bucket) instead of growing the vector.
+_SITE_CAPACITY = 64
+
+#: Trace-time switch: with attribution off the site axis collapses to
+#: width 1 (every record lands in the unattributed slot) — the
+#: "global-triple" baseline `benchmarks/telemetry_overhead.py` compares
+#: against. Toggle via `site_attribution(False)`.
+_ATTRIBUTION = True
+
+UNATTRIBUTED = "_unattributed"
+OVERFLOW = "_overflow"
+
+
+class SiteRegistry:
+    """Label ↔ id map for protected call sites. Ids are assigned in first-
+    registration order and stay stable for the process lifetime (they are
+    baked into traced programs). The JSONL sink writes *labels*, so
+    cross-process stability comes from labels, not ids."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._labels: List[str] = [UNATTRIBUTED]
+        self._ids: Dict[str, int] = {UNATTRIBUTED: 0}
+
+    def site(self, label: str) -> int:
+        sid = self._ids.get(label)
+        if sid is not None:
+            return sid
+        if len(self._labels) >= self.capacity - 1:
+            # capacity-1 real slots + the overflow alias at capacity-1
+            if OVERFLOW not in self._ids:
+                self._ids[OVERFLOW] = self.capacity - 1
+            return self.capacity - 1
+        sid = len(self._labels)
+        self._labels.append(label)
+        self._ids[label] = sid
+        return sid
+
+    def label(self, sid: int) -> str:
+        if sid < len(self._labels):
+            return self._labels[sid]
+        if sid == self.capacity - 1 and OVERFLOW in self._ids:
+            return OVERFLOW
+        return f"_site{sid}"
+
+    def labels(self) -> List[str]:
+        return list(self._labels)
+
+
+_REGISTRY = SiteRegistry(_SITE_CAPACITY)
+
+
+def registry() -> SiteRegistry:
+    return _REGISTRY
+
+
+def site_capacity() -> int:
+    return _SITE_CAPACITY
+
+
+def site_width() -> int:
+    """Static width of the report's site axis under the current attribution
+    mode (capacity, or 1 for the global-triple baseline)."""
+    return _SITE_CAPACITY if _ATTRIBUTION else 1
+
+
+def site_id(label: Optional[str]) -> int:
+    """Register-or-look-up a site label → stable id (trace time only)."""
+    if label is None or not _ATTRIBUTION:
+        return 0
+    return _REGISTRY.site(label)
+
+
+def site_label(sid: int) -> str:
+    return _REGISTRY.label(sid) if _ATTRIBUTION else UNATTRIBUTED
+
+
+def site_labels() -> List[str]:
+    """Currently registered labels, index-aligned with site ids."""
+    return _REGISTRY.labels() if _ATTRIBUTION else [UNATTRIBUTED]
+
+
+def reset_sites(capacity: Optional[int] = None) -> None:
+    """Reset the registry (tests). Changing capacity invalidates any report
+    produced under the old width — do not mix across a single trace, and
+    re-trace (fresh jit) anything that recorded sites before the reset."""
+    global _REGISTRY, _SITE_CAPACITY
+    if capacity is not None:
+        _SITE_CAPACITY = capacity
+    _REGISTRY = SiteRegistry(_SITE_CAPACITY)
+
+
+@contextlib.contextmanager
+def site_attribution(enabled: bool = True):
+    """Trace-time context: disable per-site attribution (width-1 site axis,
+    the pre-PR-8 global-triple behaviour) for A/B overhead measurement."""
+    global _ATTRIBUTION
+    prev = _ATTRIBUTION
+    _ATTRIBUTION = enabled
+    try:
+        yield
+    finally:
+        _ATTRIBUTION = prev
+
+
+# ---------------------------------------------------------------------------
+# report pytree
+# ---------------------------------------------------------------------------
 
 
 class FTReport(NamedTuple):
@@ -23,32 +169,139 @@ class FTReport(NamedTuple):
     detected: jax.Array    # f32 count — call sites that flagged an error
     corrected: jax.Array   # f32 count — corrections applied
     max_residual: jax.Array  # f32 — worst |δ| observed (0 when clean)
+    # Per-site attribution (PR 8): (rows, site_width()) f32 matrices. Row 0
+    # is unlayered; row 1+i is layer i (see `merge_at`). Column j is the
+    # site with id j in the registry. Totals above remain the single source
+    # of truth for the global counts (bit-identical to the pre-attribution
+    # reduction); the site matrices decompose them.
+    site_detected: jax.Array
+    site_corrected: jax.Array
+    site_max_residual: jax.Array
 
     @staticmethod
-    def empty() -> "FTReport":
+    def empty(rows: int = 1) -> "FTReport":
         z = jnp.zeros((), jnp.float32)
-        return FTReport(z, z, jnp.zeros((), jnp.float32))
+        zs = jnp.zeros((rows, site_width()), jnp.float32)
+        return FTReport(z, z, jnp.zeros((), jnp.float32), zs, zs, zs)
+
+    @property
+    def n_rows(self) -> int:
+        return self.site_detected.shape[-2]
+
+    def expand_rows(self, rows: int) -> "FTReport":
+        """Zero-pad the site matrices to `rows` rows (row semantics are
+        absolute, so padding at the bottom preserves alignment)."""
+        have = self.n_rows
+        if have == rows:
+            return self
+        if have > rows:
+            raise ValueError(f"cannot shrink report rows {have} -> {rows}")
+        pad = [(0, 0)] * (self.site_detected.ndim - 2) + [(0, rows - have),
+                                                          (0, 0)]
+        return self._replace(
+            site_detected=jnp.pad(self.site_detected, pad),
+            site_corrected=jnp.pad(self.site_corrected, pad),
+            site_max_residual=jnp.pad(self.site_max_residual, pad))
 
     def merge(self, other: "FTReport") -> "FTReport":
+        rows = max(self.n_rows, other.n_rows)
+        a, b = self.expand_rows(rows), other.expand_rows(rows)
+        return FTReport(
+            detected=a.detected + b.detected,
+            corrected=a.corrected + b.corrected,
+            max_residual=jnp.maximum(a.max_residual, b.max_residual),
+            site_detected=a.site_detected + b.site_detected,
+            site_corrected=a.site_corrected + b.site_corrected,
+            site_max_residual=jnp.maximum(a.site_max_residual,
+                                          b.site_max_residual))
+
+    def merge_at(self, other: "FTReport", row) -> "FTReport":
+        """Merge `other` (a single-row report, e.g. one scanned layer's
+        `scoped` result) with its site row placed at row `row` of self —
+        `row` may be traced (the scan's layer index): this is how a scanned
+        stack contributes (layer, site)-resolved rows through the carry."""
+        if other.n_rows != 1:
+            raise ValueError("merge_at expects a single-row report "
+                             f"(got {other.n_rows} rows)")
+        row = jnp.asarray(row, jnp.int32)
         return FTReport(
             detected=self.detected + other.detected,
             corrected=self.corrected + other.corrected,
             max_residual=jnp.maximum(self.max_residual, other.max_residual),
-        )
+            site_detected=self.site_detected.at[row].add(
+                other.site_detected[0]),
+            site_corrected=self.site_corrected.at[row].add(
+                other.site_corrected[0]),
+            site_max_residual=self.site_max_residual.at[row].max(
+                other.site_max_residual[0]))
+
+
+def reduce_microbatch(stacked: FTReport) -> FTReport:
+    """Collapse a leading microbatch/stack axis (e.g. the metrics pytree a
+    gradient-accumulation `scan` returns): counters SUM across microbatches
+    — they are event counts, not rates — and residuals take the max.
+    (The old dtype-keyed sum-vs-mean branch silently *averaged* the f32
+    counters; see train_loop.)"""
+    return FTReport(
+        detected=jnp.sum(stacked.detected, axis=0),
+        corrected=jnp.sum(stacked.corrected, axis=0),
+        max_residual=jnp.max(stacked.max_residual, axis=0),
+        site_detected=jnp.sum(stacked.site_detected, axis=0),
+        site_corrected=jnp.sum(stacked.site_corrected, axis=0),
+        site_max_residual=jnp.max(stacked.site_max_residual, axis=0))
+
+
+def site_rows(report: FTReport, *, include_zero: bool = False
+              ) -> List[Dict[str, Any]]:
+    """Host-side decode of a materialized report's site matrices into
+    [{site, layer, detected, corrected, max_residual}] rows. `layer` is
+    None for row 0 (unlayered) and i for row 1+i. Zero rows are dropped
+    unless `include_zero`."""
+    import numpy as np
+    det = np.asarray(report.site_detected, np.float64)
+    cor = np.asarray(report.site_corrected, np.float64)
+    mr = np.asarray(report.site_max_residual, np.float64)
+    det = det.reshape(-1, det.shape[-1]) if det.ndim > 2 else det
+    labels = site_labels()
+    rows: List[Dict[str, Any]] = []
+    for r in range(det.shape[0]):
+        for s in range(det.shape[1]):
+            if not include_zero and det[r, s] == 0 and cor[r, s] == 0 \
+                    and mr[r, s] == 0:
+                continue
+            rows.append({
+                "site": labels[s] if s < len(labels) else site_label(s),
+                "layer": None if r == 0 else r - 1,
+                "detected": float(det[r, s]),
+                "corrected": float(cor[r, s]),
+                "max_residual": float(mr[r, s]),
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# trace-time collection
+# ---------------------------------------------------------------------------
+
+# One recorded item: (site_id, detected_f32, corrected_f32, maxres_f32) —
+# assembled into the report's scalar totals with exactly the pre-attribution
+# reduction sequence, plus a scatter into the site matrices.
+_Item = Tuple[int, jax.Array, jax.Array, jax.Array]
 
 
 class FTScope:
     """Trace-time collector. Model code calls `scope.record(verdict,
-    corrected=...)`; the step function materializes `scope.report()`.
+    corrected=..., site=...)`; the step function materializes
+    `scope.report()`.
 
     Thread-compatible with jit tracing: a fresh scope is created per trace.
     """
 
     def __init__(self) -> None:
-        self._items: List[FTReport] = []
+        self._items: List[Union[_Item, FTReport]] = []
 
     def record(self, detected: jax.Array, magnitude: jax.Array,
-               corrected: bool) -> None:
+               corrected: bool, site: Optional[str] = None) -> None:
         # Telemetry is diagnostics, not a differentiable quantity:
         # stop_gradient here so reports threading scan carries / remat
         # regions never send (even materialized-zero) cotangents back into
@@ -57,29 +310,34 @@ class FTScope:
         magnitude = jax.lax.stop_gradient(magnitude)
         det_any = jnp.any(detected)
         d = det_any.astype(jnp.float32)
-        self._items.append(FTReport(
-            detected=d,
-            corrected=d if corrected else jnp.zeros((), jnp.float32),
-            max_residual=jnp.max(jnp.abs(magnitude)).astype(jnp.float32),
-        ))
+        c = d if corrected else jnp.zeros((), jnp.float32)
+        mr = jnp.max(jnp.abs(magnitude)).astype(jnp.float32)
+        self._items.append((site_id(site), d, c, mr))
 
     def record_summary(self, det_count: jax.Array, max_residual: jax.Array,
-                       corrected: bool) -> None:
+                       corrected: bool, site: Optional[str] = None) -> None:
         """Record a pre-reduced (count, max|δ|) summary (the form returned
         across the custom_vjp boundary by ft_dot). stop_gradient'ed like
         `record` — see the comment there."""
         d = jax.lax.stop_gradient(det_count).astype(jnp.float32)
-        self._items.append(FTReport(
-            detected=d,
-            corrected=d if corrected else jnp.zeros((), jnp.float32),
-            max_residual=jax.lax.stop_gradient(max_residual)
-            .astype(jnp.float32),
-        ))
+        c = d if corrected else jnp.zeros((), jnp.float32)
+        mr = jax.lax.stop_gradient(max_residual).astype(jnp.float32)
+        self._items.append((site_id(site), d, c, mr))
 
     def report(self) -> FTReport:
         rep = FTReport.empty()
+        w = site_width()
         for item in self._items:
-            rep = rep.merge(item)
+            if isinstance(item, FTReport):
+                rep = rep.merge(item)
+                continue
+            sid, d, c, mr = item
+            z = jnp.zeros((1, w), jnp.float32)
+            rep = rep.merge(FTReport(
+                detected=d, corrected=c, max_residual=mr,
+                site_detected=z.at[0, sid].add(d),
+                site_corrected=z.at[0, sid].add(c),
+                site_max_residual=z.at[0, sid].max(mr)))
         return rep
 
 
@@ -126,7 +384,9 @@ def scoped(fn):
     This is how telemetry crosses scan/remat boundaries: the scope lives and
     dies *inside* the traced body (no tracers escape); the materialized
     FTReport is threaded through the scan carry by the caller. Model layer
-    scans use this so a 94-layer model still reports per-step SDC counts.
+    scans use this so a 94-layer model still reports per-step SDC counts —
+    and, with per-site attribution, place each layer's single-row report at
+    its own row via `FTReport.merge_at(rep_l, 1 + layer_idx)`.
     """
     s = push_scope()
     try:
@@ -134,3 +394,108 @@ def scoped(fn):
     finally:
         pop_scope()
     return out, s.report()
+
+
+# ---------------------------------------------------------------------------
+# SDC-storm detection (host side)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StormAlert:
+    """One fired alarm: `site`'s detection rate over the trailing window
+    spiked above the cross-site background — the "SDC storm on a failing
+    part" signal. Delivered to every registered callback and recorded by
+    the metrics sink."""
+    site: str
+    step: int
+    window_steps: int
+    detections: float          # detections at `site` over the window
+    rate: float                # detections / window step
+    background_rate: float     # median per-site rate of the OTHER sites
+    threshold_rate: float      # the rate that tripped the alarm
+
+
+class StormDetector:
+    """Sliding-window per-site SDC rate alarm.
+
+    Feed it per-step per-site detection counts (`observe`); it fires a
+    `StormAlert` when one site's windowed rate stands out against the
+    cross-site background:
+
+        fire iff  window_sum >= min_detections
+              and rate >= max(spike_factor * median(other sites' rates),
+                              min_detections / window)
+
+    A uniform elevated background (every site detecting at the same rate —
+    e.g. a global tau mis-calibration) therefore stays quiet: that is a
+    threshold problem, not a failing part. After firing, a site is re-armed
+    only after `window` further observed steps, so a sustained storm alerts
+    once per window rather than every step.
+
+    Host-side and pure-Python by design — it consumes materialized per-step
+    reports at the step boundary (via `tools.metrics.MetricsSink`), never
+    traced values. `on_alert` registers a callback: the runtime entry point
+    a future adaptive-FT policy subscribes to (promote a storming site's FT
+    level; see ROADMAP direction 3).
+    """
+
+    def __init__(self, window: int = 16, spike_factor: float = 8.0,
+                 min_detections: float = 3.0):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.window = window
+        self.spike_factor = spike_factor
+        self.min_detections = min_detections
+        self._hist: deque = deque(maxlen=window)   # (step, {site: count})
+        self._rearm_at: Dict[str, int] = {}        # site -> #obs when re-armed
+        self._n_observed = 0
+        self._callbacks: List[Callable[[StormAlert], None]] = []
+        self.alerts: List[StormAlert] = []
+
+    def on_alert(self, cb: Callable[[StormAlert], None]) -> None:
+        self._callbacks.append(cb)
+
+    def observe(self, step: int, site_counts: Mapping[str, float]
+                ) -> List[StormAlert]:
+        """Push one step's per-site detection counts; returns alerts fired
+        by this observation (also delivered to callbacks)."""
+        self._hist.append((int(step), dict(site_counts)))
+        self._n_observed += 1
+        n = len(self._hist)
+        sums: Dict[str, float] = {}
+        for _, counts in self._hist:
+            for site, c in counts.items():
+                sums[site] = sums.get(site, 0.0) + float(c)
+        if not sums:
+            return []
+        rates = {site: s / n for site, s in sums.items()}
+        fired: List[StormAlert] = []
+        for site, total in sums.items():
+            if total < self.min_detections:
+                continue
+            if self._n_observed < self._rearm_at.get(site, 0):
+                continue
+            others = [r for s, r in rates.items() if s != site]
+            bg = _median(others) if others else 0.0
+            threshold = max(self.spike_factor * bg,
+                            self.min_detections / self.window)
+            if rates[site] >= threshold:
+                alert = StormAlert(site=site, step=int(step), window_steps=n,
+                                   detections=total, rate=rates[site],
+                                   background_rate=bg,
+                                   threshold_rate=threshold)
+                self._rearm_at[site] = self._n_observed + self.window
+                self.alerts.append(alert)
+                fired.append(alert)
+                for cb in self._callbacks:
+                    cb(alert)
+        return fired
+
+
+def _median(xs: Sequence[float]) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    m = len(s) // 2
+    return s[m] if len(s) % 2 else 0.5 * (s[m - 1] + s[m])

@@ -125,6 +125,37 @@ Worked example — flash attention protected in BOTH directions (PR 5; what
     # `tools.audit.pallas_call_names` asserts the campaign's jaxpr contains
     # the flash kernels (tests/test_flash_backward.py).
 
+Worked example — per-site FT telemetry end to end (PR 8; the observability
+layer over everything above)::
+
+    from repro.core import telemetry
+    from repro.models.blocks import Ctx
+    from repro.tools import metrics
+
+    # 1. Attribution: every Ctx-routed GEMM carries a structured site
+    #    label ("wq", "moe_gate", "attn_flash", …); a trace-time registry
+    #    maps labels to stable column ids of the report's fixed-width site
+    #    matrices, and the layer scan places each layer's rows at
+    #    1 + layer_idx (row 0 = unlayered). The SCALAR totals are reduced
+    #    exactly as before PR 8 — sum(site_detected) == detected,
+    #    bit-identical to the global triple.
+    ctx = Ctx(ft=ftc, key=key, inject_sites=("moe_gate",))  # filtered SEUs
+    loss, mets = mod.loss_fn(params, batch, cfg, ctx)
+    telemetry.site_rows(mets["ft"])   # [{site, layer, detected, …}, …]
+
+    # 2. Sink: one host-side step boundary; JSONL/stdout/in-memory
+    #    emitters; the storm detector rides along.
+    sink = metrics.MetricsSink([metrics.JsonlEmitter("metrics.jsonl")])
+    sink.on_storm(lambda a: print("SDC storm:", a.site, a.rate))
+    sink.record_ft(mets["ft"], step=step); sink.step_end(step, loss=loss)
+
+    # Zero-cost claim: the site matrices ride the existing report pytree —
+    # benchmarks/telemetry_overhead.py gates ZERO extra pallas launches vs
+    # telemetry.site_attribution(False), and runs the single-site campaign
+    # (detections attribute to exactly the injected site) in CI.
+    # Spans: kernel dispatch fronts wear @traced("kernel/…") name scopes;
+    # `python -m benchmarks.run --trace-dir d/` dumps a Perfetto trace.
+
 The epilogue extension hook is unchanged (register an `EpilogueOp` — give
 it a ``grad`` rule and it can also ride the act_grad multi-output variant
 — see `templates/epilogues.py`); batched/grouped specs accept aux-free

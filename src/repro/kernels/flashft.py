@@ -69,6 +69,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.policy import FTConfig, InjectionSpec
+from repro.tools.trace import traced
 from .templates import emit as temit
 from .templates import registry as tregistry
 
@@ -551,6 +552,7 @@ def _flash_dkv_kernel(inj_ref, mag_ref, rng_ref, dims_ref,
 # jit'd entry points (launch construction lives in templates.registry)
 # ---------------------------------------------------------------------------
 
+@traced("kernel/flashft/fwd")
 @functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal", "ft",
                                              "interpret", "protect_qk",
                                              "scale", "n_rep", "save_stats"))
@@ -589,6 +591,7 @@ def flash_ft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         n_rep=n_rep, save_stats=save_stats)
 
 
+@traced("kernel/flashft/dq")
 @functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal", "ft",
                                              "interpret", "protect_qk",
                                              "scale", "n_rep"))
@@ -619,6 +622,7 @@ def flash_ft_dq(q: jax.Array, k: jax.Array, v: jax.Array, g: jax.Array,
         scale=scale, n_rep=n_rep)
 
 
+@traced("kernel/flashft/dkv")
 @functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal", "ft",
                                              "interpret", "protect_qk",
                                              "scale", "n_rep"))

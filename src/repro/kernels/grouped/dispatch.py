@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import FTConfig, InjectionSpec, FT_OFF
+from repro.tools.trace import traced
 from .. import autotune, search
 from ..autotune import MXU, KernelParams
 # ops does not import this package at module level, so these are cycle-free;
@@ -65,6 +66,7 @@ def encode_batched_injection(spec: Optional[InjectionSpec], batch: int = 0):
 # uniform batched
 # ---------------------------------------------------------------------------
 
+@traced("kernel/batched_gemm")
 def batched_gemm_call(spec: BatchedKernelSpec, a: jax.Array, b: jax.Array, *,
                       ft: Optional[FTConfig] = None,
                       inject: Optional[InjectionSpec] = None,
@@ -150,6 +152,7 @@ def plan_grouped(t_rows: int, n: int, k: int, dtype, *, n_groups: int,
                         shape_class=p.shape_class)
 
 
+@traced("kernel/grouped_buffer")
 def grouped_buffer_call(spec: BatchedKernelSpec, buf: jax.Array,
                         w: jax.Array,
                         lay: Optional[layout_mod.GroupLayout] = None, *,
@@ -239,6 +242,7 @@ def group_counts_from_metadata(row_end: jax.Array, bm: int) -> jax.Array:
     return row_end - base
 
 
+@traced("kernel/tgmm_buffer")
 def tgmm_buffer_call(spec: BatchedKernelSpec, buf: jax.Array,
                      gbuf: jax.Array,
                      lay: Optional[layout_mod.GroupLayout] = None, *,

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import FTConfig, InjectionSpec, ONLINE_BLOCK, FT_OFF
+from repro.tools.trace import traced
 from . import autotune, ftgemm, gemm, search
 from .templates import BatchedKernelSpec, KernelSpec, registry
 from .templates import spec as spec_mod
@@ -99,6 +100,7 @@ def dispatch_info(m: int, n: int, k: int,
     }
 
 
+@traced("kernel/gemm")
 def gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
               bias: Optional[jax.Array] = None,
               residual: Optional[jax.Array] = None,
@@ -182,6 +184,7 @@ def matmul(a: jax.Array, b: jax.Array, *,
     return out
 
 
+@traced("kernel/fused_matmul")
 def fused_matmul(a: jax.Array, b: jax.Array, *,
                  bias: Optional[jax.Array] = None,
                  act: Optional[str] = None,
@@ -215,6 +218,7 @@ def fused_matmul(a: jax.Array, b: jax.Array, *,
                      out_dtype=out_dtype)
 
 
+@traced("kernel/grouped_gemm")
 def grouped_gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
                       group_ids: Optional[jax.Array] = None,
                       n_groups: Optional[int] = None,
@@ -345,6 +349,7 @@ def _check_flash_injection(kernel: str, *, head: int, n_heads: int,
             f"target.")
 
 
+@traced("kernel/flash_ft")
 def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
              ft: FTConfig = ONLINE_BLOCK, causal: bool = True,
              spec: Optional[InjectionSpec] = None,
@@ -425,6 +430,7 @@ def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out[:, :sq, :dh], rep
 
 
+@traced("kernel/flash_ft_bwd")
 def flash_ft_bwd(q: jax.Array, k: jax.Array, v: jax.Array, o: jax.Array,
                  m: jax.Array, l: jax.Array, g: jax.Array, *,
                  ft: FTConfig = ONLINE_BLOCK, causal: bool = True,

@@ -56,18 +56,32 @@ class Ctx:
     (default — the flashft kernel when the FT backend is pallas and the
     geometry is eligible, the chunked scan otherwise), "flash" (force the
     kernel), or "chunked" (force the query-chunked jnp path — the oracle
-    the flash path is validated against)."""
+    the flash path is validated against).
+
+    ``inject_sites`` restricts the stochastic SEU campaign to the named
+    telemetry sites: `subkey` returns None (⇒ no injection) for every other
+    site, so a campaign can target e.g. one MoE expert GEMM and the per-site
+    report must attribute every detection to exactly that site. The site
+    *names* are the same labels `dot`/`dot_fused`/`bdot` record telemetry
+    under ("wq", "w_gate", "attn_qk", …; the flash kernel is one fused site,
+    "attn_flash"). None (default) = campaign covers every GEMM."""
     ft: FTConfig = FT_OFF
     key: Optional[jax.Array] = None
     dtype: Any = jnp.bfloat16
     attn_shard: str = "heads"
     attn_impl: str = "auto"
+    inject_sites: Optional[Tuple[str, ...]] = None
+
+    def site_allowed(self, name: str) -> bool:
+        return self.inject_sites is None or name in self.inject_sites
 
     def subkey(self, name: str) -> Optional[jax.Array]:
+        if not self.site_allowed(name):
+            return None
         return named_subkey(self.key, name)
 
     def dot(self, name: str, x: jax.Array, w: jax.Array) -> jax.Array:
-        return ft_dot(x, w, ft=self.ft, key=self.subkey(name))
+        return ft_dot(x, w, ft=self.ft, key=self.subkey(name), site=name)
 
     def dot_fused(self, name: str, x: jax.Array, w: jax.Array,
                   bias: Optional[jax.Array] = None,
@@ -76,11 +90,11 @@ class Ctx:
         one kernel-level op (no separate bias/activation passes — see
         repro.core.ft_dot_fused / the kernels.templates subsystem)."""
         return ft_dot_fused(x, w, bias=bias, act=act, ft=self.ft,
-                            key=self.subkey(name))
+                            key=self.subkey(name), site=name)
 
     def bdot(self, name: str, a: jax.Array, b: jax.Array) -> jax.Array:
         ft = self.ft if self.ft.protect_attention else FT_OFF
-        return ft_batched_dot(a, b, ft=ft, key=self.subkey(name))
+        return ft_batched_dot(a, b, ft=ft, key=self.subkey(name), site=name)
 
     def fold(self, tag: int) -> "Ctx":
         if self.key is None:
@@ -181,7 +195,9 @@ def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
 def _chunked_core(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool, chunk: int, ft: FTConfig,
                   key: Optional[jax.Array],
-                  q_offset: int = 0) -> Tuple[jax.Array, telemetry.FTReport]:
+                  q_offset: int = 0,
+                  inject_sites: Optional[Tuple[str, ...]] = None
+                  ) -> Tuple[jax.Array, telemetry.FTReport]:
     """The query-chunked jnp attention core. q: (B,Sq,H,dh); k,v:
     (B,Sk,KVH,dh) → ((B,Sq,H,dh), FTReport). Never materializes (Sq, Sk)
     scores — per chunk only — and GQA is computed as a *grouped* batched
@@ -198,7 +214,11 @@ def _chunked_core(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kT = jnp.swapaxes(k, 1, 2).swapaxes(2, 3)           # (B, KVH, dh, Sk)
     vT = jnp.swapaxes(v, 1, 2)                          # (B, KVH, Sk, dh)
     kpos = jnp.arange(sk)
-    subkey = functools.partial(named_subkey, key)
+
+    def subkey(name: str) -> Optional[jax.Array]:
+        if inject_sites is not None and name not in inject_sites:
+            return None
+        return named_subkey(key, name)
 
     def chunk_fn(qc: jax.Array, qpos: jax.Array):
         # qc: (B, C, H, dh) → grouped scores (B, KVH, rep·C, Sk). FT records
@@ -210,14 +230,16 @@ def _chunked_core(q: jax.Array, k: jax.Array, v: jax.Array, *,
             # (B, C, KVH, rep, dh) → (B, KVH, rep·C, dh)
             qg = qc.reshape(b, c, kvh, n_rep, dh).transpose(0, 2, 3, 1, 4)
             qg = qg.reshape(b, kvh, n_rep * c, dh)
-            scores = ft_batched_dot(qg, kT, ft=ft, key=subkey("attn_qk")
+            scores = ft_batched_dot(qg, kT, ft=ft, key=subkey("attn_qk"),
+                                    site="attn_qk"
                                     ).astype(jnp.float32) * scale
             if causal:
                 mask = qpos[:, None] >= kpos[None, :]   # (C, Sk)
                 maskg = jnp.tile(mask, (n_rep, 1))      # (rep·C, Sk)
                 scores = jnp.where(maskg[None, None], scores, -1e30)
             p = jax.nn.softmax(scores, axis=-1).astype(qc.dtype)
-            out = ft_batched_dot(p, vT, ft=ft, key=subkey("attn_pv"))
+            out = ft_batched_dot(p, vT, ft=ft, key=subkey("attn_pv"),
+                                 site="attn_pv")
             out = out.reshape(b, kvh, n_rep, c, dh).transpose(0, 3, 1, 2, 4)
             return out.reshape(b, c, h, dh)             # (B, C, H, dh)
         return telemetry.scoped(inner)
@@ -360,7 +382,9 @@ def _flash_attention(q, k, v, *, causal, chunk, ft, key, q_offset):
                                          q3, k3, v3, key)
     scope = telemetry.current_scope()
     if scope is not None:
-        scope.record_summary(det, maxres, ft.corrects)
+        # One fused site: the kernel verifies both in-kernel GEMMs under a
+        # single report, so qk/pv are not separable here.
+        scope.record_summary(det, maxres, ft.corrects, site="attn_flash")
     return out3.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)
 
 
@@ -410,10 +434,13 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         v = _shard(v, "batch", None, "kv_heads", None)
     ft = ctx.ft if ctx.ft.protect_attention else FT_OFF
     if _use_flash(ctx, ft, causal, q.shape[1], k.shape[1], q_offset):
+        # Targeted campaigns: the flash kernel is one fused injection site.
+        fkey = ctx.key if ctx.site_allowed("attn_flash") else None
         return _flash_attention(q, k, v, causal=causal, chunk=chunk, ft=ft,
-                                key=ctx.key, q_offset=q_offset)
+                                key=fkey, q_offset=q_offset)
     out, rep = _chunked_core(q, k, v, causal=causal, chunk=chunk, ft=ft,
-                             key=ctx.key, q_offset=q_offset)
+                             key=ctx.key, q_offset=q_offset,
+                             inject_sites=ctx.inject_sites)
     telemetry.record_report(rep)
     return out
 

@@ -91,8 +91,9 @@ def forward(params, tokens, cfg: ModelConfig, ctx: Ctx, *, remat=True,
         def inner_body(cc, s):
             hh, rr = cc
             lp, idx = s
-            hh, rep_l = mamba_fn_ck(lp, hh, gidx * cfg.attn_every + idx)
-            return (hh, rr.merge(rep_l)), None
+            lnum = gidx * cfg.attn_every + idx
+            hh, rep_l = mamba_fn_ck(lp, hh, lnum)
+            return (hh, rr.merge_at(rep_l, lnum + 1)), None
 
         (h, rep), _ = loops.scan(inner_body, (h, rep),
                                    (gp, jnp.arange(cfg.attn_every)))
@@ -104,10 +105,13 @@ def forward(params, tokens, cfg: ModelConfig, ctx: Ctx, *, remat=True,
 
         sb = B.make_remat(shared_fn, remat)
         h, rep_s = sb(h, gidx)
-        return (h, rep.merge(rep_s)), None
+        # Shared attention blocks get rows after all mamba layers.
+        return (h, rep.merge_at(rep_s, 1 + ng * cfg.attn_every + gidx)), None
 
-    (x, rep), _ = loops.scan(group_fn, (x, telemetry.FTReport.empty()),
-                               (params["groups"]["inner"], jnp.arange(ng)))
+    (x, rep), _ = loops.scan(
+        group_fn,
+        (x, telemetry.FTReport.empty(rows=1 + ng * (cfg.attn_every + 1))),
+        (params["groups"]["inner"], jnp.arange(ng)))
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits, rep_h = telemetry.scoped(
         lambda: ctx.dot("lm_head", x, params["head"]["table"]))

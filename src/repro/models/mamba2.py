@@ -270,10 +270,10 @@ def forward(params, tokens, cfg: ModelConfig, ctx: Ctx, *, remat=True,
         h, rep = carry
         lp, idx = scanned
         h, rep_l = fn(lp, h, idx)
-        return (h, rep.merge(rep_l)), None
+        return (h, rep.merge_at(rep_l, idx + 1)), None
 
     (x, rep), _ = loops.scan(
-        body, (x, telemetry.FTReport.empty()),
+        body, (x, telemetry.FTReport.empty(rows=cfg.n_layers + 1)),
         (params["layers"], jnp.arange(cfg.n_layers)))
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits, rep_h = telemetry.scoped(

@@ -142,7 +142,8 @@ def apply_moe_grouped(p: Dict[str, Any], x: jax.Array, mc: MoEConfig,
 
     def ffn(name, a, w):
         return ft_grouped_matmul_buffer(a, w, lay.gid, lay.row_end,
-                                        ft=ctx.ft, key=ctx.subkey(name))
+                                        ft=ctx.ft, key=ctx.subkey(name),
+                                        site=name)
 
     gate_h = ffn("moe_gate", buf, p["w_gate"])
     up_h = ffn("moe_up", buf, p["w_up"])
@@ -206,10 +207,12 @@ def apply_moe_padded(p: Dict[str, Any], x: jax.Array, mc: MoEConfig,
     xe = shard(xe, "exp_tokens", "experts", None, None)
     xe2 = xe.transpose(1, 0, 2, 3).reshape(e, n_grp * c, d)
     gate_h = ft_batched_dot(xe2, p["w_gate"], ft=ctx.ft,
-                            key=ctx.subkey("moe_gate"))
-    up_h = ft_batched_dot(xe2, p["w_up"], ft=ctx.ft, key=ctx.subkey("moe_up"))
+                            key=ctx.subkey("moe_gate"), site="moe_gate")
+    up_h = ft_batched_dot(xe2, p["w_up"], ft=ctx.ft,
+                          key=ctx.subkey("moe_up"), site="moe_up")
     yh = ft_batched_dot((jax.nn.silu(gate_h) * up_h).astype(x.dtype),
-                        p["w_down"], ft=ctx.ft, key=ctx.subkey("moe_down"))
+                        p["w_down"], ft=ctx.ft, key=ctx.subkey("moe_down"),
+                        site="moe_down")
     ye = yh.reshape(e, n_grp, c, d).transpose(1, 0, 2, 3)      # (n, E, C, d)
     ye = shard(ye, "exp_tokens", "experts", None, None)
     y = jnp.einsum("ngec,necd->ngd", combine.astype(x.dtype), ye)

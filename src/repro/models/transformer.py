@@ -97,7 +97,10 @@ def init(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
 
 def _scan_layers(params, x, fn, remat: bool):
     """Scan stacked layers carrying (activations, aux-loss, FTReport) — SDC
-    telemetry crosses the scan via the carry (telemetry.scoped)."""
+    telemetry crosses the scan via the carry (telemetry.scoped). Each
+    layer's single-row report lands at row 1 + idx of the carried report
+    (row 0 stays for un-layered sites), so the step report resolves
+    (layer, site) pairs."""
 
     def wrapped(lp, h, idx):
         return telemetry.scoped(lambda: fn(lp, h, idx))
@@ -108,11 +111,12 @@ def _scan_layers(params, x, fn, remat: bool):
         h, aux, rep = carry
         lp, idx = scanned
         (h, aux_l), rep_l = body_fn(lp, h, idx)
-        return (h, aux + aux_l, rep.merge(rep_l)), None
+        return (h, aux + aux_l, rep.merge_at(rep_l, idx + 1)), None
 
     n = jax.tree.leaves(params)[0].shape[0]
     (x, aux, rep), _ = loops.scan(
-        body, (x, jnp.zeros((), jnp.float32), telemetry.FTReport.empty()),
+        body, (x, jnp.zeros((), jnp.float32),
+               telemetry.FTReport.empty(rows=n + 1)),
         (params, jnp.arange(n)))
     return x, aux, rep
 
@@ -221,14 +225,29 @@ def decode_step(params, token: jax.Array, cache: Dict[str, Any],
             h = h + blocks.mlp(lp["mlp"], hn, lctx)
         return h, (k_c, v_c)
 
-    def body(h, scanned):
-        lp, k_c, v_c, idx = scanned
-        h, (k_c, v_c) = layer_fn(lp, h, (k_c, v_c, idx))
-        return h, (k_c, v_c)
-
+    # Serve-path telemetry is opt-in: records appended from inside the scan
+    # body to an outer-trace scope would leak tracers, so per-layer scoping
+    # (and the report carry) only runs when the caller opened an ft_scope
+    # (train/serve.py's with_report path) — gate resolved at trace time.
+    want_ft = telemetry.current_scope() is not None
     n = cfg.n_layers
-    x, (new_k, new_v) = loops.scan(
-        body, x, (params["layers"], cache["k"], cache["v"], jnp.arange(n)))
+
+    def body(carry, scanned):
+        h, rep = carry
+        lp, k_c, v_c, idx = scanned
+        if want_ft:
+            (h, (k_c, v_c)), rep_l = telemetry.scoped(
+                lambda: layer_fn(lp, h, (k_c, v_c, idx)))
+            rep = rep.merge_at(rep_l, idx + 1)
+        else:
+            h, (k_c, v_c) = layer_fn(lp, h, (k_c, v_c, idx))
+        return (h, rep), (k_c, v_c)
+
+    (x, rep), (new_k, new_v) = loops.scan(
+        body, (x, telemetry.FTReport.empty(rows=n + 1)),
+        (params["layers"], cache["k"], cache["v"], jnp.arange(n)))
+    if want_ft:
+        telemetry.record_report(rep)
     x = blocks.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     table = (params["embed"]["table"].T if cfg.tie_embeddings
              else params["head"]["table"])
@@ -269,15 +288,31 @@ def prefill(params, tokens: jax.Array, cache: Dict[str, Any],
             h = h + blocks.mlp(lp["mlp"], hn, lctx)
         return h, (k, v)
 
-    fn = blocks.make_remat(layer_fn, remat)
+    # Like decode_step: per-layer telemetry only when the caller opened an
+    # ft_scope — scoping must sit INSIDE the remat wrapper (records cannot
+    # cross a checkpoint region as a side channel).
+    want_ft = telemetry.current_scope() is not None
 
-    def body(h, scanned):
+    def wrapped(lp, h, idx):
+        return telemetry.scoped(lambda: layer_fn(lp, h, idx))
+
+    fn = blocks.make_remat(wrapped if want_ft else layer_fn, remat)
+
+    def body(carry, scanned):
         lp, idx = scanned
-        h, (k, v) = fn(lp, h, idx)
-        return h, (k, v)
+        h, rep = carry
+        if want_ft:
+            (h, (k, v)), rep_l = fn(lp, h, idx)
+            rep = rep.merge_at(rep_l, idx + 1)
+        else:
+            h, (k, v) = fn(lp, h, idx)
+        return (h, rep), (k, v)
 
-    x, (ks, vs) = loops.scan(body, x,
-                               (params["layers"], jnp.arange(cfg.n_layers)))
+    (x, rep), (ks, vs) = loops.scan(
+        body, (x, telemetry.FTReport.empty(rows=cfg.n_layers + 1)),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    if want_ft:
+        telemetry.record_report(rep)
     # place prompt KV into the cache buffers
     max_len = cache["k"].shape[2]
     pad = max_len - s

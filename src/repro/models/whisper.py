@@ -113,11 +113,11 @@ def encode(params, frames: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
         h, rep = carry
         lp, idx = scanned
         h, rep_l = fn(lp, h, idx)
-        return (h, rep.merge(rep_l)), None
+        return (h, rep.merge_at(rep_l, idx + 1)), None
 
-    (x, rep), _ = loops.scan(body, (x, telemetry.FTReport.empty()),
-                               (params["enc_layers"],
-                                jnp.arange(cfg.enc_layers)))
+    (x, rep), _ = loops.scan(
+        body, (x, telemetry.FTReport.empty(rows=cfg.enc_layers + 1)),
+        (params["enc_layers"], jnp.arange(cfg.enc_layers)))
     return rmsnorm(x, params["enc_norm"], cfg.norm_eps), rep
 
 
@@ -148,11 +148,17 @@ def forward(params, batch_or_tokens, cfg: ModelConfig, ctx: Ctx, *,
 
     fn = B.make_remat(layer_fn, remat)
 
+    # Decoder layers get their own rows after the encoder's (row
+    # 1 + enc_layers + idx), so (layer, site) stays unambiguous across the
+    # two stacks; the carried encoder report is pre-expanded to the final
+    # row count (scan carries must be shape-invariant).
+    rep = rep.expand_rows(1 + cfg.enc_layers + cfg.n_layers)
+
     def body(carry, scanned):
         h, rr = carry
         lp, idx = scanned
         h, rep_l = fn(lp, h, idx)
-        return (h, rr.merge(rep_l)), None
+        return (h, rr.merge_at(rep_l, 1 + cfg.enc_layers + idx)), None
 
     (x, rep), _ = loops.scan(body, (x, rep),
                                (params["dec_layers"],

@@ -1,0 +1,256 @@
+"""Host-side metrics sink: the step-boundary consumer of the per-site FT
+telemetry (`core.telemetry`) plus ordinary run metrics.
+
+One `MetricsSink` per run. The training/serving loop calls:
+
+    sink.record_ft(report, step=step)        # a materialized FTReport
+    sink.count("tokens", n)                  # monotonic counters
+    sink.gauge("step_time_s", dt)            # last-value gauges
+    sink.histogram("max_residual", x)        # log2-bucketed histograms
+    sink.step_end(step)                      # flush one JSON record
+
+`step_end` emits ONE record per step to every attached emitter:
+
+    {"step": int, "t": float,
+     "gauges": {...}, "counters": {...}, "deltas": {...},
+     "hists": {name: {"<=2^k": count, ...}},
+     "ft": {"detected": float, "corrected": float, "max_residual": float},
+     "ft_sites": [{"site","layer","detected","corrected","max_residual"}],
+     "alerts": [{"site","step","rate",...}]}
+
+Emitters are pluggable and trivially small — `JsonlEmitter` (the file the
+analysis tooling reads, `tools/report.py --metrics`), `MemoryEmitter`
+(tests), `StdoutEmitter` (interactive runs). A custom emitter is any object
+with ``emit(record: dict)`` (and optionally ``close()``).
+
+The sink owns a `core.telemetry.StormDetector` and feeds it every step's
+per-site detection counts; fired `StormAlert`s are attached to the step
+record and forwarded to callbacks registered via `sink.on_storm(cb)` — the
+subscription point for the adaptive-FT policy arc.
+
+Everything here is host-side pure Python: the sink never sees tracers, only
+materialized per-step reports, so it adds zero ops (and zero pallas
+launches) to the compiled step — `benchmarks/telemetry_overhead.py` gates
+that claim.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+import time
+from typing import Any, Callable, Dict, IO, List, Optional
+
+from repro.core import telemetry
+
+
+# ---------------------------------------------------------------------------
+# emitters
+# ---------------------------------------------------------------------------
+
+
+class JsonlEmitter:
+    """One JSON object per line. The canonical on-disk format the report
+    tooling consumes."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f: Optional[IO[str]] = open(path, "a")
+
+    def emit(self, record: Dict[str, Any]) -> None:
+        assert self._f is not None, "emitter closed"
+        self._f.write(json.dumps(record) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+class MemoryEmitter:
+    """Keeps records in a list — test assertions read `.records`."""
+
+    def __init__(self):
+        self.records: List[Dict[str, Any]] = []
+
+    def emit(self, record: Dict[str, Any]) -> None:
+        self.records.append(record)
+
+    def close(self) -> None:
+        pass
+
+
+class StdoutEmitter:
+    """Compact one-line-per-step summary for interactive runs."""
+
+    def __init__(self, stream: Optional[IO[str]] = None):
+        self.stream = stream or sys.stdout
+
+    def emit(self, record: Dict[str, Any]) -> None:
+        ft = record.get("ft") or {}
+        parts = [f"step {record.get('step')}"]
+        for k, v in (record.get("gauges") or {}).items():
+            parts.append(f"{k} {v:.4g}" if isinstance(v, float) else f"{k} {v}")
+        if ft:
+            parts.append(f"sdc_det {ft['detected']:.0f}"
+                         f" sdc_fix {ft['corrected']:.0f}")
+        for a in record.get("alerts") or ():
+            parts.append(f"[SDC-STORM {a['site']} rate={a['rate']:.3g}/step]")
+        print(" ".join(parts), file=self.stream)
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# sink
+# ---------------------------------------------------------------------------
+
+
+def _log2_bucket(x: float) -> str:
+    """Histogram bucket label: power-of-two upper edge ("<=2^k"), with
+    dedicated buckets for zero and non-finite values."""
+    if x != x or x in (float("inf"), float("-inf")):
+        return "nonfinite"
+    if x == 0.0:
+        return "0"
+    return f"<=2^{math.ceil(math.log2(abs(x)))}"
+
+
+class MetricsSink:
+    """Step-boundary metrics aggregator with pluggable emitters.
+
+    Counters are cumulative across the run; each step record also carries
+    the per-step `deltas`. Gauges are last-value-wins within a step.
+    Histograms accumulate log2-bucket counts across the run (distributions
+    like per-site max-residual magnitudes — what a calibrated fault model
+    fits against).
+    """
+
+    def __init__(self, emitters: Optional[List[Any]] = None,
+                 detector: Optional[telemetry.StormDetector] = None,
+                 clock: Callable[[], float] = time.time):
+        self.emitters = list(emitters) if emitters else []
+        self.detector = detector or telemetry.StormDetector()
+        self._clock = clock
+        self._counters: Dict[str, float] = {}
+        self._prev_counters: Dict[str, float] = {}
+        self._gauges: Dict[str, Any] = {}
+        self._hists: Dict[str, Dict[str, int]] = {}
+        self._ft_totals: Optional[Dict[str, float]] = None
+        self._ft_sites: List[Dict[str, Any]] = []
+        self._alerts: List[telemetry.StormAlert] = []
+        self.detector.on_alert(self._alerts.append)
+
+    # -- producers ---------------------------------------------------------
+
+    def count(self, name: str, value: float = 1.0) -> None:
+        self._counters[name] = self._counters.get(name, 0.0) + float(value)
+
+    def gauge(self, name: str, value: Any) -> None:
+        self._gauges[name] = (float(value) if isinstance(value, (int, float))
+                              else value)
+
+    def histogram(self, name: str, value: float) -> None:
+        h = self._hists.setdefault(name, {})
+        b = _log2_bucket(float(value))
+        h[b] = h.get(b, 0) + 1
+
+    def record_ft(self, report: telemetry.FTReport, *, step: int) -> None:
+        """Consume one step's materialized FTReport: site rows decode
+        against the registry labels, totals become counters, residual
+        magnitudes feed the histogram, and the per-site detection counts
+        feed the storm detector (alerts attach to this step's record)."""
+        det = float(report.detected)
+        cor = float(report.corrected)
+        mr = float(report.max_residual)
+        self._ft_totals = {"detected": det, "corrected": cor,
+                           "max_residual": mr}
+        self.count("sdc_detected", det)
+        self.count("sdc_corrected", cor)
+        if mr > 0.0:
+            self.histogram("ft_max_residual", mr)
+        rows = telemetry.site_rows(report)
+        self._ft_sites = rows
+        site_counts: Dict[str, float] = {}
+        for r in rows:
+            site_counts[r["site"]] = (site_counts.get(r["site"], 0.0)
+                                      + r["detected"])
+            if r["max_residual"] > 0.0:
+                self.histogram(f"ft_max_residual/{r['site']}",
+                               r["max_residual"])
+        self.detector.observe(step, site_counts)
+
+    def on_storm(self, cb: Callable[[telemetry.StormAlert], None]) -> None:
+        self.detector.on_alert(cb)
+
+    # -- step boundary -----------------------------------------------------
+
+    def step_end(self, step: int, **gauges: Any) -> Dict[str, Any]:
+        """Flush one step record to every emitter (and return it)."""
+        for k, v in gauges.items():
+            self.gauge(k, v)
+        deltas = {k: v - self._prev_counters.get(k, 0.0)
+                  for k, v in self._counters.items()}
+        record: Dict[str, Any] = {
+            "step": int(step),
+            "t": self._clock(),
+            "gauges": dict(self._gauges),
+            "counters": dict(self._counters),
+            "deltas": deltas,
+            "hists": {k: dict(v) for k, v in self._hists.items()},
+        }
+        if self._ft_totals is not None:
+            record["ft"] = dict(self._ft_totals)
+            record["ft_sites"] = list(self._ft_sites)
+        if self._alerts:
+            record["alerts"] = [vars(a) for a in self._alerts]
+        for e in self.emitters:
+            e.emit(record)
+        self._prev_counters = dict(self._counters)
+        self._gauges = {}
+        self._ft_totals = None
+        self._ft_sites = []
+        self._alerts = []
+        return record
+
+    def close(self) -> None:
+        for e in self.emitters:
+            close = getattr(e, "close", None)
+            if close:
+                close()
+
+
+# ---------------------------------------------------------------------------
+# JSONL analysis helpers (tools/report.py uses these)
+# ---------------------------------------------------------------------------
+
+
+def read_jsonl(path: str) -> List[Dict[str, Any]]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def aggregate_sites(records: List[Dict[str, Any]]) -> Dict[str, Dict[str, float]]:
+    """Fold a run's step records into per-site totals:
+    {site: {detected, corrected, max_residual, steps_seen}}. Layer rows of
+    the same site are summed together (the per-layer split stays available
+    in the raw records)."""
+    agg: Dict[str, Dict[str, float]] = {}
+    for rec in records:
+        for row in rec.get("ft_sites") or ():
+            a = agg.setdefault(row["site"], {"detected": 0.0,
+                                             "corrected": 0.0,
+                                             "max_residual": 0.0,
+                                             "steps_seen": 0.0})
+            a["detected"] += row["detected"]
+            a["corrected"] += row["corrected"]
+            a["max_residual"] = max(a["max_residual"], row["max_residual"])
+            a["steps_seen"] += 1.0
+    return agg

@@ -103,11 +103,48 @@ def perf_table(hc: Dict, baseline: Dict) -> str:
     return "\n".join(rows)
 
 
+def ft_site_table(metrics_path: str, top_n: int = 10) -> str:
+    """Per-site FT telemetry table from a metrics JSONL (the file a
+    `tools.metrics.JsonlEmitter` writes): top-N sites by detection rate,
+    with correction counts, worst residual, and any storm alerts."""
+    from repro.tools import metrics as metrics_lib
+
+    records = metrics_lib.read_jsonl(metrics_path)
+    n_steps = max(1, len({r["step"] for r in records}))
+    agg = metrics_lib.aggregate_sites(records)
+    alerts: Dict[str, int] = {}
+    for rec in records:
+        for a in rec.get("alerts") or ():
+            alerts[a["site"]] = alerts.get(a["site"], 0) + 1
+    rows = ["| site | detections | det/step | corrected | max residual | "
+            "storms |",
+            "|---|---|---|---|---|---|"]
+    ranked = sorted(agg.items(), key=lambda kv: -kv[1]["detected"])[:top_n]
+    for site, a in ranked:
+        rows.append(
+            f"| {site} | {a['detected']:.0f} | "
+            f"{a['detected'] / n_steps:.3f} | {a['corrected']:.0f} | "
+            f"{a['max_residual']:.3g} | {alerts.get(site, 0)} |")
+    if not ranked:
+        rows.append("| (no detections recorded) | — | — | — | — | — |")
+    return "\n".join(rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="benchmarks/dryrun_results.json")
     ap.add_argument("--hillclimb", default="benchmarks/hillclimb_results.json")
+    ap.add_argument("--metrics", default=None,
+                    help="metrics JSONL (tools.metrics JsonlEmitter output) "
+                         "— renders the per-site FT telemetry table")
     args = ap.parse_args()
+    import os
+    if args.metrics:
+        print("## Per-site FT telemetry\n")
+        print(ft_site_table(args.metrics))
+        if not os.path.exists(args.json):
+            return
+        print()
     with open(args.json) as f:
         results = json.load(f)
     print("## Dry-run matrix\n")
@@ -115,7 +152,6 @@ def main() -> None:
     print(dryrun_table(results))
     print("\n## Roofline (single-pod 16×16 = 256 chips)\n")
     print(roofline_table(results))
-    import os
     if os.path.exists(args.hillclimb):
         with open(args.hillclimb) as f:
             hc = json.load(f)

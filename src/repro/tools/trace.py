@@ -1,0 +1,75 @@
+"""Thin tracing-span API over `jax.profiler`.
+
+Two kinds of spans, one import site:
+
+  * `span(name)` — host-side wall-clock span (`jax.profiler.TraceAnnotation`
+    when a profiler trace is active; otherwise a no-op-cost context). Wraps
+    train-step *phases* in the host loop: data load, step dispatch,
+    checkpoint, metrics flush.
+  * `traced_span(name)` — trace-time annotation (`jax.named_scope`): names a
+    region of the jaxpr so kernel dispatches are attributable in
+    Perfetto/XLA profiles. Wraps the kernel-dispatch entry points
+    (`kernels.ops`, `kernels.flashft`, `kernels.grouped.dispatch`).
+
+  * `trace_dump(dir)` — capture a Perfetto-compatible profiler trace of the
+    enclosed block (`jax.profiler.start_trace`/`stop_trace`);
+    `benchmarks/run.py --trace-dir` wraps suites with it.
+
+All three degrade gracefully: if the running jax build lacks a profiler
+symbol, spans become plain no-op contexts rather than failing the run.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Callable, Iterator
+
+import jax
+
+
+@contextlib.contextmanager
+def _noop() -> Iterator[None]:
+    yield
+
+
+def span(name: str):
+    """Host-side span around a step phase (shows as a named slice on the
+    host track of a profiler trace)."""
+    ann = getattr(jax.profiler, "TraceAnnotation", None)
+    return ann(name) if ann is not None else _noop()
+
+
+def traced_span(name: str):
+    """Trace-time span: names the enclosed jaxpr region (device track)."""
+    ns = getattr(jax, "named_scope", None)
+    return ns(name) if ns is not None else _noop()
+
+
+def traced(name: str) -> Callable:
+    """Decorator form of `traced_span` — the kernel dispatch entry points
+    wear this so every pallas launch shows up under a stable name in
+    Perfetto/XLA profiles."""
+    def deco(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with traced_span(name):
+                return fn(*args, **kwargs)
+        return wrapper
+    return deco
+
+
+@contextlib.contextmanager
+def trace_dump(log_dir: str) -> Iterator[None]:
+    """Capture a Perfetto-compatible profiler trace of the enclosed block
+    into `log_dir` (open with ui.perfetto.dev or TensorBoard's profile
+    plugin)."""
+    start = getattr(jax.profiler, "start_trace", None)
+    stop = getattr(jax.profiler, "stop_trace", None)
+    if start is None or stop is None:
+        yield
+        return
+    start(log_dir)
+    try:
+        yield
+    finally:
+        stop()

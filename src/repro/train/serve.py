@@ -3,7 +3,15 @@ sampling, and request batching (slot-based).
 
 The jitted step functions are exactly what the decode/prefill dry-run cells
 lower — serving here and serving on the 256-chip mesh are the same code.
-"""
+
+FT telemetry (PR 8): `make_serve_fns(..., with_report=True)` wraps the
+prefill/decode bodies in a `telemetry` scope so each jitted call *also*
+returns its per-site FTReport — the model's serve paths contribute
+per-layer scoped rows only when such a scope is open, so the default
+`with_report=False` program is unchanged. `generate(..., sink=...)` feeds
+those per-step reports to a `tools.metrics.MetricsSink` (one sink step per
+decoded token batch), so decode-path SDCs land in the same JSONL stream —
+and the same storm detector — as training."""
 from __future__ import annotations
 
 import dataclasses
@@ -14,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
+from repro.core import telemetry
 from repro.models import model_zoo
 from repro.models.blocks import Ctx
 
@@ -26,9 +35,20 @@ class ServeConfig:
     eos_id: int = -1               # -1 = never stop early
 
 
-def make_serve_fns(cfg: ModelConfig, run: RunConfig
-                   ) -> Tuple[Callable, Callable]:
+def make_serve_fns(cfg: ModelConfig, run: RunConfig, *,
+                   with_report: bool = False) -> Tuple[Callable, Callable]:
+    """Build the jitted (prefill_fn, decode_fn) pair. With ``with_report``
+    each returns an extra trailing `telemetry.FTReport` (per-site, per-layer
+    rows) for the request batch — the serve-side telemetry feed."""
     mod = model_zoo.module_for(cfg)
+    if with_report and cfg.family not in ("dense", "moe", "vlm"):
+        # Only the transformer backbone's serve paths scope their scan
+        # bodies per layer (records appended from an unscoped scan body to
+        # the outer report scope would leak tracers). Extending the scoped
+        # carry to the ssm/hybrid/encdec serve scans is a ROADMAP follow-up.
+        raise NotImplementedError(
+            f"with_report serve telemetry is not supported for the "
+            f"{cfg.family!r} family yet (transformer-backed families only)")
     dtype = jnp.bfloat16 if run.dtype == "bfloat16" else jnp.float32
     ctx = Ctx(ft=run.ft, key=None, dtype=dtype, attn_shard=run.attn_shard,
               attn_impl=run.attn_impl)
@@ -39,11 +59,20 @@ def make_serve_fns(cfg: ModelConfig, run: RunConfig
             kw["extra_embeds"] = extra
         if cfg.family == "encdec" and extra is not None:
             kw["frames"] = extra
-        return mod.prefill(params, tokens, cache, cfg, ctx,
-                           chunk=run.attn_chunk, **kw)
+        if not with_report:
+            return mod.prefill(params, tokens, cache, cfg, ctx,
+                               chunk=run.attn_chunk, **kw)
+        (logits, new_cache), rep = telemetry.scoped(
+            lambda: mod.prefill(params, tokens, cache, cfg, ctx,
+                                chunk=run.attn_chunk, **kw))
+        return logits, new_cache, rep
 
     def decode_fn(params, token, cache):
-        return mod.decode_step(params, token, cache, cfg, ctx)
+        if not with_report:
+            return mod.decode_step(params, token, cache, cfg, ctx)
+        (logits, new_cache), rep = telemetry.scoped(
+            lambda: mod.decode_step(params, token, cache, cfg, ctx))
+        return logits, new_cache, rep
 
     return jax.jit(prefill_fn), jax.jit(decode_fn, donate_argnums=(2,))
 
@@ -57,21 +86,48 @@ def _sample(logits: jax.Array, temperature: float, key) -> jax.Array:
 
 def generate(params, prompts: np.ndarray, cfg: ModelConfig, run: RunConfig,
              sc: ServeConfig, *, max_new_tokens: int = 32,
-             extra=None, seed: int = 0) -> np.ndarray:
-    """Batch-generate continuations. prompts: (B, S_prompt) int32."""
+             extra=None, seed: int = 0, sink=None) -> np.ndarray:
+    """Batch-generate continuations. prompts: (B, S_prompt) int32.
+
+    `sink` — optional `tools.metrics.MetricsSink`: the prefill report and
+    every decode step's report are recorded (one sink step per model call),
+    attributing decode-path SDCs per site/layer like training steps."""
     mod = model_zoo.module_for(cfg)
-    prefill_fn, decode_fn = make_serve_fns(cfg, run)
+    with_report = sink is not None
+    prefill_fn, decode_fn = make_serve_fns(cfg, run,
+                                           with_report=with_report)
     b = prompts.shape[0]
     dtype = jnp.bfloat16 if run.dtype == "bfloat16" else jnp.float32
     cache = mod.init_cache(cfg, b, sc.max_len, dtype)
-    logits, cache = prefill_fn(params, jnp.asarray(prompts), cache, extra)
+    serve_step = 0
+
+    def _emit(rep, phase: str):
+        nonlocal serve_step
+        sink.record_ft(rep, step=serve_step)
+        sink.gauge("phase", phase)
+        sink.count("requests" if phase == "prefill" else "decoded_tokens",
+                   b)
+        sink.step_end(serve_step)
+        serve_step += 1
+
+    if with_report:
+        logits, cache, rep = prefill_fn(params, jnp.asarray(prompts), cache,
+                                        extra)
+        _emit(rep, "prefill")
+    else:
+        logits, cache = prefill_fn(params, jnp.asarray(prompts), cache,
+                                   extra)
     key = jax.random.PRNGKey(seed)
     tokens: List[jax.Array] = []
     tok = _sample(logits.reshape(b, -1), sc.temperature, key)[:, None]
     done = np.zeros((b,), bool)
     for i in range(max_new_tokens):
         tokens.append(tok)
-        logits, cache = decode_fn(params, tok, cache)
+        if with_report:
+            logits, cache, rep = decode_fn(params, tok, cache)
+            _emit(rep, "decode")
+        else:
+            logits, cache = decode_fn(params, tok, cache)
         key = jax.random.fold_in(key, i)
         tok = _sample(logits.reshape(b, -1), sc.temperature, key)[:, None]
         if sc.eos_id >= 0:

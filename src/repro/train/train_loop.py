@@ -74,10 +74,14 @@ def make_train_step(cfg: ModelConfig, run: RunConfig,
                 micro_step, (zero_g, jnp.zeros((), jnp.float32)), micro)
             grads = jax.tree.map(lambda g: g / n_micro, grads)
             loss = loss / n_micro
-            # FT counters sum across microbatches; float metrics average
-            metrics = jax.tree.map(
-                lambda x: (jnp.sum(x) if x.dtype in (jnp.int32, jnp.int64)
-                           else jnp.mean(x)), mets)
+            # FT counters SUM across microbatches (event counts — and f32
+            # since PR 1, so a dtype-keyed sum-vs-mean branch would silently
+            # average them); float metrics average.
+            mets = dict(mets)
+            ft_stacked = mets.pop("ft", None)
+            metrics = jax.tree.map(jnp.mean, mets)
+            if ft_stacked is not None:
+                metrics["ft"] = telemetry.reduce_microbatch(ft_stacked)
         else:
             (loss, metrics), grads = jax.value_and_grad(loss_f, has_aux=True
                                                         )(params, batch)
@@ -147,12 +151,18 @@ def train(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig,
           tc: TrainConfig, *, batch_override: Optional[int] = None,
           ckpt_dir: Optional[str] = None, resume: bool = False,
           stop_at: Optional[int] = None,
-          log: Callable[[str], None] = print) -> Dict[str, Any]:
+          log: Callable[[str], None] = print,
+          sink=None) -> Dict[str, Any]:
     """End-to-end training entry (examples/train_lm.py and launch/train.py
     call this). Single-host; under a mesh the same code path works with
-    jit-sharded params (see launch/train.py)."""
+    jit-sharded params (see launch/train.py).
+
+    `sink` — optional `repro.tools.metrics.MetricsSink`: every step's FT
+    report, loss/step-time/tokens-per-sec gauges, and SDC-storm alerts flow
+    through it to the attached emitters (JSONL for offline analysis)."""
     from repro.checkpoint.ckpt import Checkpointer
     from repro.data import pipeline as data_lib
+    from repro.tools.trace import span
 
     mod = model_zoo.module_for(cfg)
     dtype = jnp.bfloat16 if run.dtype == "bfloat16" else jnp.float32
@@ -184,22 +194,45 @@ def train(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig,
     try:
         it = pipe.iter_from(start_step)
         end_step = min(stop_at, tc.total_steps) if stop_at else tc.total_steps
+        launches: Optional[int] = None
         for step in range(start_step, end_step):
-            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-            if "patches" in batch:
-                batch["patches"] = batch["patches"].astype(dtype)
-            if "frames" in batch:
-                batch["frames"] = batch["frames"].astype(dtype)
+            with span("data"):
+                batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+                if "patches" in batch:
+                    batch["patches"] = batch["patches"].astype(dtype)
+                if "frames" in batch:
+                    batch["frames"] = batch["frames"].astype(dtype)
             inject_key = None
             if tc.inject_every and step % tc.inject_every == 0:
                 inject_key = jax.random.PRNGKey(step)
+            if sink is not None and launches is None:
+                # One-time pallas launch count of the step program (audit
+                # traces the un-jitted step; the count is a program
+                # property, constant across steps).
+                from repro.tools import audit
+                launches = audit.count_primitives(
+                    make_train_step(cfg, run, opt_cfg, tc), params,
+                    opt_state, batch, jnp.asarray(step), inject_key)
             wd.start()
-            params, opt_state, metrics = step_fn(
-                params, opt_state, batch, jnp.asarray(step), inject_key)
-            jax.block_until_ready(metrics["loss"])
+            with span("step"):
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch, jnp.asarray(step), inject_key)
+                jax.block_until_ready(metrics["loss"])
             slow = wd.stop(step)
+            ft = metrics.get("ft")
+            if sink is not None:
+                with span("metrics"):
+                    dt = wd.times[-1]
+                    if ft is not None:
+                        sink.record_ft(ft, step=step)
+                    tokens = int(batch["tokens"].size) \
+                        if "tokens" in batch else 0
+                    sink.count("tokens", tokens)
+                    sink.step_end(
+                        step, loss=float(metrics["loss"]), step_time_s=dt,
+                        tokens_per_s=(tokens / dt if dt > 0 else 0.0),
+                        pallas_launches=launches or 0)
             if step % tc.log_every == 0 or step == tc.total_steps - 1:
-                ft = metrics.get("ft")
                 msg = (f"step {step:5d} loss {float(metrics['loss']):.4f} "
                        f"gnorm {float(metrics['grad_norm']):.3f}")
                 if ft is not None:
@@ -211,8 +244,9 @@ def train(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig,
                 history.append({"step": step,
                                 "loss": float(metrics["loss"])})
             if ckpt and (step + 1) % tc.ckpt_every == 0:
-                ckpt.save_async(step + 1,
-                                {"params": params, "opt": opt_state})
+                with span("checkpoint"):
+                    ckpt.save_async(step + 1,
+                                    {"params": params, "opt": opt_state})
             if preempted["flag"]:
                 log(f"SIGTERM at step {step}: checkpointing and exiting")
                 if ckpt:

@@ -1,0 +1,399 @@
+"""Per-site FT telemetry (PR 8): site registry + report pytree units,
+attribution under jit+scan+remat+grad, the microbatch aggregation
+regression, SDC-storm detector behaviour, and the metrics sink / serve
+feed."""
+import json
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import RunConfig
+from repro.core import telemetry
+from repro.core.policy import ONLINE_BLOCK
+from repro.models import model_zoo
+from repro.models.blocks import Ctx
+from repro.tools import metrics as metrics_lib
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    return {
+        "tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+    }
+
+
+def _mk_report(site, det, cor=None, mr=1.0, rows=1, row=0):
+    """Hand-build a single-site FTReport (host-side test fixture)."""
+    sid = telemetry.site_id(site)
+    w = telemetry.site_width()
+    z = jnp.zeros((rows, w), jnp.float32)
+    cor = det if cor is None else cor
+    return telemetry.FTReport(
+        detected=jnp.float32(det), corrected=jnp.float32(cor),
+        max_residual=jnp.float32(mr),
+        site_detected=z.at[row, sid].add(det),
+        site_corrected=z.at[row, sid].add(cor),
+        site_max_residual=z.at[row, sid].max(mr))
+
+
+# ---------------------------------------------------------------------------
+# registry + report pytree units
+# ---------------------------------------------------------------------------
+
+
+def test_registry_stable_ids_and_overflow():
+    r = telemetry.SiteRegistry(4)
+    assert r.site("a") == 1 and r.site("b") == 2
+    assert r.site("a") == 1                      # stable on re-registration
+    # past capacity-1 real slots everything aliases the overflow bucket
+    assert r.site("c") == 3 and r.site("d") == 3
+    assert r.label(3) == telemetry.OVERFLOW
+    assert r.labels()[0] == telemetry.UNATTRIBUTED
+
+
+def test_report_empty_width_is_static():
+    rep = telemetry.FTReport.empty(rows=3)
+    assert rep.site_detected.shape == (3, telemetry.site_width())
+    assert rep.n_rows == 3
+
+
+def test_merge_pads_rows_and_merge_at_places_row():
+    one = _mk_report("unit_site_a", det=2.0, mr=5.0)
+    big = telemetry.FTReport.empty(rows=4).merge_at(one, 2)
+    assert float(big.detected) == 2.0
+    sid = telemetry.site_id("unit_site_a")
+    m = np.asarray(big.site_detected)
+    assert m[2, sid] == 2.0 and m.sum() == 2.0   # landed at row 2 only
+    # merge pads the shorter report at the bottom (absolute row semantics)
+    merged = one.merge(big)
+    assert merged.n_rows == 4
+    assert np.asarray(merged.site_detected)[0, sid] == 2.0
+    assert float(merged.max_residual) == 5.0
+
+
+def test_expand_rows_refuses_shrink():
+    with pytest.raises(ValueError):
+        telemetry.FTReport.empty(rows=3).expand_rows(1)
+    with pytest.raises(ValueError):
+        telemetry.FTReport.empty(rows=2).merge_at(
+            telemetry.FTReport.empty(rows=2), 0)
+
+
+def test_reduce_microbatch_sums_counts_maxes_residuals():
+    a = _mk_report("unit_site_a", det=1.0, mr=2.0)
+    b = _mk_report("unit_site_a", det=3.0, mr=7.0)
+    stacked = jax.tree.map(lambda x, y: jnp.stack([x, y]), a, b)
+    red = telemetry.reduce_microbatch(stacked)
+    assert float(red.detected) == 4.0            # SUM, not mean
+    assert float(red.max_residual) == 7.0        # MAX
+    sid = telemetry.site_id("unit_site_a")
+    assert float(red.site_detected[0, sid]) == 4.0
+
+
+def test_site_rows_decode_and_layer_mapping():
+    rep = telemetry.FTReport.empty(rows=3).merge_at(
+        _mk_report("unit_site_b", det=1.0, mr=0.5), 2)
+    rows = telemetry.site_rows(rep)
+    assert len(rows) == 1
+    assert rows[0]["site"] == "unit_site_b"
+    assert rows[0]["layer"] == 1                 # row 2 == layer index 1
+    assert rows[0]["detected"] == 1.0
+
+
+def test_scope_report_site_column_sums_to_total():
+    with telemetry.ft_scope() as s:
+        s.record(jnp.array(True), jnp.float32(3.0), True, site="unit_site_c")
+        s.record(jnp.array(False), jnp.float32(0.0), True, site="unit_site_c")
+        s.record_summary(jnp.float32(2.0), jnp.float32(9.0), False,
+                         site="unit_site_d")
+        rep = s.report()
+    assert float(rep.detected) == 3.0 and float(rep.corrected) == 1.0
+    assert float(rep.max_residual) == 9.0
+    np.testing.assert_array_equal(
+        np.asarray(rep.site_detected).sum(), np.asarray(rep.detected))
+    cid = telemetry.site_id("unit_site_c")
+    did = telemetry.site_id("unit_site_d")
+    assert float(rep.site_detected[0, cid]) == 1.0
+    assert float(rep.site_detected[0, did]) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end attribution: jit + scan + remat + grad
+# ---------------------------------------------------------------------------
+
+
+def _loss_ft(cfg, ctx, params, batch, remat):
+    mod = model_zoo.module_for(cfg)
+
+    def f(p):
+        loss, mets = mod.loss_fn(p, batch, cfg, ctx, remat=remat, chunk=16)
+        return loss, mets["ft"]
+
+    (loss, ft), grads = jax.jit(
+        lambda p: jax.value_and_grad(f, has_aux=True)(p))(params)
+    return loss, ft, grads
+
+
+@pytest.mark.parametrize("remat", [False, True])
+def test_injection_attributed_to_named_site_only(remat):
+    """inject_sites=("wq",) ⇒ detections land in the "wq" column (per
+    layer row) and nowhere else — under jit, the layer scan, remat, and
+    value_and_grad."""
+    cfg = registry.get_smoke("qwen2-7b")
+    mod = model_zoo.module_for(cfg)
+    params = mod.init(cfg, KEY, jnp.float32)
+    batch = _batch(cfg)
+    ctx = Ctx(ft=ONLINE_BLOCK.replace(inject_rate=1.0),
+              key=jax.random.PRNGKey(7), dtype=jnp.float32,
+              inject_sites=("wq",))
+    loss, ft, grads = _loss_ft(cfg, ctx, params, batch, remat)
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(g)).all()
+               for g in jax.tree.leaves(grads))
+    assert float(ft.detected) >= cfg.n_layers    # every layer's wq injected
+    # clean sites may still log tiny residual magnitudes; *detections* must
+    # land exclusively on the injected site
+    rows = [r for r in telemetry.site_rows(ft) if r["detected"] > 0]
+    assert rows and all(r["site"] == "wq" for r in rows)
+    layers = {r["layer"] for r in rows}
+    assert layers == set(range(cfg.n_layers))    # per-layer rows resolved
+    np.testing.assert_array_equal(np.asarray(ft.site_detected).sum(),
+                                  np.asarray(ft.detected))
+    np.testing.assert_array_equal(np.asarray(ft.site_corrected).sum(),
+                                  np.asarray(ft.corrected))
+
+
+def test_totals_bit_identical_with_attribution_off():
+    """The scalar triple is produced by the same reduction sequence in both
+    modes — attribution only adds the site matrices next to it."""
+    cfg = registry.get_smoke("qwen2-7b")
+    mod = model_zoo.module_for(cfg)
+    params = mod.init(cfg, KEY, jnp.float32)
+    batch = _batch(cfg)
+    ctx = Ctx(ft=ONLINE_BLOCK.replace(inject_rate=1.0),
+              key=jax.random.PRNGKey(7), dtype=jnp.float32)
+    _, ft_on, _ = _loss_ft(cfg, ctx, params, batch, True)
+    with telemetry.site_attribution(False):
+        assert telemetry.site_width() == 1
+        _, ft_off, _ = _loss_ft(cfg, ctx, params, batch, True)
+    assert ft_off.site_detected.shape[-1] == 1
+    np.testing.assert_array_equal(np.asarray(ft_on.detected),
+                                  np.asarray(ft_off.detected))
+    np.testing.assert_array_equal(np.asarray(ft_on.corrected),
+                                  np.asarray(ft_off.corrected))
+    np.testing.assert_array_equal(np.asarray(ft_on.max_residual),
+                                  np.asarray(ft_off.max_residual))
+
+
+def test_moe_expert_site_attribution():
+    """Injection filtered to one MoE expert GEMM shows up as exactly that
+    site (the ISSUE's acceptance campaign in unit form)."""
+    cfg = registry.get_smoke("qwen3-moe-235b-a22b")
+    mod = model_zoo.module_for(cfg)
+    params = mod.init(cfg, KEY, jnp.float32)
+    batch = _batch(cfg, b=1, s=16)
+    ctx = Ctx(ft=ONLINE_BLOCK.replace(inject_rate=1.0),
+              key=jax.random.PRNGKey(11), dtype=jnp.float32,
+              inject_sites=("moe_gate",))
+    loss, ft, _ = _loss_ft(cfg, ctx, params, batch, False)
+    assert np.isfinite(float(loss))
+    rows = [r for r in telemetry.site_rows(ft) if r["detected"] > 0]
+    assert rows and all(r["site"] == "moe_gate" for r in rows)
+    assert float(ft.detected) > 0
+
+
+# ---------------------------------------------------------------------------
+# microbatch aggregation regression (satellite a)
+# ---------------------------------------------------------------------------
+
+
+def test_microbatch_ft_counters_sum_not_mean():
+    """Gradient-accumulation steps must SUM the per-microbatch FT event
+    counts (the old dtype-keyed branch silently averaged the f32
+    counters)."""
+    from repro.optim import adamw
+    from repro.train import train_loop
+
+    cfg = registry.get_smoke("qwen2-7b")
+    mod = model_zoo.module_for(cfg)
+    params = mod.init(cfg, KEY, jnp.float32)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3)
+    tc = train_loop.TrainConfig(total_steps=10, warmup_steps=1)
+    inject_key = jax.random.PRNGKey(5)
+    ft = ONLINE_BLOCK.replace(inject_rate=1.0)
+
+    def detected(microbatch, b):
+        run = RunConfig(model=cfg, ft=ft, dtype="float32", attn_chunk=16,
+                        microbatch=microbatch)
+        opt_state = train_loop.init_opt_state(params, opt_cfg, tc)
+        step = jax.jit(train_loop.make_train_step(cfg, run, opt_cfg, tc))
+        _, _, mets = step(params, opt_state, _batch(cfg, b=b),
+                          jnp.asarray(1), inject_key)
+        return mets["ft"]
+
+    ft1 = detected(0, b=1)                       # one microbatch's worth
+    ft2 = detected(2, b=2)                       # two microbatches, same key
+    assert float(ft1.detected) > 0
+    # same ctx key per microbatch ⇒ identical injection pattern ⇒ exactly 2×
+    assert float(ft2.detected) == 2 * float(ft1.detected)
+    assert float(ft2.corrected) == 2 * float(ft1.corrected)
+    np.testing.assert_array_equal(np.asarray(ft2.site_detected).sum(),
+                                  np.asarray(ft2.detected))
+    # residual magnitudes take the max, not the sum (max semantics are
+    # unit-tested in test_reduce_microbatch_sums_counts_maxes_residuals)
+    assert np.isfinite(float(ft2.max_residual)) and float(ft2.max_residual) > 0
+
+
+# ---------------------------------------------------------------------------
+# storm detector (satellite d)
+# ---------------------------------------------------------------------------
+
+
+def test_storm_fires_on_single_site_spike():
+    det = telemetry.StormDetector(window=8, spike_factor=8.0,
+                                  min_detections=3.0)
+    fired = []
+    det.on_alert(fired.append)
+    alerts = []
+    for step in range(4):
+        alerts += det.observe(step, {"bad": 1.0, "ok": 0.0})
+    assert len(alerts) == 1 and alerts[0].site == "bad"
+    assert fired == alerts == det.alerts
+    a = alerts[0]
+    assert a.detections >= 3.0 and a.rate >= a.threshold_rate
+
+
+def test_storm_quiet_on_uniform_background():
+    """Every site elevated equally = tau mis-calibration, not a failing
+    part — must stay quiet."""
+    det = telemetry.StormDetector(window=8)
+    counts = {f"s{i}": 1.0 for i in range(4)}
+    for step in range(32):
+        assert det.observe(step, counts) == []
+    assert det.alerts == []
+
+
+def test_storm_rearms_once_per_window():
+    det = telemetry.StormDetector(window=4, min_detections=2.0)
+    n = 0
+    for step in range(13):
+        n += len(det.observe(step, {"bad": 1.0}))
+    # fires at step 1 (sum=2), re-arms after 4 further observations:
+    # steps 1, 5, 9 ... once per window, not every step.
+    assert n == 3
+
+
+def test_storm_ignores_subthreshold_counts():
+    det = telemetry.StormDetector(window=8, min_detections=3.0)
+    for step in range(8):
+        assert det.observe(step, {"a": 0.25}) == []   # windowed sum < 3
+
+
+# ---------------------------------------------------------------------------
+# metrics sink (tentpole part 2) + report table (satellite b)
+# ---------------------------------------------------------------------------
+
+
+def test_sink_step_record_counters_deltas_gauges():
+    mem = metrics_lib.MemoryEmitter()
+    sink = metrics_lib.MetricsSink([mem], clock=lambda: 123.0)
+    sink.count("tokens", 10)
+    rec1 = sink.step_end(0, loss=2.5)
+    sink.count("tokens", 5)
+    rec2 = sink.step_end(1)
+    assert rec1["counters"]["tokens"] == 10 and rec1["deltas"]["tokens"] == 10
+    assert rec2["counters"]["tokens"] == 15 and rec2["deltas"]["tokens"] == 5
+    assert rec1["gauges"]["loss"] == 2.5 and "loss" not in rec2["gauges"]
+    assert rec1["t"] == 123.0
+    assert mem.records == [rec1, rec2]
+
+
+def test_sink_record_ft_sites_and_storm_alert():
+    mem = metrics_lib.MemoryEmitter()
+    sink = metrics_lib.MetricsSink([mem])
+    seen = []
+    sink.on_storm(seen.append)
+    rep = _mk_report("unit_storm_site", det=5.0, mr=2.0)
+    sink.record_ft(rep, step=0)
+    rec = sink.step_end(0)
+    assert rec["ft"]["detected"] == 5.0
+    assert [r["site"] for r in rec["ft_sites"]] == ["unit_storm_site"]
+    # 5 detections in one observation >= min_detections ⇒ storm
+    assert [a["site"] for a in rec["alerts"]] == ["unit_storm_site"]
+    assert seen and seen[0].site == "unit_storm_site"
+    # alert state is per-step: next step record carries none
+    assert "alerts" not in sink.step_end(1)
+
+
+def test_histogram_log2_buckets():
+    assert metrics_lib._log2_bucket(0.0) == "0"
+    assert metrics_lib._log2_bucket(float("nan")) == "nonfinite"
+    assert metrics_lib._log2_bucket(3.0) == "<=2^2"
+    sink = metrics_lib.MetricsSink([])
+    sink.histogram("h", 3.0)
+    sink.histogram("h", 3.5)
+    rec = sink.step_end(0)
+    assert rec["hists"]["h"] == {"<=2^2": 2}
+
+
+def test_jsonl_roundtrip_aggregate_and_report_table(tmp_path):
+    path = str(tmp_path / "metrics.jsonl")
+    sink = metrics_lib.MetricsSink([metrics_lib.JsonlEmitter(path)])
+    for step in range(3):
+        sink.record_ft(_mk_report("unit_tbl_site", det=2.0, mr=1.5),
+                       step=step)
+        sink.step_end(step, loss=1.0)
+    sink.close()
+    records = metrics_lib.read_jsonl(path)
+    assert len(records) == 3
+    json.loads(open(path).readline())            # really is JSONL
+    agg = metrics_lib.aggregate_sites(records)
+    assert agg["unit_tbl_site"]["detected"] == 6.0
+    assert agg["unit_tbl_site"]["steps_seen"] == 3.0
+    from repro.tools.report import ft_site_table
+    table = ft_site_table(path)
+    assert "unit_tbl_site" in table and "| site |" in table
+
+
+# ---------------------------------------------------------------------------
+# serve-path telemetry (satellite c)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_generate_feeds_sink():
+    from repro.train import serve
+
+    cfg = registry.get_smoke("qwen2-7b")
+    mod = model_zoo.module_for(cfg)
+    params = mod.init(cfg, KEY, jnp.float32)
+    run = RunConfig(model=cfg, ft=ONLINE_BLOCK, dtype="float32",
+                    attn_chunk=16)
+    sc = serve.ServeConfig(max_len=32, batch_slots=2)
+    mem = metrics_lib.MemoryEmitter()
+    sink = metrics_lib.MetricsSink([mem])
+    prompts = np.asarray(
+        jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size))
+    out = serve.generate(params, prompts, cfg, run, sc, max_new_tokens=3,
+                         sink=sink)
+    assert out.shape == (2, 3)
+    assert len(mem.records) == 4                 # 1 prefill + 3 decode
+    assert mem.records[0]["gauges"]["phase"] == "prefill"
+    assert mem.records[0]["counters"]["requests"] == 2
+    assert mem.records[-1]["counters"]["decoded_tokens"] == 6
+    for rec in mem.records:
+        assert "ft" in rec                       # report emitted every step
+        assert rec["ft"]["detected"] == 0.0      # no injection in serve
+
+
+def test_serve_with_report_unsupported_families_raise():
+    from repro.train import serve
+
+    cfg = registry.get_smoke("mamba2-780m")
+    run = RunConfig(model=cfg, ft=ONLINE_BLOCK, dtype="float32")
+    with pytest.raises(NotImplementedError):
+        serve.make_serve_fns(cfg, run, with_report=True)
