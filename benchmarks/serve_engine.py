@@ -1,0 +1,224 @@
+"""FT serving engine benchmark + CI gates (PR 9).
+
+Four claims, each emitted as a CSV row and asserted in place so a serving
+regression fails CI rather than a dashboard:
+
+  1. **Paged ≡ dense** — the continuous-batching engine (paged KV, per-row
+     ragged flashft decode) produces EXACTLY the greedy token streams of
+     the slot-based dense baseline (`train.serve.generate`) with ABFT on.
+     Greedy argmax equality over every step is the token-level form of the
+     logits-allclose gate (the numeric form lives in
+     tests/test_serve_engine.py).
+  2. **Throughput + TTFT** — tokens/s/slot and submit→first-token latency
+     under synthetic multi-request traffic, engine vs the dense baseline.
+     CPU wall time (Pallas decode in interpret mode, compile included — a
+     fresh engine retraces) is a *trend* row; the structural rows are what
+     transfer to TPU.
+  3. **HBM per slot** — the paged pool's bytes-per-slot vs the dense
+     n_slots × max_len stripe, from `kv_cache.PagePlan` accounting;
+     asserts paged ≤ dense (strictly < when a page < max_len exists).
+  4. **Decode-path SEU campaign** — in-kernel stochastic SEUs injected at
+     the `dec_flash` site through `paged_decode_step`, fed to a real
+     `MetricsSink`: the corrected-SEU counters must be NONZERO and every
+     detection must attribute to `dec_flash` only.
+
+``REPRO_BENCH_SMOKE=1`` shrinks shapes/traffic. Run via
+``python -m benchmarks.run --only serve_engine``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import telemetry
+from repro.core.policy import FTConfig
+from repro.models import transformer as tfm
+from repro.models.blocks import Ctx
+from repro.tools import metrics as metrics_lib
+from repro.train import kv_cache as kvc
+from repro.train import serve
+from repro.train.engine import EngineConfig, ServeEngine
+from .common import emit
+
+FT = FTConfig(action="correct", level="block", backend="pallas")
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def _setup(smoke: bool):
+    if smoke:
+        cfg = ModelConfig(arch_id="serve-bench", family="dense", n_layers=2,
+                          d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                          vocab_size=256, head_dim=128)
+        traffic = dict(n_req=4, prompt_len=12, max_new=6, n_slots=2,
+                       max_len=32, page_size=8)
+    else:
+        cfg = ModelConfig(arch_id="serve-bench", family="dense", n_layers=4,
+                          d_model=256, n_heads=8, n_kv_heads=4, d_ff=512,
+                          vocab_size=2048, head_dim=128)
+        traffic = dict(n_req=8, prompt_len=64, max_new=16, n_slots=4,
+                       max_len=128, page_size=16)
+    run = RunConfig(model=cfg, ft=FT, dtype="float32")
+    params = tfm.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, run, params, traffic
+
+
+def _prompts(t, vocab):
+    rng = np.random.default_rng(7)
+    return rng.integers(1, vocab, (t["n_req"], t["prompt_len"]))
+
+
+# ---------------------------------------------------------------------------
+# 1 + 2: paged ≡ dense token streams, tokens/s/slot, TTFT
+# ---------------------------------------------------------------------------
+
+def _engine_pass(cfg, run, params, t, prompts, sink=None):
+    ec = EngineConfig(max_len=t["max_len"], n_slots=t["n_slots"],
+                      page_size=t["page_size"],
+                      max_new_tokens=t["max_new"])
+    eng = ServeEngine(params, cfg, run, ec, sink=sink)
+    for p in prompts:
+        eng.submit(p)
+    t0 = time.perf_counter()
+    res = eng.run()
+    dt = time.perf_counter() - t0
+    return eng, res, dt
+
+
+def _paged_vs_dense(cfg, run, params, t) -> None:
+    prompts = _prompts(t, cfg.vocab_size)
+    sc = serve.ServeConfig(max_len=t["max_len"],
+                           batch_slots=t["n_req"])
+    t0 = time.perf_counter()
+    dense_toks = serve.generate(params, prompts, cfg, run, sc,
+                                max_new_tokens=t["max_new"])
+    dt_dense = time.perf_counter() - t0
+    eng, res, dt_eng = _engine_pass(cfg, run, params, t, prompts)
+
+    # the gate: greedy streams identical, every page back on the free list
+    assert len(res) == t["n_req"]
+    for i, r in enumerate(res):
+        assert r.tokens == dense_toks[i].tolist(), (
+            f"paged/dense divergence at rid {i}: "
+            f"{r.tokens} vs {dense_toks[i].tolist()}")
+    assert eng.alloc.n_free == eng.plan.n_pages - 1
+    emit("serve_engine/paged_vs_dense_tokens", float("nan"),
+         f"requests={t['n_req']} tokens_per_req={t['max_new']} "
+         f"exact_match=1 pages_conserved=1")
+
+    n_tok = sum(len(r.tokens) for r in res)
+    tps_slot = n_tok / dt_eng / t["n_slots"]
+    tps_dense = n_tok / dt_dense / t["n_req"]   # baseline: 1 slot per req
+    ttft = [r.ttft_s for r in res]
+    emit("serve_engine/engine_throughput", dt_eng * 1e6,
+         f"tok_per_s_per_slot={tps_slot:.1f} slots={t['n_slots']} "
+         f"tokens={n_tok}")
+    emit("serve_engine/dense_baseline_throughput", dt_dense * 1e6,
+         f"tok_per_s_per_slot={tps_dense:.1f} slots={t['n_req']}")
+    emit("serve_engine/ttft", float("nan"),
+         f"mean_s={np.mean(ttft):.4f} max_s={np.max(ttft):.4f} "
+         f"queued_requests={t['n_req'] - t['n_slots']}")
+
+
+# ---------------------------------------------------------------------------
+# 3: HBM per slot — paged pool vs dense stripe
+# ---------------------------------------------------------------------------
+
+def _hbm_per_slot(cfg, t) -> None:
+    plan = kvc.plan_pages(cfg, FT, n_slots=t["n_slots"],
+                          max_len=t["max_len"], dtype=jnp.float32,
+                          page_size=t["page_size"])
+    paged = plan.hbm_bytes_per_slot(cfg, dtype_bytes=4)
+    dense = plan.dense_hbm_bytes_per_slot(cfg, dtype_bytes=4)
+    assert paged <= dense, (paged, dense)
+    # at slack=1 every slot can reach max_len so per-slot parity with dense
+    # is the ceiling; the paged win is oversubscription — a pool sized for
+    # *average* occupancy (slack=0.5 here) while dense must provision peak:
+    over = kvc.plan_pages(cfg, FT, n_slots=t["n_slots"],
+                          max_len=t["max_len"], dtype=jnp.float32,
+                          page_size=t["page_size"], slack=0.5)
+    over_b = over.hbm_bytes_per_slot(cfg, dtype_bytes=4)
+    assert over_b < dense, (over_b, dense)
+    emit("serve_engine/hbm_per_slot", float("nan"),
+         f"paged_bytes={paged} dense_bytes={dense} "
+         f"ratio={paged / dense:.3f} oversub_bytes={over_b} "
+         f"oversub_ratio={over_b / dense:.3f} pages={plan.n_pages} "
+         f"page_size={plan.page_size}")
+
+
+# ---------------------------------------------------------------------------
+# 4: decode-path SEU campaign through the sink
+# ---------------------------------------------------------------------------
+
+def _seu_campaign(cfg, params, t, n_steps: int = 6) -> None:
+    ft = FT.replace(inject_rate=1.0)
+    page, mp = t["page_size"], -(-t["max_len"] // t["page_size"])
+    b = t["n_slots"]
+    n_pages = 1 + b * mp
+    alloc = kvc.PageAllocator(n_pages, b, mp, page)
+    cache = kvc.init_paged_cache(cfg.n_layers, n_pages, b, mp,
+                                 cfg.n_kv_heads, page, cfg.head_dim,
+                                 jnp.float32)
+    rng = np.random.default_rng(3)
+    lengths = np.full((b,), t["prompt_len"], np.int32)
+    for slot in range(b):
+        s, _ = alloc.alloc_slot(int(lengths[slot]))
+        shape = (cfg.n_layers, int(lengths[slot]), cfg.n_kv_heads,
+                 cfg.head_dim)
+        cache = kvc.write_prefill(
+            cache, s, jnp.asarray(alloc.page_table[s]),
+            jnp.asarray(rng.standard_normal(shape), jnp.float32),
+            jnp.asarray(rng.standard_normal(shape), jnp.float32),
+            int(lengths[slot]))
+        alloc.ensure(s, int(lengths[slot]) + n_steps + 1)  # capacity upfront
+    cache["page_table"] = jnp.asarray(alloc.page_table)
+    cache["length"] = jnp.asarray(lengths)
+
+    @jax.jit
+    def step(p, tok, pcache, key):
+        ctx = Ctx(ft=ft, key=key, dtype=jnp.float32,
+                  inject_sites=("dec_flash",))
+        (logits, nc), rep = telemetry.scoped(
+            lambda: tfm.paged_decode_step(p, tok, pcache, cfg, ctx))
+        return logits, nc, rep
+
+    path = os.path.join(tempfile.mkdtemp(prefix="serve_bench_"),
+                        "serve_metrics.jsonl")
+    sink = metrics_lib.MetricsSink([metrics_lib.JsonlEmitter(path)])
+    tok = jnp.asarray(rng.integers(1, cfg.vocab_size, (b, 1)), jnp.int32)
+    for i in range(n_steps):
+        logits, cache, rep = step(params, tok, cache,
+                                  jax.random.PRNGKey(50 + i))
+        sink.record_ft(rep, step=i)
+        sink.gauge("phase", "decode")
+        sink.step_end(i)
+        tok = jnp.argmax(logits.reshape(b, -1), -1).astype(jnp.int32)[:, None]
+    sink.close()
+
+    records = metrics_lib.read_jsonl(path)
+    assert len(records) == n_steps
+    agg = metrics_lib.aggregate_sites(records)
+    hit = {s: a for s, a in agg.items() if a["detected"] > 0}
+    assert "dec_flash" in hit, f"no decode-path detections: {agg}"
+    assert set(hit) == {"dec_flash"}, (
+        f"detections leaked beyond dec_flash: {hit}")
+    corrected = hit["dec_flash"]["corrected"]
+    assert corrected > 0, f"SEUs detected but none corrected: {hit}"
+    emit("serve_engine/decode_seu_campaign", float("nan"),
+         f"site=dec_flash detected={hit['dec_flash']['detected']:.0f} "
+         f"corrected={corrected:.0f} steps={n_steps} jsonl_ok=1")
+
+
+def run() -> None:
+    cfg, run_cfg, params, traffic = _setup(_smoke())
+    _paged_vs_dense(cfg, run_cfg, params, traffic)
+    _hbm_per_slot(cfg, traffic)
+    _seu_campaign(cfg, params, traffic)

@@ -156,6 +156,40 @@ layer over everything above)::
     # Spans: kernel dispatch fronts wear @traced("kernel/…") name scopes;
     # `python -m benchmarks.run --trace-dir d/` dumps a Perfetto trace.
 
+Worked example — paged ragged flash decode (PR 9; what the serving
+engine's `transformer.paged_decode_step` launches per layer)::
+
+    from repro.kernels import ops
+    from repro.train import kv_cache as kvc
+
+    # KV lives in a page pool (n_pages, KVH, page, dh) — ONE page is ONE
+    # kv block of the kernel, streamed through a scalar-prefetched page
+    # table; lengths int32[B] are per-row ragged (a slot at 17 tokens and
+    # a slot at 4096 share the launch, each masked at ITS length; dead
+    # slots ride the reserved null page and write exact zeros).
+    out, rep = ops.flash_ft_decode(q, k_pages, v_pages, lengths,
+                                   page_table, ft=ft)
+    # q (B, H, dh) with GQA folded to grid rows g = slot * KVH + kv_head
+    # (n_rep query heads per row — KV never repeat-materialized); rep
+    # (B*KVH, 1, 8) carries [det, corr, row, col, mag, max_res, tau, k].
+
+    # Tuning the decode variant — its streamed block IS the page size, so
+    # the autotuned bn feeds kv_cache.plan_pages and the cache layout and
+    # the kernel tile stay ONE number:
+    #   spec = templates.FlashKernelSpec(ft_level="block",
+    #                                    direction="decode", dh=128)
+    #   p = autotune.best_params(bq, max_len, 128, 4, ft_level="block",
+    #                            spec=spec, batch=B*KVH)
+    #   plan = kvc.plan_pages(cfg, ft, n_slots=B, max_len=max_len)
+    #   assert plan.page_size == p.bn     # gather granularity ≡ kv block
+    # (bq is the sublane-padded n_rep — decode's stationary axis is the
+    # GQA group, not a seq block; the head dim never tiles.)
+    # Deterministic SEUs address a grid row: ops.flash_ft_decode(...,
+    # spec=InjectionSpec(row=1, col=7, k_step=1, magnitude=777.0),
+    # inj_g=slot * KVH + kv_head); correction is bit-exact (the PV
+    # accumulator is verified before the output rescale) —
+    # tests/test_serve_engine.py gates this on every PR.
+
 The epilogue extension hook is unchanged (register an `EpilogueOp` — give
 it a ``grad`` rule and it can also ride the act_grad multi-output variant
 — see `templates/epilogues.py`); batched/grouped specs accept aux-free
@@ -174,7 +208,11 @@ Other modules:
                  since PR 5 its BACKWARD is first-class too: saved (m, l)
                  statistics, dedicated dQ/dK/dV kernels, degenerate-row
                  zeroing, and the in-kernel stochastic SEU hook
-                 (`templates.emit.stochastic_seu`) for fault campaigns
+                 (`templates.emit.stochastic_seu`) for fault campaigns;
+                 since PR 9 the paged DECODE direction: one query row per
+                 GQA group, KV streamed page-by-page through a
+                 scalar-prefetched page table with per-slot ragged lengths
+                 (the serving engine's per-layer attention launch)
   grouped/    -- batched & grouped subsystem (layout + dispatch, PR 3;
                  tgmm backward-dw kernel, PR 4)
   ops.py      -- dispatching front doors (padding, autotune, interpret)

@@ -93,7 +93,7 @@ _DKV_KERNEL_TARGETS = ("dp_kv", "dv", "dk")
 
 #: Per-kernel salts for the stochastic hook — one independent stream per
 #: direction from a single campaign key.
-SALT_FWD, SALT_DQ, SALT_DKV = 0x51, 0x52, 0x53
+SALT_FWD, SALT_DQ, SALT_DKV, SALT_DECODE = 0x51, 0x52, 0x53, 0x54
 
 _CONTRACT_ROWS = (((0,), (0,)), ((), ()))     # Aᵀ·B without a transpose
 
@@ -261,6 +261,136 @@ def _flash_ft_kernel(inj_ref, mag_ref, rng_ref, dims_ref,
                                      ).astype(m_out_ref.dtype)
             l_out_ref[0] = jnp.where(good, l_fin, 0.0
                                      ).astype(l_out_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged ragged decode kernel (PR 9)
+# ---------------------------------------------------------------------------
+
+def _flash_decode_kernel(inj_ref, mag_ref, rng_ref, len_ref, tbl_ref,
+                         q_ref, k_ref, v_ref,
+                         o_ref, rep_ref, acc_ref, m_ref, l_ref, *,
+                         kv_steps: int, kvh: int, bq: int, page: int,
+                         dh: int, scale: float, corrects: bool,
+                         rel_tau: float, protect_qk: bool,
+                         inject_rate: float, bit_shift: int):
+    """Single-position paged decode with per-row ragged lengths.
+
+    Grid (n_slots · n_kv_heads, max_pages): one grid row per (serving slot,
+    kv head); its stationary q block holds that head's n_rep GQA query rows
+    (zero-padded to the sublane-aligned bq — checksum-neutral, sliced off by
+    the ops wrapper) at ONE decode position, and the reduction walk streams
+    the slot's KV-cache pages. The page table (``tbl_ref``) is consumed by
+    the K/V *index maps* — each kv step DMAs exactly the physical page the
+    slot's table names, so thousands of slots share one pool with no dense
+    padding; the body itself reads only the per-slot true length
+    (``len_ref``, the ragged `int32[B]` replacing the forward's one
+    (Sq, Skv) pair). Both GEMMs carry the same fused ABFT as the forward:
+    S = QKᵀ verified before masking, Δ = PV verified with the τ clamped to
+    the row's LIVE kv span (min(true_len − page·s, page)) so detection
+    stays exact on ragged rows. Slots with true length 0 (dead slots
+    streaming the null page) never execute a step and flush exact zeros via
+    the m-degenerate clamp."""
+    del tbl_ref                      # routing only — consumed by index maps
+    g = pl.program_id(0)
+    s = pl.program_id(1)
+    slot = g // kvh
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        rep_ref[...] = jnp.zeros_like(rep_ref)
+
+    true_len = len_ref[slot]
+    kv_start = s * page
+    run = kv_start < true_len
+
+    # One stochastic SEU per (slot, kv head) grid row, step drawn over the
+    # slot's LIVE page walk (ceil(len/page)) so the realized rate matches
+    # the nominal one across ragged rows.
+    n_live = jnp.maximum((true_len + page - 1) // page, 0)
+    st_hit, st_step, st_row, st_col = temit.stochastic_seu(
+        rng_ref, SALT_DECODE, g, n_live, bq, dh, inject_rate)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)               # (page, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+
+        scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if protect_qk:
+            ck_col = jnp.dot(jnp.sum(q, 0, keepdims=True), k.T)  # (1,page)
+            ck_row = jnp.dot(q, jnp.sum(k.T, 1, keepdims=True))  # (bq, 1)
+            d_col = jnp.sum(scores, 0, keepdims=True) - ck_col
+            d_row = jnp.sum(scores, 1, keepdims=True) - ck_row
+            tau_qk = jnp.maximum(
+                rel_tau * F32EPS * dh
+                * jnp.max(jnp.abs(q)) * jnp.max(jnp.abs(k)), 1e-30)
+            scores, det_qk, mag_qk, row_qk, col_qk = \
+                temit._locate_correct_full(scores, d_col, d_row, tau_qk,
+                                           corrects, bq, page)
+            temit._record(rep_ref, det_qk, mag_qk, row_qk,
+                          col_qk + kv_start, d_col, d_row, tau_qk,
+                          (s + 1.0) * 1.0, corrects)
+        scores = scores * scale
+
+        # ---- emulated SEU (deterministic campaign vector) ----------------
+        enable, g_g, g_qi, g_s, g_row, g_col = (
+            inj_ref[0], inj_ref[1], inj_ref[2], inj_ref[3], inj_ref[4],
+            inj_ref[5])
+        hit = ((enable == 1) & (g_g == g) & (g_qi == 0) & (g_s == s))
+
+        # Per-row ragged masking: positions at or past the slot's true
+        # length (including every position of a trailing NULL/garbage page)
+        # are dead — masked AFTER the linear score verification, like the
+        # forward's kv edge. Decode needs no causal term: the query IS
+        # position true_len − 1, so the span mask is the causal mask.
+        kpos = kv_start + _iota2((bq, page), 1)
+        scores = jnp.where(kpos < true_len, scores, NEG_INF)
+
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, 1, keepdims=True))
+        good = m_new > 0.5 * NEG_INF
+        p = jnp.exp(jnp.minimum(scores - m_new, 0.0))     # (bq, page)
+        p = jnp.where(good, p, 0.0)
+        alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+
+        delta = jnp.dot(p, v, preferred_element_type=jnp.float32)  # (bq,dh)
+        inj_mask = ((_iota2((bq, dh), 0) == g_row)
+                    & (_iota2((bq, dh), 1) == g_col) & hit)
+        delta = delta + jnp.where(inj_mask, mag_ref[0], 0.0)
+        delta = temit.apply_seu(delta, st_row, st_col,
+                                st_hit & (st_step == s), bit_shift)
+
+        # ---- fused ABFT on the PV GEMM -----------------------------------
+        ck_col = jnp.dot(jnp.sum(p, 0, keepdims=True), v)          # (1, dh)
+        ck_row = jnp.dot(p, jnp.sum(v, 1, keepdims=True))          # (bq, 1)
+        d_col = jnp.sum(delta, 0, keepdims=True) - ck_col
+        d_row = jnp.sum(delta, 1, keepdims=True) - ck_row
+        # τ follows the row's live span on the final (partial) page, not
+        # the full page width — the ragged-rows-stay-exact clamp.
+        eff_kv = jnp.minimum(true_len - kv_start, page).astype(jnp.float32)
+        tau = jnp.maximum(rel_tau * F32EPS * eff_kv * jnp.max(jnp.abs(v)),
+                          1e-30)
+        delta, det_pv, mag_pv, row_pv, col_pv = temit._locate_correct_full(
+            delta, d_col, d_row, tau, corrects, bq, dh)
+        temit._record(rep_ref, det_pv, mag_pv, row_pv, col_pv,
+                      d_col, d_row, tau, eff_kv, corrects)
+
+        acc_ref[...] = acc_ref[...] * alpha + delta
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, 1, keepdims=True)
+        m_ref[...] = m_new
+
+    @pl.when(s == kv_steps - 1)
+    def _flush():
+        m_fin = m_ref[...]
+        l_fin = l_ref[...]
+        good = (m_fin > 0.5 * NEG_INF) & (l_fin > 0.0)
+        linv = jnp.where(good, 1.0 / jnp.maximum(l_fin, 1e-30), 0.0)
+        o_ref[0] = (acc_ref[...] * linv).astype(o_ref.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -589,6 +719,44 @@ def flash_ft_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         q, k, v, inj_idx, inj_mag, rng, dims, bq=bq, bkv=bkv, causal=causal,
         ft=ft, interpret=interpret, protect_qk=protect_qk, scale=scale,
         n_rep=n_rep, save_stats=save_stats)
+
+
+@traced("kernel/flashft/decode")
+@functools.partial(jax.jit, static_argnames=("kvh", "ft", "interpret",
+                                             "protect_qk", "scale"))
+def flash_ft_decode_attention(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, inj_idx: jax.Array,
+                              inj_mag: jax.Array, lengths: jax.Array,
+                              page_table: jax.Array,
+                              rng: Optional[jax.Array] = None, *,
+                              kvh: int, ft: FTConfig,
+                              interpret: bool = False,
+                              protect_qk: bool = True,
+                              scale: float = None):
+    """Paged ragged decode: q (B·kvh, bq, dh) — one stationary block per
+    (slot, kv head) holding the head's n_rep GQA query rows at the slot's
+    current position; k_pages/v_pages (n_pages, kvh, page, dh) — ONE
+    layer's shared page pool; lengths int32[B] per-slot true kv lengths
+    (the ragged vector; 0 = dead slot → exact-zero output); page_table
+    int32[B, max_pages] physical page ids (NULL-padded), scalar-prefetched
+    into the K/V index maps. inj_idx int32[6] = [enable, g, 0, kv_step,
+    row, col] with g = slot·kvh + head (`encode_injection(spec, bh=g)`);
+    rng int32[3] the stochastic hook (`encode_rng`). Returns
+    (out (B·kvh, bq, dh), report (B·kvh, 1, W))."""
+    g_rows, bq, dh = q.shape
+    n_pages, kvh_p, page, dh_k = k_pages.shape
+    assert kvh_p == kvh and dh_k == dh, (k_pages.shape, kvh, dh)
+    assert g_rows == page_table.shape[0] * kvh, (q.shape, page_table.shape,
+                                                 kvh)
+    assert lengths.shape == (page_table.shape[0],), (lengths.shape,
+                                                     page_table.shape)
+    if rng is None:
+        rng = jnp.zeros((3,), jnp.int32)
+    scale = scale if scale is not None else dh ** -0.5
+    return tregistry.flash_decode_call(
+        q, k_pages, v_pages, inj_idx, inj_mag, rng, lengths, page_table,
+        kvh=kvh, ft=ft, interpret=interpret, protect_qk=protect_qk,
+        scale=scale)
 
 
 @traced("kernel/flashft/dq")

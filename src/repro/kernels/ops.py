@@ -430,6 +430,84 @@ def flash_ft(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out[:, :sq, :dh], rep
 
 
+@traced("kernel/flash_decode")
+def flash_ft_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    lengths: jax.Array, page_table: jax.Array, *,
+                    ft: FTConfig = ONLINE_BLOCK,
+                    spec: Optional[InjectionSpec] = None, inj_g: int = 0,
+                    interpret: Optional[bool] = None,
+                    protect_qk: bool = True,
+                    key: Optional[jax.Array] = None):
+    """Paged single-position flash decode with per-row ragged lengths
+    (PR 9) — the serving engine's attention kernel.
+
+    q: (B, H, dh) — one query position per serving slot; k_pages/v_pages:
+    (n_pages, KVH, page, dh) — ONE layer of the shared page pool
+    (`train.kv_cache`); lengths: int32[B] per-slot TRUE kv lengths (the
+    ragged vector that replaces the forward's one (Sq, Skv) pair; 0 marks
+    a dead slot, which returns exact zeros); page_table: int32[B,
+    max_pages] physical page ids, scalar-prefetched into the kernel's K/V
+    index maps so each (slot, head) grid row streams exactly its own
+    pages out of the pool.
+
+    dh must be lane-aligned (128-multiple) — the paged pool is laid out at
+    kernel geometry, so there is no pad-and-slice here; callers with
+    smaller head dims take the gather+dense oracle path
+    (`models.blocks.paged_decode_attention`). The GQA query group of each
+    kv head (n_rep = H // KVH rows) is the stationary block, zero-padded
+    to the sublane edge (checksum-neutral; garbage rows sliced off).
+
+    ``spec``/``inj_g`` land a deterministic SEU in grid row ``inj_g``
+    (= slot·KVH + head) at kv step ``spec.k_step``; ``key`` drives the
+    stochastic in-kernel hook (salt ``SALT_DECODE``). Returns
+    (out (B, H, dh), report (B·KVH, 1, W))."""
+    from . import flashft
+    b, h, dh = q.shape
+    n_pages, kvh, page, dh_k = k_pages.shape
+    assert v_pages.shape == k_pages.shape, (k_pages.shape, v_pages.shape)
+    assert dh == dh_k, (q.shape, k_pages.shape)
+    assert h % kvh == 0, (h, kvh)
+    if dh % 128 != 0:
+        raise ValueError(f"flash_ft_decode needs a lane-aligned head dim "
+                         f"(128-multiple), got {dh} — use the dense "
+                         f"decode_attention oracle path")
+    max_pages = page_table.shape[1]
+    assert page_table.shape[0] == b and lengths.shape == (b,), \
+        (page_table.shape, lengths.shape, b)
+    n_rep = h // kvh
+    in_bytes = q.dtype.itemsize
+    sub = search.sublane(in_bytes)
+    bq = -(-n_rep // sub) * sub
+    # Keep the decode variant in the tuning pipeline: the lookup records /
+    # reuses the ``/v_flashdecode`` cache entry whose streamed block chose
+    # the page size (`kv_cache.plan_pages` consults the same spec), and
+    # validates this geometry against the variant's VMEM model.
+    fspec = _flash_spec(ft, "decode", dh)
+    autotune.best_params(bq, max(max_pages * page, autotune.MXU), dh,
+                         in_bytes, ft_level=fspec.ft_level, spec=fspec,
+                         batch=b * kvh)
+
+    if spec is not None:
+        if not (0 <= inj_g < b * kvh and 0 <= spec.k_step < max_pages):
+            raise ValueError(
+                f"flash_ft_decode: deterministic injection targets grid "
+                f"row {inj_g} of {b * kvh}, kv step {spec.k_step} of "
+                f"{max_pages} — outside the decode grid, the SEU would "
+                f"silently never land")
+    inj_idx, inj_mag = flashft.encode_injection(spec, inj_g, 0)
+    rng = flashft.encode_rng(key, ft)
+
+    qg = q.reshape(b * kvh, n_rep, dh)
+    if bq > n_rep:
+        qg = jnp.pad(qg, ((0, 0), (0, bq - n_rep), (0, 0)))
+    out, rep = flashft.flash_ft_decode_attention(
+        qg, k_pages, v_pages, inj_idx, inj_mag,
+        lengths.astype(jnp.int32), page_table.astype(jnp.int32), rng,
+        kvh=kvh, ft=ft, interpret=_should_interpret(interpret),
+        protect_qk=protect_qk, scale=dh ** -0.5)
+    return out[:, :n_rep].reshape(b, h, dh), rep
+
+
 @traced("kernel/flash_ft_bwd")
 def flash_ft_bwd(q: jax.Array, k: jax.Array, v: jax.Array, o: jax.Array,
                  m: jax.Array, l: jax.Array, g: jax.Array, *,

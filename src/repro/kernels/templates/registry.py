@@ -230,6 +230,68 @@ def flash_fwd_call(q, k, v, inj_idx, inj_mag, rng, dims, *, bq: int,
     return tuple(result)
 
 
+def flash_decode_call(q, k_pages, v_pages, inj_idx, inj_mag, rng, lengths,
+                      page_table, *, kvh: int, ft: FTConfig,
+                      interpret: bool, protect_qk: bool, scale: float):
+    """Paged ragged decode launch (PR 9). Grid (B·kvh, max_pages): one row
+    per (slot, kv head), reduction walk over the slot's KV pages. The
+    scalar-prefetched page table drives the K/V *index maps* — kv step s of
+    grid row g DMAs physical page ``page_table[g // kvh, s]`` of kv head
+    ``g % kvh`` straight out of the shared (n_pages, kvh, page, dh) pool,
+    so the kernel streams exactly the slot's pages (NULL entries stream the
+    trash page; the in-body length mask keeps them unattended). The length
+    vector replaces the forward's (Sq, Skv) dims pair — per-row ragged
+    dispatch. Returns (out (B·kvh, bq, dh), report (B·kvh, 1, W))."""
+    from .. import flashft
+
+    g_rows, bq, dh = q.shape
+    n_pages, _, page, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    grid = (g_rows, max_pages)
+    kernel = functools.partial(
+        flashft._flash_decode_kernel, kv_steps=grid[1], kvh=kvh, bq=bq,
+        page=page, dh=dh, scale=scale, corrects=ft.corrects,
+        rel_tau=ft.rel_tau, protect_qk=protect_qk,
+        inject_rate=ft.inject_rate, bit_shift=ft.inject_bit_shift)
+
+    # prefetch order: inj_idx, inj_mag, rng, lengths, page_table — the
+    # table is pf[4] inside the index maps.
+    kv_spec = pl.BlockSpec(
+        (1, 1, page, dh),
+        lambda g, s, *pf: (pf[4][g // kvh, s], g % kvh, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda g, s, *_: (g, 0, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, dh), lambda g, s, *_: (g, 0, 0)),
+            pl.BlockSpec((1, 1, REPORT_WIDTH), lambda g, s, *_: (g, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+    )
+    out, rep = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((g_rows, bq, dh), q.dtype),
+            jax.ShapeDtypeStruct((g_rows, 1, REPORT_WIDTH), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY),
+        ),
+        interpret=interpret,
+    )(inj_idx, inj_mag, rng, lengths, page_table, q, k_pages, v_pages)
+    return out, rep
+
+
 def flash_dq_call(q, k, v, g, m, l, di, inj_idx, inj_mag, rng, dims, *,
                   bq: int, bkv: int, causal: bool, ft: FTConfig,
                   interpret: bool, protect_qk: bool, scale: float,

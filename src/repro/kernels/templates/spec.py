@@ -289,14 +289,21 @@ class FlashKernelSpec(KernelSpec):
       * "fwd" — the forward kernel (2 in-kernel GEMMs: S = QKᵀ, Δ = PV);
         ``save_stats`` adds the per-row (m, l) softmax-statistic outputs the
         dedicated backward consumes.
+      * "decode" — the paged single-position serving kernel (PR 9): same
+        2-GEMM online-softmax body as "fwd" but the stationary block is one
+        kv head's GQA query rows, the streamed block is ONE KV-cache page
+        routed through a scalar-prefetched page table, and per-row ragged
+        true lengths (an ``int32[B]`` vector, not one (Sq, Skv) pair)
+        bound both the masking and the checksum-verify τ.
       * "dq"  — q-block-stationary backward: recomputes S from the saved
         stats and runs dP = g·Vᵀ and dQ = dS·K (3 GEMMs).
       * "dkv" — kv-block-stationary backward: S recompute + dP = g·Vᵀ,
         dV = Pᵀ·g, dK = dSᵀ·Q (4 GEMMs).
 
-    Cache-key tags are ``flashfwd[_stats]`` / ``flashbwd_dq`` /
-    ``flashbwd_dkv`` — new ``/v_*`` components, so existing cache entries
-    (plain GEMM, fused, batched, tgmm) are untouched.
+    Cache-key tags are ``flashfwd[_stats]`` / ``flashdecode`` /
+    ``flashbwd_dq`` / ``flashbwd_dkv`` — new ``/v_*`` components, so
+    existing cache entries (plain GEMM, fused, batched, tgmm) are
+    untouched.
     """
     direction: str = "fwd"
     dh: int = 128            # lane-padded head dim (streamed whole)
@@ -304,7 +311,7 @@ class FlashKernelSpec(KernelSpec):
 
     flash = True
 
-    _GEMMS = {"fwd": 2, "dq": 3, "dkv": 4}
+    _GEMMS = {"fwd": 2, "decode": 2, "dq": 3, "dkv": 4}
 
     def __post_init__(self):
         super().__post_init__()
@@ -321,8 +328,8 @@ class FlashKernelSpec(KernelSpec):
             raise ValueError("save_stats is a forward-direction feature")
 
     def variant_key(self) -> str:
-        tag = {"fwd": "flashfwd", "dq": "flashbwd_dq",
-               "dkv": "flashbwd_dkv"}[self.direction]
+        tag = {"fwd": "flashfwd", "decode": "flashdecode",
+               "dq": "flashbwd_dq", "dkv": "flashbwd_dkv"}[self.direction]
         if self.save_stats:
             tag += "_stats"
         return tag
@@ -335,7 +342,7 @@ class FlashKernelSpec(KernelSpec):
         bs, bt = params.bm, params.bn          # stationary / streamed blocks
         dh = self.dh
         trans = 3 * bs * bt * 4                # scores, p, ds (≤3 live)
-        if self.direction == "fwd":
+        if self.direction in ("fwd", "decode"):
             tiles = 2 * (bs * dh + 2 * bt * dh) * in_bytes
             acc = bs * dh * 4 + 2 * bs * 4     # acc + m/l scratch
             stats = 2 * bs * 4 if self.save_stats else 0
@@ -363,7 +370,7 @@ class FlashKernelSpec(KernelSpec):
         stationary operand (g for the backwards), the f32 statistic columns,
         and the extra gradient output of the dkv direction."""
         extra = 0.0
-        if self.direction != "fwd":
+        if self.direction in ("dq", "dkv"):
             extra += me * self.dh * in_bytes       # g rides with q
             extra += 3 * me * 4                    # m, l, di columns
         elif self.save_stats:

@@ -463,6 +463,45 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(b, 1, h, dh)
 
 
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, lengths: jax.Array,
+                           page_table: jax.Array, ctx: Ctx) -> jax.Array:
+    """Single-position attention against one layer of a *paged* KV cache
+    (train/kv_cache.py). q: (B, 1, H, dh); k_pages, v_pages: (P, KVH, page,
+    dh) page pools; lengths: int32 (B,) true kv lengths; page_table: int32
+    (B, max_pages) pool-page ids per slot (NULL-padded).
+
+    On the pallas FT backend this is ONE `kernels.flashft` decode launch:
+    the page table is scalar-prefetched and consumed by the K/V index maps
+    (each grid step streams exactly one pool page — no dense gather, no
+    padding traffic), the per-slot ragged lengths ride a prefetched int32
+    vector, and both in-kernel GEMMs carry the checksum verify with the
+    kv-span clamp folded into the PV tolerance. Recorded as one fused
+    telemetry site, "dec_flash". Elsewhere (and under
+    ``ctx.attn_impl="chunked"``) the pages are gathered back to the dense
+    (B, S, KVH, dh) layout and `decode_attention` runs as the oracle."""
+    b, _, h, dh = q.shape
+    ft = ctx.ft if ctx.ft.protect_attention else FT_OFF
+    use_kernel = (ctx.attn_impl != "chunked" and dh % 128 == 0
+                  and (ctx.attn_impl == "flash"
+                       or (ft.enabled and ft.backend == "pallas")))
+    if use_kernel:
+        from repro.kernels import ops as kops
+        fkey = ctx.key if ctx.site_allowed("dec_flash") else None
+        out, rep = kops.flash_ft_decode(q[:, 0], k_pages, v_pages, lengths,
+                                        page_table, ft=ft, key=fkey)
+        scope = telemetry.current_scope()
+        if scope is not None:
+            det = jnp.sum(rep[..., 0]).astype(jnp.int32)
+            maxres = jnp.max(rep[..., 5])
+            scope.record_summary(det, maxres, ft.corrects, site="dec_flash")
+        return out[:, None]
+    from repro.train import kv_cache as _kvc
+    kd = _kvc.gather_layer(k_pages, page_table)
+    vd = _kvc.gather_layer(v_pages, page_table)
+    return decode_attention(q, kd, vd, lengths, ctx)
+
+
 def attention(p: Dict[str, Any], x: jax.Array, cfg, ctx: Ctx, *,
               causal: bool = True, positions: Optional[jax.Array] = None,
               kv: Optional[jax.Array] = None,

@@ -165,44 +165,74 @@ def decode_step(params, token, cache, cfg: ModelConfig, ctx: Ctx):
     ssm = cache["ssm"].reshape((ng, ae) + cache["ssm"].shape[1:])
     conv = cache["conv"].reshape((ng, ae) + cache["conv"].shape[1:])
 
-    def group_body(h, scanned):
+    # Serve-path telemetry gate, like transformer.decode_step: per-layer
+    # scoping only when the caller opened an ft_scope. Row layout matches
+    # forward: mamba layer lnum → row 1 + lnum, shared application gidx →
+    # row 1 + ng·ae + gidx.
+    want_ft = telemetry.current_scope() is not None
+
+    def group_body(carry, scanned):
+        h, rep = carry
         gp, ssm_g, conv_g, k_g, v_g, gidx = scanned
 
-        def inner_body(hh, s):
-            lp, ssm_s, conv_s, idx = s
+        def mamba_step(lp, hh, ssm_s, conv_s, idx):
             lctx = ctx.fold(gidx * ae + idx)
             out, ns = M.decode_block(
                 lp["ssm"], rmsnorm(hh, lp["pre_norm"], cfg.norm_eps),
                 {"ssm": ssm_s, "conv": conv_s}, cfg, lctx)
             return hh + out, (ns["ssm"], ns["conv"])
 
-        h, (ssm_new, conv_new) = loops.scan(
-            inner_body, h, (gp, ssm_g, conv_g, jnp.arange(ae)))
+        def inner_body(cc, s):
+            hh, rr = cc
+            lp, ssm_s, conv_s, idx = s
+            if want_ft:
+                (hh, st), rep_l = telemetry.scoped(
+                    lambda: mamba_step(lp, hh, ssm_s, conv_s, idx))
+                rr = rr.merge_at(rep_l, gidx * ae + idx + 1)
+            else:
+                hh, st = mamba_step(lp, hh, ssm_s, conv_s, idx)
+            return (hh, rr), st
 
-        # shared attention block (single-token step against this group's KV)
-        lctx = ctx.fold(1000 + gidx)
-        hn = rmsnorm(h, shared["attn_norm"], cfg.norm_eps)
-        q = lctx.dot("wq", hn, shared["attn"]["wq"])
-        k_new = lctx.dot("wk", hn, shared["attn"]["wk"])
-        v_new = lctx.dot("wv", hn, shared["attn"]["wv"])
-        q = q.reshape(bsz, 1, cfg.n_heads, cfg.head_dim)
-        k_new = k_new.reshape(bsz, 1, cfg.n_kv_heads, cfg.head_dim)
-        v_new = v_new.reshape(bsz, 1, cfg.n_kv_heads, cfg.head_dim)
-        q = B.apply_rope(q, pos[:, None], cfg.rope_theta)
-        k_new = B.apply_rope(k_new, pos[:, None], cfg.rope_theta)
-        oh = jax.nn.one_hot(pos, k_g.shape[1], dtype=k_g.dtype)
-        k_g = k_g + oh[:, :, None, None] * k_new
-        v_g = v_g + oh[:, :, None, None] * v_new
-        att = B.decode_attention(q, k_g, v_g, pos + 1, lctx)
-        h = h + lctx.dot("wo", att.reshape(bsz, 1, -1), shared["attn"]["wo"])
-        hn = rmsnorm(h, shared["ffn_norm"], cfg.norm_eps)
-        h = h + B.mlp(shared["mlp"], hn, lctx)
-        return h, (ssm_new, conv_new, k_g, v_g)
+        (h, rep), (ssm_new, conv_new) = loops.scan(
+            inner_body, (h, rep), (gp, ssm_g, conv_g, jnp.arange(ae)))
 
-    x, (ssm_n, conv_n, k_n, v_n) = loops.scan(
-        group_body, x,
+        def shared_step(h, k_g, v_g):
+            # shared attention block (single-token step vs this group's KV)
+            lctx = ctx.fold(1000 + gidx)
+            hn = rmsnorm(h, shared["attn_norm"], cfg.norm_eps)
+            q = lctx.dot("wq", hn, shared["attn"]["wq"])
+            k_new = lctx.dot("wk", hn, shared["attn"]["wk"])
+            v_new = lctx.dot("wv", hn, shared["attn"]["wv"])
+            q = q.reshape(bsz, 1, cfg.n_heads, cfg.head_dim)
+            k_new = k_new.reshape(bsz, 1, cfg.n_kv_heads, cfg.head_dim)
+            v_new = v_new.reshape(bsz, 1, cfg.n_kv_heads, cfg.head_dim)
+            q = B.apply_rope(q, pos[:, None], cfg.rope_theta)
+            k_new = B.apply_rope(k_new, pos[:, None], cfg.rope_theta)
+            oh = jax.nn.one_hot(pos, k_g.shape[1], dtype=k_g.dtype)
+            k_g = k_g + oh[:, :, None, None] * k_new
+            v_g = v_g + oh[:, :, None, None] * v_new
+            att = B.decode_attention(q, k_g, v_g, pos + 1, lctx)
+            h = h + lctx.dot("wo", att.reshape(bsz, 1, -1),
+                             shared["attn"]["wo"])
+            hn = rmsnorm(h, shared["ffn_norm"], cfg.norm_eps)
+            h = h + B.mlp(shared["mlp"], hn, lctx)
+            return h, (k_g, v_g)
+
+        if want_ft:
+            (h, (k_g, v_g)), rep_s = telemetry.scoped(
+                lambda: shared_step(h, k_g, v_g))
+            rep = rep.merge_at(rep_s, 1 + ng * ae + gidx)
+        else:
+            h, (k_g, v_g) = shared_step(h, k_g, v_g)
+        return (h, rep), (ssm_new, conv_new, k_g, v_g)
+
+    (x, rep), (ssm_n, conv_n, k_n, v_n) = loops.scan(
+        group_body,
+        (x, telemetry.FTReport.empty(rows=1 + ng * (ae + 1))),
         (params["groups"]["inner"], ssm, conv, cache["k"], cache["v"],
          jnp.arange(ng)))
+    if want_ft:
+        telemetry.record_report(rep)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = ctx.dot("lm_head", x, params["head"]["table"])
     new_cache = {
@@ -251,37 +281,66 @@ def prefill(params, tokens, cache, cfg: ModelConfig, ctx: Ctx, *,
         return hh + lctx.dot("out_proj", y, p["out_proj"]), \
             (h_last, conv_tail)
 
-    mamba_prefill_ck = B.make_remat(mamba_prefill, remat)
+    # Same telemetry gate as decode_step; scoping sits INSIDE the remat
+    # wrappers (records cannot cross a checkpoint region), row layout
+    # matches forward.
+    want_ft = telemetry.current_scope() is not None
 
-    def group_body(h, scanned):
+    def mamba_wrapped(lp, hh, lnum):
+        return telemetry.scoped(lambda: mamba_prefill(lp, hh, lnum))
+
+    mamba_prefill_ck = B.make_remat(
+        mamba_wrapped if want_ft else mamba_prefill, remat)
+
+    def group_body(carry, scanned):
+        h, rep = carry
         gp, gidx = scanned
 
-        def inner_body(hh, sc_):
+        def inner_body(cc, sc_):
+            hh, rr = cc
             lp, idx = sc_
-            hh, st = mamba_prefill_ck(lp, hh, gidx * ae + idx)
-            return hh, st
+            lnum = gidx * ae + idx
+            if want_ft:
+                (hh, st), rep_l = mamba_prefill_ck(lp, hh, lnum)
+                rr = rr.merge_at(rep_l, lnum + 1)
+            else:
+                hh, st = mamba_prefill_ck(lp, hh, lnum)
+            return (hh, rr), st
 
-        h, (ssm_g, conv_g) = loops.scan(inner_body, h,
-                                          (gp, jnp.arange(ae)))
-        lctx = ctx.fold(1000 + gidx)
-        hn = rmsnorm(h, shared["attn_norm"], cfg.norm_eps)
-        q = lctx.dot("wq", hn, shared["attn"]["wq"])
-        k = lctx.dot("wk", hn, shared["attn"]["wk"])
-        v = lctx.dot("wv", hn, shared["attn"]["wv"])
-        q = q.reshape(bsz, s, cfg.n_heads, cfg.head_dim)
-        k = k.reshape(bsz, s, cfg.n_kv_heads, cfg.head_dim)
-        v = v.reshape(bsz, s, cfg.n_kv_heads, cfg.head_dim)
-        q = B.apply_rope(q, positions, cfg.rope_theta)
-        k = B.apply_rope(k, positions, cfg.rope_theta)
-        att = B.chunked_attention(q, k, v, causal=True, chunk=chunk,
-                                  ctx=lctx)
-        h = h + lctx.dot("wo", att.reshape(bsz, s, -1), shared["attn"]["wo"])
-        hn = rmsnorm(h, shared["ffn_norm"], cfg.norm_eps)
-        h = h + B.mlp(shared["mlp"], hn, lctx)
-        return h, (ssm_g, conv_g, k, v)
+        (h, rep), (ssm_g, conv_g) = loops.scan(inner_body, (h, rep),
+                                               (gp, jnp.arange(ae)))
 
-    x, (ssm_s, conv_s, ks, vs) = loops.scan(
-        group_body, x, (params["groups"]["inner"], jnp.arange(ng)))
+        def shared_step(h):
+            lctx = ctx.fold(1000 + gidx)
+            hn = rmsnorm(h, shared["attn_norm"], cfg.norm_eps)
+            q = lctx.dot("wq", hn, shared["attn"]["wq"])
+            k = lctx.dot("wk", hn, shared["attn"]["wk"])
+            v = lctx.dot("wv", hn, shared["attn"]["wv"])
+            q = q.reshape(bsz, s, cfg.n_heads, cfg.head_dim)
+            k = k.reshape(bsz, s, cfg.n_kv_heads, cfg.head_dim)
+            v = v.reshape(bsz, s, cfg.n_kv_heads, cfg.head_dim)
+            q = B.apply_rope(q, positions, cfg.rope_theta)
+            k = B.apply_rope(k, positions, cfg.rope_theta)
+            att = B.chunked_attention(q, k, v, causal=True, chunk=chunk,
+                                      ctx=lctx)
+            h = h + lctx.dot("wo", att.reshape(bsz, s, -1),
+                             shared["attn"]["wo"])
+            hn = rmsnorm(h, shared["ffn_norm"], cfg.norm_eps)
+            h = h + B.mlp(shared["mlp"], hn, lctx)
+            return h, (k, v)
+
+        if want_ft:
+            (h, (k, v)), rep_s = telemetry.scoped(lambda: shared_step(h))
+            rep = rep.merge_at(rep_s, 1 + ng * ae + gidx)
+        else:
+            h, (k, v) = shared_step(h)
+        return (h, rep), (ssm_g, conv_g, k, v)
+
+    (x, rep), (ssm_s, conv_s, ks, vs) = loops.scan(
+        group_body, (x, telemetry.FTReport.empty(rows=1 + ng * (ae + 1))),
+        (params["groups"]["inner"], jnp.arange(ng)))
+    if want_ft:
+        telemetry.record_report(rep)
     max_len = cache["k"].shape[2]
     pad = max_len - s
     k_full = jnp.pad(ks.astype(cache["k"].dtype),

@@ -303,19 +303,38 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def decode_step(params, token, cache, cfg: ModelConfig, ctx: Ctx):
     from . import blocks as B
+    from repro.core import telemetry
     x = B.embed(token, params["embed"]["table"]).astype(ctx.dtype)
 
-    def body(h, scanned):
-        lp, ssm_s, conv_s, idx = scanned
+    def layer_fn(lp, h, ssm_s, conv_s, idx):
         lctx = ctx.fold(idx)
         out, new_s = decode_block(lp["ssm"],
                                   rmsnorm(h, lp["pre_norm"], cfg.norm_eps),
                                   {"ssm": ssm_s, "conv": conv_s}, cfg, lctx)
         return h + out, (new_s["ssm"], new_s["conv"])
 
-    x, (ssm_new, conv_new) = loops.scan(
-        body, x, (params["layers"], cache["ssm"], cache["conv"],
-                  jnp.arange(cfg.n_layers)))
+    # Serve-path telemetry gate, like transformer.decode_step: per-layer
+    # scoping (and the report carry) only when the caller opened an
+    # ft_scope — resolved at trace time.
+    want_ft = telemetry.current_scope() is not None
+    n = cfg.n_layers
+
+    def body(carry, scanned):
+        h, rep = carry
+        lp, ssm_s, conv_s, idx = scanned
+        if want_ft:
+            (h, states), rep_l = telemetry.scoped(
+                lambda: layer_fn(lp, h, ssm_s, conv_s, idx))
+            rep = rep.merge_at(rep_l, idx + 1)
+        else:
+            h, states = layer_fn(lp, h, ssm_s, conv_s, idx)
+        return (h, rep), states
+
+    (x, rep), (ssm_new, conv_new) = loops.scan(
+        body, (x, telemetry.FTReport.empty(rows=n + 1)),
+        (params["layers"], cache["ssm"], cache["conv"], jnp.arange(n)))
+    if want_ft:
+        telemetry.record_report(rep)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = ctx.dot("lm_head", x, params["head"]["table"])
     new_cache = {"ssm": ssm_new, "conv": conv_new,
@@ -355,16 +374,33 @@ def prefill(params, tokens, cache, cfg: ModelConfig, ctx: Ctx, *,
         return hdd + lctx.dot("out_proj", y, p["out_proj"]), \
             (h_last, conv_tail)
 
+    from repro.core import telemetry
     from .blocks import make_remat
-    fn = make_remat(layer_fn, remat)
 
-    def body(hdd, scanned):
+    # Scoping must sit INSIDE the remat wrapper (records cannot cross a
+    # checkpoint region as a side channel) — same gate as decode_step.
+    want_ft = telemetry.current_scope() is not None
+
+    def wrapped(lp, hdd, idx):
+        return telemetry.scoped(lambda: layer_fn(lp, hdd, idx))
+
+    fn = make_remat(wrapped if want_ft else layer_fn, remat)
+
+    def body(carry, scanned):
+        hdd, rep = carry
         lp, idx = scanned
-        hdd, states = fn(lp, hdd, idx)
-        return hdd, states
+        if want_ft:
+            (hdd, states), rep_l = fn(lp, hdd, idx)
+            rep = rep.merge_at(rep_l, idx + 1)
+        else:
+            hdd, states = fn(lp, hdd, idx)
+        return (hdd, rep), states
 
-    x, (ssm_s, conv_s) = loops.scan(
-        body, x, (params["layers"], jnp.arange(cfg.n_layers)))
+    (x, rep), (ssm_s, conv_s) = loops.scan(
+        body, (x, telemetry.FTReport.empty(rows=cfg.n_layers + 1)),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    if want_ft:
+        telemetry.record_report(rep)
     x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
     logits = ctx.dot("lm_head", x, params["head"]["table"])[:, 0]
     b = tokens.shape[0]

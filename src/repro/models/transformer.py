@@ -256,6 +256,80 @@ def decode_step(params, token: jax.Array, cache: Dict[str, Any],
     return logits, _shard_cache(new_cache)
 
 
+def paged_decode_step(params, token: jax.Array, cache: Dict[str, Any],
+                      cfg: ModelConfig, ctx: Ctx) -> Tuple[jax.Array, Dict]:
+    """One decode step against the *paged* KV cache (train/kv_cache.py —
+    the serving engine's layout). token: (B, 1) int32 over the engine's
+    slot axis; cache: {"k_pages", "v_pages": (L, P, KVH, page, dh) pools,
+    "page_table": int32 (B, max_pages), "length": int32 (B,)}. Returns
+    (logits (B, 1, V), new cache).
+
+    The new kv lands via a per-layer page-table-routed scatter
+    (`kv_cache.append_layer`) and attention runs through
+    `blocks.paged_decode_attention` — on the pallas FT backend one flashft
+    decode launch per layer with prefetched ragged lengths, so thousands
+    of slots share the pool with zero dense padding. Dead slots (all-NULL
+    table rows, length 0) scatter into the reserved null page and produce
+    ignored garbage logits; the engine rebuilds `page_table`/`length` from
+    the host allocator each step."""
+    from repro.train import kv_cache as kv_cache_lib
+    x = blocks.embed(token, params["embed"]["table"]).astype(ctx.dtype)
+    pos = cache["length"]                                  # (B,)
+    table = cache["page_table"]
+
+    def layer_fn(lp, h, scanned_cache):
+        k_p, v_p, idx = scanned_cache
+        lctx = ctx.fold(idx)
+        hn = blocks.rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = _project_qkv(lp["attn"], hn, cfg, lctx,
+                                       pos[:, None])
+        b = h.shape[0]
+        k_p = kv_cache_lib.append_layer(k_p, k_new[:, 0], table, pos)
+        v_p = kv_cache_lib.append_layer(v_p, v_new[:, 0], table, pos)
+        att = blocks.paged_decode_attention(q, k_p, v_p, pos + 1, table,
+                                            lctx)
+        h = h + lctx.dot("wo", att.reshape(b, 1, -1), lp["attn"]["wo"])
+        hn = blocks.rmsnorm(h, lp["ffn_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moe_lib.apply_moe(lp["moe"], hn, cfg.moe, lctx)
+            if cfg.moe.dense_d_ff:
+                y = y + blocks.mlp(lp["mlp"], hn, lctx)
+            h = h + y
+        else:
+            h = h + blocks.mlp(lp["mlp"], hn, lctx)
+        return h, (k_p, v_p)
+
+    # Same serve-path telemetry gate as decode_step: per-layer scoping only
+    # when the caller opened an ft_scope (resolved at trace time).
+    want_ft = telemetry.current_scope() is not None
+    n = cfg.n_layers
+
+    def body(carry, scanned):
+        h, rep = carry
+        lp, k_p, v_p, idx = scanned
+        if want_ft:
+            (h, (k_p, v_p)), rep_l = telemetry.scoped(
+                lambda: layer_fn(lp, h, (k_p, v_p, idx)))
+            rep = rep.merge_at(rep_l, idx + 1)
+        else:
+            h, (k_p, v_p) = layer_fn(lp, h, (k_p, v_p, idx))
+        return (h, rep), (k_p, v_p)
+
+    (x, rep), (new_k, new_v) = loops.scan(
+        body, (x, telemetry.FTReport.empty(rows=n + 1)),
+        (params["layers"], cache["k_pages"], cache["v_pages"],
+         jnp.arange(n)))
+    if want_ft:
+        telemetry.record_report(rep)
+    x = blocks.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["head"]["table"])
+    logits = blocks.lm_head(x, head, ctx)
+    new_cache = {"k_pages": new_k, "v_pages": new_v,
+                 "page_table": table, "length": pos + 1}
+    return logits, new_cache
+
+
 def prefill(params, tokens: jax.Array, cache: Dict[str, Any],
             cfg: ModelConfig, ctx: Ctx, *, chunk: int = 512,
             remat: bool = True,

@@ -198,7 +198,8 @@ def prefill(params, tokens, cache, cfg: ModelConfig, ctx: Ctx, *,
             frames=None, chunk: int = 512, remat: bool = True):
     """Encode audio, pre-compute cross-KV, run the decoder prompt."""
     bsz, s = tokens.shape
-    enc_out, _ = encode(params, frames, cfg, ctx, remat=remat, chunk=chunk)
+    enc_out, enc_rep = encode(params, frames, cfg, ctx, remat=remat,
+                              chunk=chunk)
     x = B.embed(tokens, params["embed"]["table"]).astype(ctx.dtype)
     x = x + params["dec_pos"][:s].astype(ctx.dtype)
     positions = jnp.arange(s)
@@ -233,15 +234,32 @@ def prefill(params, tokens, cache, cfg: ModelConfig, ctx: Ctx, *,
         h = h + gelu_mlp(lp["mlp"], hn, lctx)
         return h, (k, v, xk4, xv4)
 
-    fn = B.make_remat(layer_fn, remat)
+    # Serve-path telemetry gate, like transformer.prefill: per-layer scoping
+    # only when the caller opened an ft_scope, INSIDE the remat wrapper.
+    # Row layout matches forward (encoder rows 1..enc_layers from the
+    # encode() report, decoder layer idx at row 1 + enc_layers + idx).
+    want_ft = telemetry.current_scope() is not None
 
-    def body(h, scanned):
+    def wrapped(lp, h, idx):
+        return telemetry.scoped(lambda: layer_fn(lp, h, idx))
+
+    fn = B.make_remat(wrapped if want_ft else layer_fn, remat)
+    rep0 = enc_rep.expand_rows(1 + cfg.enc_layers + cfg.n_layers)
+
+    def body(carry, scanned):
+        h, rr = carry
         lp, idx = scanned
-        h, kv = fn(lp, h, idx)
-        return h, kv
+        if want_ft:
+            (h, kv), rep_l = fn(lp, h, idx)
+            rr = rr.merge_at(rep_l, 1 + cfg.enc_layers + idx)
+        else:
+            h, kv = fn(lp, h, idx)
+        return (h, rr), kv
 
-    x, (ks, vs, xks, xvs) = loops.scan(
-        body, x, (params["dec_layers"], jnp.arange(cfg.n_layers)))
+    (x, rep), (ks, vs, xks, xvs) = loops.scan(
+        body, (x, rep0), (params["dec_layers"], jnp.arange(cfg.n_layers)))
+    if want_ft:
+        telemetry.record_report(rep)
     max_len = cache["k"].shape[2]
     pad = max_len - s
     k_full = jnp.pad(ks.astype(cache["k"].dtype),
@@ -262,8 +280,7 @@ def decode_step(params, token, cache, cfg: ModelConfig, ctx: Ctx):
     x = x + jnp.take(params["dec_pos"], pos, axis=0)[:, None, :
                                                      ].astype(ctx.dtype)
 
-    def body(h, scanned):
-        lp, k_c, v_c, xk_c, xv_c, idx = scanned
+    def layer_fn(lp, h, k_c, v_c, xk_c, xv_c, idx):
         lctx = ctx.fold(100 + idx)
         hn = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
         q = lctx.dot("wq", hn, lp["attn"]["wq"])
@@ -290,9 +307,29 @@ def decode_step(params, token, cache, cfg: ModelConfig, ctx: Ctx):
         h = h + gelu_mlp(lp["mlp"], hn, lctx)
         return h, (k_c, v_c)
 
-    x, (k_n, v_n) = loops.scan(
-        body, x, (params["dec_layers"], cache["k"], cache["v"],
-                  cache["xk"], cache["xv"], jnp.arange(cfg.n_layers)))
+    # Serve-path telemetry gate, like transformer.decode_step: decoder layer
+    # idx records at row 1 + enc_layers + idx (forward's layout — encoder
+    # rows stay zero, no encoder work happens in a decode step).
+    want_ft = telemetry.current_scope() is not None
+    rows = 1 + cfg.enc_layers + cfg.n_layers
+
+    def body(carry, scanned):
+        h, rep = carry
+        lp, k_c, v_c, xk_c, xv_c, idx = scanned
+        if want_ft:
+            (h, kv), rep_l = telemetry.scoped(
+                lambda: layer_fn(lp, h, k_c, v_c, xk_c, xv_c, idx))
+            rep = rep.merge_at(rep_l, 1 + cfg.enc_layers + idx)
+        else:
+            h, kv = layer_fn(lp, h, k_c, v_c, xk_c, xv_c, idx)
+        return (h, rep), kv
+
+    (x, rep), (k_n, v_n) = loops.scan(
+        body, (x, telemetry.FTReport.empty(rows=rows)),
+        (params["dec_layers"], cache["k"], cache["v"],
+         cache["xk"], cache["xv"], jnp.arange(cfg.n_layers)))
+    if want_ft:
+        telemetry.record_report(rep)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = ctx.dot("lm_head", x, params["head"]["table"])
     new_cache = {"k": k_n, "v": v_n, "xk": cache["xk"], "xv": cache["xv"],

@@ -41,14 +41,9 @@ def make_serve_fns(cfg: ModelConfig, run: RunConfig, *,
     each returns an extra trailing `telemetry.FTReport` (per-site, per-layer
     rows) for the request batch — the serve-side telemetry feed."""
     mod = model_zoo.module_for(cfg)
-    if with_report and cfg.family not in ("dense", "moe", "vlm"):
-        # Only the transformer backbone's serve paths scope their scan
-        # bodies per layer (records appended from an unscoped scan body to
-        # the outer report scope would leak tracers). Extending the scoped
-        # carry to the ssm/hybrid/encdec serve scans is a ROADMAP follow-up.
-        raise NotImplementedError(
-            f"with_report serve telemetry is not supported for the "
-            f"{cfg.family!r} family yet (transformer-backed families only)")
+    # Every family's serve paths gate per-layer scoping on an open ft_scope
+    # (PR 9): transformer (PR 8), ssm/hybrid/encdec scan bodies carry the
+    # scoped report the same way, so with_report works across the zoo.
     dtype = jnp.bfloat16 if run.dtype == "bfloat16" else jnp.float32
     ctx = Ctx(ft=run.ft, key=None, dtype=dtype, attn_shard=run.attn_shard,
               attn_impl=run.attn_impl)

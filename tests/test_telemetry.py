@@ -390,10 +390,41 @@ def test_serve_generate_feeds_sink():
         assert rec["ft"]["detected"] == 0.0      # no injection in serve
 
 
-def test_serve_with_report_unsupported_families_raise():
+@pytest.mark.parametrize("arch", ["mamba2-780m", "zamba2-2.7b",
+                                  "whisper-medium"])
+def test_serve_telemetry_all_families(arch):
+    """PR 9 closes the PR-8 follow-on: the ssm/hybrid/encdec serve scans
+    carry the scoped report like the transformer's, so `with_report` serve
+    telemetry works across the zoo — per-layer site attribution included.
+    Runs on the pallas FT backend, whose kernels report the (nonzero)
+    checksum residual of even a clean run, so row presence is assertable."""
+    from repro.core.policy import FTConfig
     from repro.train import serve
 
-    cfg = registry.get_smoke("mamba2-780m")
-    run = RunConfig(model=cfg, ft=ONLINE_BLOCK, dtype="float32")
-    with pytest.raises(NotImplementedError):
-        serve.make_serve_fns(cfg, run, with_report=True)
+    cfg = registry.get_smoke(arch)
+    mod = model_zoo.module_for(cfg)
+    params = mod.init(cfg, KEY, jnp.float32)
+    ft = FTConfig(action="correct", level="block", backend="pallas")
+    run = RunConfig(model=cfg, ft=ft, dtype="float32", attn_chunk=16)
+    sc = serve.ServeConfig(max_len=32, batch_slots=2)
+    mem = metrics_lib.MemoryEmitter()
+    sink = metrics_lib.MetricsSink([mem])
+    prompts = np.asarray(jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size))
+    extra = None
+    if cfg.family == "encdec":
+        extra = jax.random.normal(KEY, (2, cfg.n_audio_frames, cfg.d_model),
+                                  jnp.float32)
+    out = serve.generate(params, prompts, cfg, run, sc, max_new_tokens=2,
+                         sink=sink, extra=extra)
+    assert out.shape == (2, 2)
+    assert len(mem.records) == 3                 # 1 prefill + 2 decode
+    assert mem.records[0]["gauges"]["phase"] == "prefill"
+    for rec in mem.records:
+        assert "ft" in rec
+        assert rec["ft"]["detected"] == 0.0      # clean run
+        rows = rec.get("ft_sites") or []
+        assert rows                              # residuals attributed
+        assert any(r["layer"] is not None for r in rows)  # per-layer rows
+    dec_sites = {r["site"] for r in mem.records[-1]["ft_sites"]}
+    expect = {"ssm": "in_proj", "hybrid": "dec_qk", "encdec": "dec_qk"}
+    assert expect[cfg.family] in dec_sites
