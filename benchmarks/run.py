@@ -13,7 +13,7 @@ import traceback
 SUITES = ("stepwise_gemm", "ft_schemes", "codegen_shapes",
           "fused_epilogue", "error_injection", "online_vs_offline",
           "moe_dispatch", "flash_attention", "backward_path",
-          "tune_campaign", "telemetry_overhead", "serve_engine")
+          "tune_campaign", "telemetry_overhead", "serve_engine", "ft_plan")
 
 
 def main() -> None:

@@ -4,8 +4,11 @@ Online algorithm-based fault tolerance (ABFT) for GEMM: detection AND
 correction of compute-unit soft errors, fused with the GEMM itself
 (ICS'23: "Anatomy of High-Performance GEMM with Online Fault Tolerance").
 """
-from .policy import (FTConfig, InjectionSpec, ONLINE_BLOCK, OFFLINE_DETECT,
-                     NONFUSED_BASELINE, FT_OFF)
+from .policy import (FTConfig, FTPolicy, InjectionSpec, ONLINE_BLOCK,
+                     OFFLINE_DETECT, NONFUSED_BASELINE, FT_OFF,
+                     resolve_ft, promote, EscalationController,
+                     plan_ft, FTPlan, SiteCost, note_site,
+                     record_site_costs, pareto_curve, uniform_overhead_s)
 from .ft_gemm import (ft_dot, ft_dot_fused, ft_batched_dot,
                       ft_grouped_matmul, ft_grouped_matmul_buffer,
                       ft_verdict_dot, grouped_row_tile)
@@ -14,8 +17,11 @@ from . import abft
 from .fault_injection import Injector
 
 __all__ = [
-    "FTConfig", "InjectionSpec", "ONLINE_BLOCK", "OFFLINE_DETECT",
-    "NONFUSED_BASELINE", "FT_OFF", "ft_dot", "ft_dot_fused",
+    "FTConfig", "FTPolicy", "InjectionSpec", "ONLINE_BLOCK", "OFFLINE_DETECT",
+    "NONFUSED_BASELINE", "FT_OFF", "resolve_ft", "promote",
+    "EscalationController", "plan_ft", "FTPlan", "SiteCost", "note_site",
+    "record_site_costs", "pareto_curve", "uniform_overhead_s",
+    "ft_dot", "ft_dot_fused",
     "ft_batched_dot", "ft_grouped_matmul", "ft_grouped_matmul_buffer",
     "grouped_row_tile",
     "ft_verdict_dot", "FTReport", "ft_scope", "current_scope", "abft",

@@ -45,7 +45,8 @@ import numpy as np
 
 from . import abft, telemetry
 from .fault_injection import Injector
-from .policy import FTConfig, InjectionSpec, FT_OFF
+from .policy import (FTConfig, FTLike, InjectionSpec, FT_OFF, note_site,
+                     resolve_ft)
 
 #: PR-4 backward-path switches, read at trace time. Both default to the
 #: kernel-protected paths; the legacy behaviours are kept for the
@@ -155,7 +156,7 @@ def _ft_matmul_2d(ft: FTConfig, spec, a, b, key):
         return _matmul_f32acc(a, b).astype(a.dtype), *_ZERO_SUMMARY()
     if ft.backend == "pallas":
         from repro.kernels import ops as kops
-        out, rep = kops.ft_matmul_report(a, b, ft=ft, spec=spec)
+        out, rep = kops.ft_matmul_report(a, b, ft=ft, spec=spec, key=key)
         det = jnp.sum(rep[..., 0]).astype(jnp.int32)
         maxres = jnp.max(rep[..., 5])
         return out, det, maxres
@@ -212,13 +213,15 @@ def _record(det, maxres, corrects: bool,
         scope.record_summary(det, maxres, corrects, site=site)
 
 
-def ft_dot(x: jax.Array, w: jax.Array, ft: FTConfig = FT_OFF,
+def ft_dot(x: jax.Array, w: jax.Array, ft: FTLike = FT_OFF,
            key: Optional[jax.Array] = None,
            spec: Optional[InjectionSpec] = None,
            bwd_inject=None, site: Optional[str] = None) -> jax.Array:
     """Fault-tolerant dense projection: (…, K) @ (K, N) → (…, N).
 
-    ft    — FTConfig policy (see repro.core.policy).
+    ft    — FTConfig (uniform) or FTPolicy (per-site — resolved against
+            ``site`` right here, before any backend/spec derivation, so the
+            resolved level flows into the existing template/autotune keys).
     key   — optional PRNG key driving the stochastic SEU injector
             (ft.inject_rate); None ⇒ no stochastic injection.
     spec  — optional deterministic single-SEU injection (tests/benchmarks).
@@ -226,9 +229,13 @@ def ft_dot(x: jax.Array, w: jax.Array, ft: FTConfig = FT_OFF,
             SEU inside the named *backward* GEMM (conformance tests).
     site  — optional structured telemetry label for this call site (e.g.
             "w_gate"); attributes the recorded (det, max_residual) summary
-            to a stable per-site slot in the step's FTReport.
+            to a stable per-site slot in the step's FTReport, and keys the
+            FTPolicy resolution + planner cost attribution.
     """
+    ft = resolve_ft(ft, site)
     _check_bwd_inject(ft, bwd_inject)
+    note_site(site, "2d", int(np.prod(x.shape[:-1], dtype=np.int64)),
+              w.shape[-1], x.shape[-1], in_bytes=jnp.dtype(x.dtype).itemsize)
     if not ft.enabled and key is None and spec is None:
         # Fast path: a plain dot XLA can pattern-match without custom_vjp.
         return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
@@ -272,7 +279,8 @@ def _fused_epilogue_impl(ft: FTConfig, spec, act, x2, w, bias, key,
     if ft.enabled and ft.backend == "pallas":
         from repro.kernels import ops as kops
         res, rep = kops.fused_matmul(x2, w, bias=bias, act=act, ft=ft,
-                                     inject=spec, save_act_grad=want_grad)
+                                     inject=spec, save_act_grad=want_grad,
+                                     key=key)
         out, actp = res if want_grad else (res, None)
         det = jnp.sum(rep[..., 0]).astype(jnp.int32)
         maxres = jnp.max(rep[..., 5])
@@ -374,7 +382,7 @@ _ft_fused_cvjp.defvjp(_ft_fused_fwd, _ft_fused_bwd)
 def ft_dot_fused(x: jax.Array, w: jax.Array,
                  bias: Optional[jax.Array] = None,
                  act: Optional[str] = None,
-                 ft: FTConfig = FT_OFF,
+                 ft: FTLike = FT_OFF,
                  key: Optional[jax.Array] = None,
                  spec: Optional[InjectionSpec] = None,
                  bwd_inject=None, site: Optional[str] = None) -> jax.Array:
@@ -392,10 +400,14 @@ def ft_dot_fused(x: jax.Array, w: jax.Array,
     accumulator), so the backward is two protected GEMMs + one elementwise
     product — no pre-activation recompute. ``bwd_inject`` =
     ("dx"|"dw", InjectionSpec) lands an SEU in the named backward GEMM."""
+    ft = resolve_ft(ft, site)
     _check_bwd_inject(ft, bwd_inject)
     if bias is None and act is None:
+        # Delegates to ft_dot, which records the planner cost as "2d".
         return ft_dot(x, w, ft=ft, key=key, spec=spec, bwd_inject=bwd_inject,
                       site=site)
+    note_site(site, "fused", int(np.prod(x.shape[:-1], dtype=np.int64)),
+              w.shape[-1], x.shape[-1], in_bytes=jnp.dtype(x.dtype).itemsize)
     if not ft.enabled and key is None and spec is None:
         # Fast path: plain fused composition XLA pattern-matches.
         y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
@@ -441,7 +453,7 @@ def _ft_bmm_backend(ft: FTConfig, spec, a, b, key):
         # jnp path's inject_spec (which masks on row/col iotas only).
         out, rep = kops.grouped_gemm_call(
             BatchedKernelSpec(ft_level=ft.level), a3, b3, ft=ft, inject=spec,
-            inj_batch=-1)
+            inj_batch=-1, key=key)
         det = jnp.sum(rep[..., 0]).astype(jnp.int32)
         maxres = jnp.max(rep[..., 5])
         return out.reshape(lead + out.shape[-2:]), det, maxres
@@ -473,7 +485,7 @@ def _ft_bmm_bwd(ft, spec, res, cts):
 _ft_bmm_cvjp.defvjp(_ft_bmm_fwd, _ft_bmm_bwd)
 
 
-def ft_batched_dot(a: jax.Array, b: jax.Array, ft: FTConfig = FT_OFF,
+def ft_batched_dot(a: jax.Array, b: jax.Array, ft: FTLike = FT_OFF,
                    key: Optional[jax.Array] = None,
                    spec: Optional[InjectionSpec] = None,
                    site: Optional[str] = None) -> jax.Array:
@@ -481,7 +493,12 @@ def ft_batched_dot(a: jax.Array, b: jax.Array, ft: FTConfig = FT_OFF,
     Leading dims must match (broadcast not supported — callers reshape).
     On `ft.backend == "pallas"` the whole batch runs as one batched Pallas
     kernel with per-slice checksums/report rows (PR 3). `site` labels the
-    call for per-site telemetry attribution (see ft_dot)."""
+    call for per-site telemetry attribution (see ft_dot) and keys the
+    FTPolicy resolution."""
+    ft = resolve_ft(ft, site)
+    note_site(site, "batched", a.shape[-2], b.shape[-1], a.shape[-1],
+              batch=int(np.prod(a.shape[:-2], dtype=np.int64)),
+              in_bytes=jnp.dtype(a.dtype).itemsize)
     if not ft.enabled and key is None and spec is None:
         return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
     y, det, maxres = _ft_bmm_cvjp(ft, spec, a, b, key)
@@ -600,7 +617,7 @@ def _ft_grouped_2d(ft: FTConfig, spec, buf, w, gid, row_end, key):
             bm=bm)
         out, rep = kgrouped.grouped_buffer_call(
             kspec, buf, w, gid=gid, row_end=row_end, params=p, ft=ft,
-            inject=spec)
+            inject=spec, key=key)
         det = jnp.sum(rep[..., 0]).astype(jnp.int32)
         maxres = jnp.max(rep[..., 5])
         return out, det, maxres
@@ -657,13 +674,14 @@ def _ft_grouped_bwd(ft, spec, bwd_inject, res, cts):
     dbuf, _, _ = _ft_grouped_2d(ft, _bwd_injection(bwd_inject, "dbuf"),
                                 g_buf, jnp.swapaxes(w, -1, -2),
                                 gid, row_end, kx)
+    kw = jax.random.fold_in(key, 7) if key is not None else None
     dw = _grouped_dw(ft, _bwd_injection(bwd_inject, "dw"), buf, g_buf, gid,
-                     row_end)
+                     row_end, kw)
     return (dbuf, dw.astype(w.dtype), _float0(gid), _float0(row_end),
             _float0(key))
 
 
-def _grouped_dw(ft: FTConfig, inject, buf, g_buf, gid, row_end):
+def _grouped_dw(ft: FTConfig, inject, buf, g_buf, gid, row_end, key=None):
     """The grouped backward dw ("tgmm"): dw[g] = X_gᵀ G_g, (G, K, N) f32.
 
     pallas backend (and `TGMM_USE_KERNEL`) — ONE output-stationary Pallas
@@ -688,7 +706,7 @@ def _grouped_dw(ft: FTConfig, inject, buf, g_buf, gid, row_end):
                                ft_level=ft.level, spec=kspec, bm=bm)
         dw, _rep = kgrouped.tgmm_buffer_call(
             kspec, buf, g_buf, gid=gid, row_end=row_end, params=p, ft=ft,
-            inject=inject)
+            inject=inject, key=key)
         # Backward-pass corrections are applied but not counted (DESIGN.md).
         return dw
     # jnp path: per-row-tile outer products segment-summed per group —
@@ -731,10 +749,13 @@ _ft_grouped_cvjp.defvjp(_ft_grouped_fwd, _ft_grouped_bwd,
 
 
 def grouped_row_tile(t: int, n: int, k: int, dtype, n_groups: int,
-                     ft: FTConfig) -> int:
+                     ft: FTLike, site: Optional[str] = None) -> int:
     """The row-tile (group-alignment) granularity `ft_grouped_matmul` would
     use for this problem — exposed so multi-GEMM callers (the MoE FFN) can
-    build ONE layout/buffer and stay in buffer space across GEMMs."""
+    build ONE layout/buffer and stay in buffer space across GEMMs. Under an
+    `FTPolicy`, pass the ``site`` of the buffer's FIRST grouped GEMM (the
+    layout is shared across the chain, so one resolution decides it)."""
+    ft = resolve_ft(ft, site)
     if ft.enabled and ft.backend == "pallas":
         from repro.kernels import grouped as kgrouped
         from repro.kernels.templates import BatchedKernelSpec
@@ -745,7 +766,7 @@ def grouped_row_tile(t: int, n: int, k: int, dtype, n_groups: int,
 
 
 def ft_grouped_matmul_buffer(buf: jax.Array, w: jax.Array, gid: jax.Array,
-                             row_end: jax.Array, ft: FTConfig = FT_OFF,
+                             row_end: jax.Array, ft: FTLike = FT_OFF,
                              key: Optional[jax.Array] = None,
                              spec: Optional[InjectionSpec] = None,
                              bwd_inject=None,
@@ -757,7 +778,10 @@ def ft_grouped_matmul_buffer(buf: jax.Array, w: jax.Array, gid: jax.Array,
     gather once instead of round-tripping per GEMM. ``bwd_inject`` =
     ("dbuf"|"dw", InjectionSpec) lands an SEU in the named backward GEMM
     (the dw one is the tgmm kernel on the pallas backend)."""
+    ft = resolve_ft(ft, site)
     _check_bwd_inject(ft, bwd_inject)
+    note_site(site, "grouped", buf.shape[0], w.shape[-1], buf.shape[-1],
+              batch=w.shape[0], in_bytes=jnp.dtype(buf.dtype).itemsize)
     if not ft.enabled and key is None and spec is None:
         # Fast path mirroring ft_dot: plain grouped product, no custom_vjp.
         return _grouped_dot_jnp(buf, w, gid).astype(buf.dtype)
@@ -768,7 +792,7 @@ def ft_grouped_matmul_buffer(buf: jax.Array, w: jax.Array, gid: jax.Array,
 
 
 def ft_grouped_matmul(x: jax.Array, w: jax.Array, group_ids: jax.Array,
-                      ft: FTConfig = FT_OFF,
+                      ft: FTLike = FT_OFF,
                       key: Optional[jax.Array] = None,
                       spec: Optional[InjectionSpec] = None,
                       bwd_inject=None,
@@ -784,6 +808,7 @@ def ft_grouped_matmul(x: jax.Array, w: jax.Array, group_ids: jax.Array,
     elsewhere). Backend follows `ft.backend` like `ft_dot`."""
     from repro.kernels.grouped import layout as glayout
 
+    ft = resolve_ft(ft, site)
     t, k = x.shape
     ng = w.shape[0]
     bm = grouped_row_tile(t, w.shape[-1], k, x.dtype, ng, ft)
@@ -795,12 +820,14 @@ def ft_grouped_matmul(x: jax.Array, w: jax.Array, group_ids: jax.Array,
     return glayout.gather_rows(y_buf, lay)
 
 
-def ft_verdict_dot(a: jax.Array, b: jax.Array, ft: FTConfig,
+def ft_verdict_dot(a: jax.Array, b: jax.Array, ft: FTLike,
                    spec: Optional[InjectionSpec] = None,
-                   key: Optional[jax.Array] = None
+                   key: Optional[jax.Array] = None,
+                   site: Optional[str] = None
                    ) -> Tuple[jax.Array, abft.Verdict]:
     """2-D ft matmul that also returns the Verdict — used by the offline-ABFT
     recompute loop (§5.5) and by tests asserting detection behaviour."""
+    ft = resolve_ft(ft, site)
     a2 = a.reshape(-1, a.shape[-1]) if a.ndim != 2 else a
     fn = _fused_ft_matmul_2d if ft.fused else _nonfused_ft_matmul_2d
     return fn(ft, spec, a2, b, key)

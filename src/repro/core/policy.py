@@ -13,11 +13,32 @@ Mirrors the paper's design space:
               (separate encode / multiply / verify passes over HBM).
   * verify  — "step": verify every k-step (online, corrects one SEU per
               interval → many per GEMM); "final": verify once per output tile.
+
+PR 10 adds the *per-site* layer on top of the single `FTConfig`:
+
+  * `FTPolicy` — ordered (site-pattern → FTConfig) override rules with a
+    default fallthrough. Everything that used to take one `FTConfig`
+    (`Ctx.ft`, `RunConfig.ft`, the `core.ft_gemm` dispatch fronts) now
+    accepts an FTConfig OR an FTPolicy; `resolve_ft(ft, site)` is the one
+    coercion point. A bare FTConfig resolves to itself for every site, so
+    legacy configs are bit-identical by construction.
+  * `plan_ft` — the static planner: per-site roofline-predicted FT overhead
+    (memory-bound sites absorb checksum FLOPs nearly free — Kosaian &
+    Rashmi, arXiv 2104.09455) drives a greedy
+    overhead-per-protected-FLOP assignment under a global overhead budget.
+  * `EscalationController` — the runtime loop closure: subscribes to
+    `telemetry.StormDetector.on_alert` and promotes a storming site
+    (detect→correct, final→step) for a cool-down window; `current_policy()`
+    returns a fresh frozen policy, so jit retraces exactly when the
+    resolved level actually changes.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Optional
+import fnmatch
+import json
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,3 +104,372 @@ class InjectionSpec:
 
 
 NO_INJECTION: Optional[InjectionSpec] = None
+
+
+# ---------------------------------------------------------------------------
+# per-site policy (PR 10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FTPolicy:
+    """Ordered site-pattern → `FTConfig` override rules.
+
+    ``rules`` is an ordered tuple of ``(pattern, FTConfig)`` pairs; patterns
+    are `fnmatch`-style globs over the PR-8 site registry labels
+    (``"moe_gate"``, ``"attn_*"``, ``"dec_?k"``, …). `resolve` returns the
+    FIRST matching rule's config, falling through to ``default``; a ``None``
+    site (an unlabelled call) resolves to the default. Frozen and hashable,
+    so a policy can ride `Ctx`/`RunConfig` straight into jit static
+    arguments — promoting a site produces a *different* policy object and
+    therefore a retrace, which is exactly how a runtime escalation switches
+    the compiled kernels.
+
+        FTPolicy(rules=(("moe_gate", ONLINE_BLOCK),
+                        ("attn_*", OFFLINE_DETECT.replace(verify="final"))),
+                 default=FT_OFF)
+    """
+    rules: Tuple[Tuple[str, FTConfig], ...] = ()
+    default: FTConfig = ONLINE_BLOCK
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(
+            (str(p), c) for p, c in self.rules))
+        for pat, cfg in self.rules:
+            if not isinstance(cfg, FTConfig):
+                raise TypeError(f"rule {pat!r} maps to {type(cfg).__name__}, "
+                                f"expected FTConfig")
+        if not isinstance(self.default, FTConfig):
+            raise TypeError("FTPolicy.default must be an FTConfig, got "
+                            f"{type(self.default).__name__}")
+
+    @staticmethod
+    def uniform(ft: "FTConfig") -> "FTPolicy":
+        """A rule-free policy: every site resolves to ``ft`` — behaviorally
+        identical to threading the bare FTConfig."""
+        return FTPolicy(rules=(), default=ft)
+
+    def resolve(self, site: Optional[str]) -> FTConfig:
+        if site is not None:
+            for pat, cfg in self.rules:
+                if fnmatch.fnmatchcase(site, pat):
+                    return cfg
+        return self.default
+
+    def override(self, *rules: Tuple[str, FTConfig]) -> "FTPolicy":
+        """A new policy with ``rules`` PREPENDED (they win over existing
+        ones — first match takes precedence)."""
+        return FTPolicy(rules=tuple(rules) + self.rules, default=self.default)
+
+    def resolved_table(self, sites: Sequence[str]) -> Dict[str, FTConfig]:
+        return {s: self.resolve(s) for s in sites}
+
+
+FTLike = Union[FTConfig, FTPolicy]
+
+
+def resolve_ft(ft: FTLike, site: Optional[str]) -> FTConfig:
+    """THE per-site resolution point: FTConfig-or-FTPolicy → FTConfig.
+
+    A bare FTConfig is returned unchanged (legacy behavior, bit-identical
+    including tune-cache keys); a policy resolves the site label against its
+    rules. Every dispatch front (`core.ft_gemm`, `kernels.ops`,
+    `kernels.grouped.dispatch`, `models.blocks.Ctx`) calls this before any
+    spec/params derivation, so the resolved per-site level flows into the
+    existing template and autotune cache keys untouched."""
+    if isinstance(ft, FTPolicy):
+        return ft.resolve(site)
+    return ft
+
+
+def as_policy(ft: FTLike) -> FTPolicy:
+    return ft if isinstance(ft, FTPolicy) else FTPolicy.uniform(ft)
+
+
+def promote(ft: FTConfig) -> FTConfig:
+    """Storm promotion: detect→correct and final→step. An "off" site stays
+    off (it produces no detections, so it cannot storm — promoting it would
+    silently change coverage outside the planner's budget)."""
+    if not ft.enabled:
+        return ft
+    return ft.replace(action="correct", verify="step")
+
+
+class EscalationController:
+    """Runtime storm→policy loop closure (the PR-8 follow-on).
+
+    Subscribes to `telemetry.StormDetector.on_alert` (directly or through
+    `tools.metrics.MetricsSink.on_storm`): an alert PROMOTES the storming
+    site (`promote`: detect→correct, final→step) for ``cooldown_steps``
+    steps. `current_policy()` returns the base policy with one prepended
+    rule per live promotion — a fresh frozen `FTPolicy`, so feeding it to a
+    jitted step retraces iff the promotion set changed (`version` ticks on
+    every change; cache it to skip rebuilding).
+
+        detector = telemetry.StormDetector()
+        esc = EscalationController(run.ft, cooldown_steps=32).attach(detector)
+        ...
+        detector.observe(step, site_counts)       # may fire -> promote
+        loss = train_step(params, batch, esc.current_policy())
+        esc.step_end(step)                        # expire cool-downs
+    """
+
+    def __init__(self, policy: FTLike, *, cooldown_steps: int = 64):
+        self.base = as_policy(policy)
+        self.cooldown_steps = int(cooldown_steps)
+        self._promoted: Dict[str, int] = {}      # site -> expiry step
+        self.version = 0
+
+    def attach(self, detector) -> "EscalationController":
+        """Subscribe to anything exposing ``on_alert(cb)`` (StormDetector)
+        or ``on_storm(cb)`` (MetricsSink)."""
+        sub = getattr(detector, "on_alert", None) or getattr(
+            detector, "on_storm", None)
+        if sub is None:
+            raise TypeError(f"{type(detector).__name__} has neither "
+                            f"on_alert nor on_storm")
+        sub(self.handle_alert)
+        return self
+
+    def handle_alert(self, alert) -> None:
+        base = self.base.resolve(alert.site)
+        if promote(base) == base:
+            return                               # already as strong as it gets
+        expiry = int(alert.step) + self.cooldown_steps
+        if self._promoted.get(alert.site) != expiry:
+            self._promoted[alert.site] = expiry
+            self.version += 1
+
+    def step_end(self, step: int) -> None:
+        expired = [s for s, e in self._promoted.items() if step >= e]
+        for s in expired:
+            del self._promoted[s]
+        if expired:
+            self.version += 1
+
+    @property
+    def promoted_sites(self) -> Dict[str, int]:
+        return dict(self._promoted)
+
+    def current_policy(self) -> FTPolicy:
+        if not self._promoted:
+            return self.base
+        rules = tuple((site, promote(self.base.resolve(site)))
+                      for site in sorted(self._promoted))
+        return self.base.override(*rules)
+
+
+# ---------------------------------------------------------------------------
+# static planner: roofline-budgeted per-site FT levels
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SiteCost:
+    """One aggregated GEMM population at a site, recorded at trace time by
+    the `core.ft_gemm` / `models.blocks` dispatch fronts under
+    `record_site_costs` (shapes are static, so `jax.eval_shape` is enough
+    to collect them — no compute)."""
+    site: str
+    kind: str          # "2d" | "fused" | "batched" | "grouped" | "tgmm" | "flash"
+    m: int
+    n: int
+    k: int
+    batch: int = 1
+    in_bytes: int = 4
+    count: int = 1
+
+    @property
+    def flops(self) -> float:
+        from repro.kernels import search
+        return self.count * search.ft_plan_base(
+            self.kind, self.m, self.n, self.k, self.batch, self.in_bytes)[0]
+
+    def times(self, action: str, verify: str) -> Tuple[float, float]:
+        """(base_time_s, ft_overhead_time_s) for this population under the
+        given rung — `kernels.search.ft_plan_cost`'s roofline delta."""
+        from repro.kernels import search
+        base, over = search.ft_plan_cost(
+            self.kind, self.m, self.n, self.k, self.batch, self.in_bytes,
+            action=action, verify=verify)
+        return self.count * base, self.count * over
+
+
+_SITE_COSTS: Optional[Dict[tuple, SiteCost]] = None
+
+
+@contextlib.contextmanager
+def record_site_costs():
+    """Collect `SiteCost` records from every protected dispatch front
+    traced inside the context. Yields the dict; use with `jax.eval_shape`:
+
+        with policy.record_site_costs() as costs:
+            jax.eval_shape(loss_fn, params, batch)
+        plan = policy.plan_ft(costs.values(), budget_frac=0.05)
+    """
+    global _SITE_COSTS
+    prev, _SITE_COSTS = _SITE_COSTS, {}
+    try:
+        yield _SITE_COSTS
+    finally:
+        _SITE_COSTS = prev
+
+
+def note_site(site: Optional[str], kind: str, m: int, n: int, k: int, *,
+              batch: int = 1, in_bytes: int = 4) -> None:
+    """Dispatch-front hook: record one launch's geometry (no-op unless a
+    `record_site_costs` context is open and the call is site-labelled)."""
+    if _SITE_COSTS is None or site is None:
+        return
+    key = (site, kind, int(m), int(n), int(k), int(batch), int(in_bytes))
+    rec = _SITE_COSTS.get(key)
+    if rec is None:
+        _SITE_COSTS[key] = SiteCost(site, kind, int(m), int(n), int(k),
+                                    int(batch), int(in_bytes))
+    else:
+        rec.count += 1
+
+
+#: Protection rungs, weakest→strongest. Coverage means ≥ the first rung;
+#: later rungs only strengthen an already-covered site.
+LADDER: Tuple[Tuple[str, str], ...] = (
+    ("detect", "final"), ("correct", "final"), ("correct", "step"))
+
+
+@dataclasses.dataclass(frozen=True)
+class SitePlan:
+    site: str
+    flops: float
+    base_time_s: float
+    action: str               # "off" | "detect" | "correct"
+    verify: str
+    overhead_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FTPlan:
+    """`plan_ft`'s result: the policy plus its predicted economics."""
+    policy: FTPolicy
+    budget_frac: float
+    base_time_s: float
+    overhead_s: float
+    coverage: float                    # protected flops / total site flops
+    sites: Tuple[SitePlan, ...]
+
+    @property
+    def overhead_frac(self) -> float:
+        return self.overhead_s / self.base_time_s if self.base_time_s else 0.0
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "budget_frac": self.budget_frac,
+            "base_time_s": self.base_time_s,
+            "overhead_s": self.overhead_s,
+            "overhead_frac": self.overhead_frac,
+            "coverage": self.coverage,
+            "sites": [dataclasses.asdict(s) for s in self.sites],
+        }, indent=2, sort_keys=True)
+
+
+def _aggregate(costs: Sequence[SiteCost]) -> Dict[str, List[SiteCost]]:
+    by_site: Dict[str, List[SiteCost]] = {}
+    for c in costs:
+        by_site.setdefault(c.site, []).append(c)
+    return by_site
+
+
+def plan_ft(costs: Sequence[SiteCost], *, budget_frac: float = 0.05,
+            base: FTConfig = ONLINE_BLOCK) -> FTPlan:
+    """Assign each site the strongest FT rung fitting under a global
+    predicted-overhead budget (``budget_frac`` of the un-protected roofline
+    step time).
+
+    Greedy by predicted overhead-per-protected-FLOP, in two prefix-stopped
+    phases: (1) COVERAGE — sites gain the cheapest rung (detect/final) in
+    ascending cost-per-FLOP order until the first unaffordable site, then
+    stop; (2) STRENGTH — covered sites upgrade rung-by-rung (correct/final,
+    then correct/step), cheapest upgrade first, stopping at the first
+    unaffordable upgrade. Prefix-stopping (never skip-and-continue) makes
+    the plan monotone in the budget: a larger budget always yields a
+    superset of coverage and, per site, an equal-or-stronger rung.
+
+    The returned policy carries one exact-label rule per protected site
+    (``base`` with the planned action/verify) over an "off" default, so an
+    unplanned site label falls through to unprotected — the budget stays
+    honest at runtime."""
+    by_site = _aggregate(costs)
+    if not by_site:
+        return FTPlan(FTPolicy(rules=(), default=base.replace(action="off")),
+                      budget_frac, 0.0, 0.0, 0.0, ())
+
+    flops = {s: sum(c.flops for c in recs) for s, recs in by_site.items()}
+    base_t = {s: sum(c.times("off", "final")[0] for c in recs)
+              for s, recs in by_site.items()}
+    over = {s: {rung: sum(c.times(*rung)[1] for c in recs)
+                for rung in LADDER}
+            for s, recs in by_site.items()}
+    total_flops = sum(flops.values())
+    total_base = sum(base_t.values())
+    budget_s = budget_frac * total_base
+
+    level: Dict[str, int] = {}         # site -> index into LADDER
+    spent = 0.0
+
+    # Phase 1 — coverage (prefix-stop on the first unaffordable site).
+    first = LADDER[0]
+    order = sorted(by_site, key=lambda s: (over[s][first] / max(flops[s], 1.0),
+                                           s))
+    for s in order:
+        cost = over[s][first]
+        if spent + cost > budget_s:
+            break
+        level[s] = 0
+        spent += cost
+
+    # Phase 2 — strength upgrades (prefix-stop on the first unaffordable).
+    while True:
+        candidates = []
+        for s, li in level.items():
+            if li + 1 < len(LADDER):
+                delta = over[s][LADDER[li + 1]] - over[s][LADDER[li]]
+                candidates.append((max(delta, 0.0) / max(flops[s], 1.0),
+                                   s, delta))
+        if not candidates:
+            break
+        _, s, delta = min(candidates)
+        if spent + delta > budget_s:
+            break
+        level[s] += 1
+        spent += delta
+
+    plans = []
+    for s in sorted(by_site):
+        if s in level:
+            action, verify = LADDER[level[s]]
+            ovh = over[s][LADDER[level[s]]]
+        else:
+            action, verify, ovh = "off", base.verify, 0.0
+        plans.append(SitePlan(s, flops[s], base_t[s], action, verify, ovh))
+
+    rules = tuple((p.site, base.replace(action=p.action, verify=p.verify))
+                  for p in plans if p.action != "off")
+    policy = FTPolicy(rules=rules, default=base.replace(action="off"))
+    covered = sum(p.flops for p in plans if p.action != "off")
+    return FTPlan(policy, budget_frac, total_base, spent,
+                  covered / total_flops if total_flops else 0.0,
+                  tuple(plans))
+
+
+def uniform_overhead_s(costs: Sequence[SiteCost], *,
+                       action: str = "correct",
+                       verify: str = "step") -> float:
+    """Predicted overhead of protecting EVERY site at one rung — the
+    uniform-`correct` bar the planned policy must beat at equal coverage."""
+    return sum(c.times(action, verify)[1] for c in costs)
+
+
+def pareto_curve(costs: Sequence[SiteCost],
+                 budgets: Sequence[float] = (0.005, 0.01, 0.02, 0.03, 0.05,
+                                             0.08, 0.12, 0.2),
+                 *, base: FTConfig = ONLINE_BLOCK) -> List[FTPlan]:
+    """Coverage-vs-overhead Pareto sweep: one `plan_ft` per budget point
+    (monotone by construction — see `plan_ft`)."""
+    return [plan_ft(costs, budget_frac=b, base=base) for b in budgets]

@@ -190,6 +190,50 @@ engine's `transformer.paged_decode_step` launches per layer)::
     # accumulator is verified before the output rescale) —
     # tests/test_serve_engine.py gates this on every PR.
 
+Worked example — per-site adaptive FT policy (PR 10; how a mixed-level
+campaign picks WHICH kernels pay for protection)::
+
+    from repro.core import policy
+    from repro.core.policy import FTPolicy, ONLINE_BLOCK, OFFLINE_DETECT
+
+    # 1. A policy is ordered (site-glob → FTConfig) rules + a default;
+    #    every dispatch front above resolves its own `site=` label, so a
+    #    single Ctx.ft drives different kernel variants per call site.
+    pol = FTPolicy(rules=(("moe_*", ONLINE_BLOCK),
+                          ("attn_*", OFFLINE_DETECT.replace(verify="final"))),
+                   default=ONLINE_BLOCK)
+    ctx = Ctx(ft=pol, key=key)        # a bare FTConfig still works: a
+                                      # uniform policy is bit-identical,
+                                      # tune-cache keys included.
+
+    # 2. The static planner prices each site on the SAME roofline model
+    #    the autotuner scores tiles with (`search.ft_plan_cost`):
+    #    memory-bound sites absorb checksum FLOPs inside the bandwidth
+    #    bound for free; compute-bound projections pay ~2K/(M·N) extra.
+    with policy.record_site_costs() as costs:     # jax.eval_shape — no
+        jax.eval_shape(loss_fn, params, batch)    # compute, full size OK
+    plan = policy.plan_ft(costs.values(), budget_frac=0.01)
+    print(plan.coverage, plan.overhead_frac)      # e.g. 1.00, 0.003
+    ctx = Ctx(ft=plan.policy, key=key)
+
+    # 3. The runtime loop closure: a StormDetector alert PROMOTES the
+    #    storming site (detect→correct, final→step) for a cool-down
+    #    window; current_policy() is a fresh frozen policy, so the jitted
+    #    step retraces exactly when the resolved level changes.
+    esc = policy.EscalationController(plan.policy, cooldown_steps=64)
+    esc.attach(sink)                  # MetricsSink.on_storm / StormDetector
+    loss = train_step(params, batch, esc.current_policy()); esc.step_end(s)
+
+    # Since PR 10 the in-kernel stochastic SEU hook covers the ENTIRE
+    # template family — 2-D, batched, grouped, and tgmm bodies, not just
+    # flash — so whole-model campaigns on the pallas backend run with
+    # zero jnp-injector call sites: pass key= to any front above with
+    # ft.inject_rate > 0 (rate 0 with a key stays bit-identical).
+    # `benchmarks/ft_plan.py` prints the coverage-vs-overhead Pareto
+    # curve and gates planned < uniform-correct at ≥95% coverage in CI;
+    # render a dumped plan with
+    # `python -m repro.tools.report --policy benchmarks/ft_plan_moe.json`.
+
 The epilogue extension hook is unchanged (register an `EpilogueOp` — give
 it a ``grad`` rule and it can also ride the act_grad multi-output variant
 — see `templates/epilogues.py`); batched/grouped specs accept aux-free

@@ -73,11 +73,13 @@ def batched_gemm_call(spec: BatchedKernelSpec, a: jax.Array, b: jax.Array, *,
                       inj_batch: int = 0,
                       params: Optional[KernelParams] = None,
                       interpret: Optional[bool] = None,
-                      out_dtype=None
+                      out_dtype=None,
+                      key: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Uniform batched GEMM: a (B, M, K) × b (B, K, N) or (K, N) → (B, M, N)
     in ONE Pallas launch (leading batch grid axis — no per-slice loop).
-    Returns (C, report|None); the FT report is (B, gm, gn, W)."""
+    Returns (C, report|None); the FT report is (B, gm, gn, W). ``key``
+    drives the in-kernel stochastic SEU hook when ``ft.inject_rate > 0``."""
     batch, m, k = a.shape
     shared = b.ndim == 2
     n = b.shape[-1]
@@ -109,11 +111,13 @@ def batched_gemm_call(spec: BatchedKernelSpec, a: jax.Array, b: jax.Array, *,
     b = _pad_last2(b, ke, ne)
     dims = jnp.array([m, n, k], jnp.int32) if (rspec.masked or rspec.ft) \
         else None
-    inj_idx = inj_mag = None
+    inj_idx = inj_mag = rng = None
     if rspec.ft:
+        from .. import flashft
         inj_idx, inj_mag = encode_batched_injection(inject, inj_batch)
+        rng = flashft.encode_rng(key, ft)
     out, rep = registry.batched_kernel_call(
-        a, b, inj_idx=inj_idx, inj_mag=inj_mag, dims=dims,
+        a, b, inj_idx=inj_idx, inj_mag=inj_mag, rng=rng, dims=dims,
         spec=rspec, params=rp, ft=ft,
         interpret=_should_interpret(interpret), out_dtype=out_dtype)
     if not divisible:
@@ -162,7 +166,8 @@ def grouped_buffer_call(spec: BatchedKernelSpec, buf: jax.Array,
                         ft: Optional[FTConfig] = None,
                         inject: Optional[InjectionSpec] = None,
                         interpret: Optional[bool] = None,
-                        out_dtype=None
+                        out_dtype=None,
+                        key: Optional[jax.Array] = None
                         ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Grouped GEMM over a prepared buffer: buf (t_buf, K) group-sorted
     (see `layout.scatter_rows`), w (G, K, N). Group metadata comes from a
@@ -193,12 +198,13 @@ def grouped_buffer_call(spec: BatchedKernelSpec, buf: jax.Array,
     buf_p = _pad_last2(buf, t_buf, ke)
     w_p = _pad_last2(w, ke, ne)
     dims = jnp.array([t_buf, n, k], jnp.int32)
-    inj_idx = inj_mag = None
+    inj_idx = inj_mag = rng = None
     if rspec.ft:
-        from .. import ftgemm
+        from .. import flashft, ftgemm
         inj_idx, inj_mag = ftgemm.encode_injection(inject)
+        rng = flashft.encode_rng(key, ft)
     out, rep = registry.batched_kernel_call(
-        buf_p, w_p, inj_idx=inj_idx, inj_mag=inj_mag, dims=dims,
+        buf_p, w_p, inj_idx=inj_idx, inj_mag=inj_mag, rng=rng, dims=dims,
         gid=gid, row_end=row_end, spec=rspec, params=rp, ft=ft,
         interpret=_should_interpret(interpret), out_dtype=out_dtype)
     if ne != n:
@@ -212,7 +218,8 @@ def grouped_matmul_rows(spec: BatchedKernelSpec, x: jax.Array, w: jax.Array,
                         inject: Optional[InjectionSpec] = None,
                         params: Optional[KernelParams] = None,
                         interpret: Optional[bool] = None,
-                        out_dtype=None
+                        out_dtype=None,
+                        key: Optional[jax.Array] = None
                         ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Row-space grouped GEMM: y[r] = x[r] @ w[group_ids[r]], any group
     sizes (including empty and ragged-last), zero capacity padding."""
@@ -225,7 +232,7 @@ def grouped_matmul_rows(spec: BatchedKernelSpec, x: jax.Array, w: jax.Array,
     buf = layout_mod.scatter_rows(x, lay)
     y_buf, rep = grouped_buffer_call(spec, buf, w, lay, params=p, ft=ft,
                                      inject=inject, interpret=interpret,
-                                     out_dtype=out_dtype)
+                                     out_dtype=out_dtype, key=key)
     return layout_mod.gather_rows(y_buf, lay), rep
 
 
@@ -253,7 +260,8 @@ def tgmm_buffer_call(spec: BatchedKernelSpec, buf: jax.Array,
                      ft: Optional[FTConfig] = None,
                      inject: Optional[InjectionSpec] = None,
                      interpret: Optional[bool] = None,
-                     out_dtype=None
+                     out_dtype=None,
+                     key: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Grouped transpose GEMM over prepared buffers:
     ``dw[g] = buf_gᵀ gbuf_g`` with buf (t_buf, K) and gbuf (t_buf, N) both
@@ -294,12 +302,13 @@ def tgmm_buffer_call(spec: BatchedKernelSpec, buf: jax.Array,
     buf_p = _pad_last2(buf, t_buf, ke)
     gbuf_p = _pad_last2(gbuf, t_buf, ne)
     dims = jnp.array([t_buf, n, k], jnp.int32)
-    inj_idx = inj_mag = None
+    inj_idx = inj_mag = rng = None
     if rspec.ft:
-        from .. import ftgemm
+        from .. import flashft, ftgemm
         inj_idx, inj_mag = ftgemm.encode_injection(inject)
+        rng = flashft.encode_rng(key, ft)
     dw, rep = registry.tgmm_kernel_call(
-        buf_p, gbuf_p, inj_idx=inj_idx, inj_mag=inj_mag, dims=dims,
+        buf_p, gbuf_p, inj_idx=inj_idx, inj_mag=inj_mag, rng=rng, dims=dims,
         gid=gid, row_end=row_end, n_groups=ng, spec=rspec, params=rp,
         ft=ft, interpret=_should_interpret(interpret), out_dtype=out_dtype)
     dw = dw[:, :k, :n]
@@ -365,7 +374,8 @@ def tgmm_matmul_rows(spec: BatchedKernelSpec, x: jax.Array, g: jax.Array,
                      inject: Optional[InjectionSpec] = None,
                      params: Optional[KernelParams] = None,
                      interpret: Optional[bool] = None,
-                     out_dtype=None
+                     out_dtype=None,
+                     key: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Row-space grouped transpose GEMM:
     ``dw[e] = Σ_{r: group_ids[r]=e} x[r] ⊗ g[r]`` — any group sizes
@@ -382,4 +392,4 @@ def tgmm_matmul_rows(spec: BatchedKernelSpec, x: jax.Array, g: jax.Array,
     return tgmm_buffer_call(spec, layout_mod.scatter_rows(x, lay),
                             layout_mod.scatter_rows(g, lay), lay, params=p,
                             ft=ft, inject=inject, interpret=interpret,
-                            out_dtype=out_dtype)
+                            out_dtype=out_dtype, key=key)

@@ -108,7 +108,9 @@ def gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
               inject: Optional[InjectionSpec] = None,
               params: Optional[autotune.KernelParams] = None,
               interpret: Optional[bool] = None,
-              out_dtype=None) -> Tuple[jax.Array, Optional[jax.Array]]:
+              out_dtype=None,
+              key: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """The template subsystem's front door: run any registered kernel
     variant on an arbitrary (M, K) × (K, N) problem.
 
@@ -120,6 +122,8 @@ def gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
     ft        — FTConfig for FT specs (verify schedule, correction, τ);
                 defaults to online-correcting at `spec.ft_level`.
     inject    — optional deterministic SEU (tests/benchmarks).
+    key       — PRNG key for the in-kernel stochastic SEU hook; armed only
+                when ``ft.inject_rate > 0`` (see `flashft.encode_rng`).
 
     Returns (C, report) — report is None for non-FT specs, else the
     per-block [detected, corrected, row, col, magnitude, max_residual, τ,
@@ -154,9 +158,11 @@ def gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
         assert residual.shape == (m, n), (residual.shape, (m, n))
         residual = _pad2(residual, me, ne)
 
-    inj_idx = inj_mag = dims = None
+    inj_idx = inj_mag = rng = dims = None
     if rspec.ft:
+        from . import flashft
         inj_idx, inj_mag = ftgemm.encode_injection(inject)
+        rng = flashft.encode_rng(key, ft)
     if masked:
         dims = jnp.array([m, n, k], jnp.int32)
         a = _pad2(a, me, ke)
@@ -164,7 +170,7 @@ def gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
 
     out, rep = registry.kernel_call(
         a, b, bias=bias, residual=residual, inj_idx=inj_idx,
-        inj_mag=inj_mag, dims=dims, spec=rspec, params=rp, ft=ft,
+        inj_mag=inj_mag, rng=rng, dims=dims, spec=rspec, params=rp, ft=ft,
         interpret=_should_interpret(interpret), out_dtype=out_dtype)
     if masked:
         out = (tuple(o[:m, :n] for o in out) if spec.extra_outputs
@@ -194,7 +200,8 @@ def fused_matmul(a: jax.Array, b: jax.Array, *,
                  params: Optional[autotune.KernelParams] = None,
                  interpret: Optional[bool] = None,
                  out_dtype=None,
-                 save_act_grad: bool = False
+                 save_act_grad: bool = False,
+                 key: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Canonical fused-epilogue GEMM: C = act(A·B + bias) + residual in one
     kernel — the matmul→bias→activation sequence without the second HBM
@@ -215,7 +222,7 @@ def fused_matmul(a: jax.Array, b: jax.Array, *,
         spec = dataclasses.replace(spec, extra_outputs=("act_grad",))
     return gemm_call(spec, a, b, bias=bias, residual=residual, ft=ft,
                      inject=inject, params=params, interpret=interpret,
-                     out_dtype=out_dtype)
+                     out_dtype=out_dtype, key=key)
 
 
 @traced("kernel/grouped_gemm")
@@ -227,8 +234,9 @@ def grouped_gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
                       inj_batch: int = 0,
                       params: Optional[autotune.KernelParams] = None,
                       interpret: Optional[bool] = None,
-                      out_dtype=None) -> Tuple[jax.Array,
-                                               Optional[jax.Array]]:
+                      out_dtype=None,
+                      key: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """The batched/grouped front door (PR 3) — `gemm_call`'s sibling for the
     leading-batch-axis variant space, dispatching on operand ranks:
 
@@ -260,19 +268,21 @@ def grouped_gemm_call(spec: KernelSpec, a: jax.Array, b: jax.Array, *,
         assert group_ids is None, "uniform batched GEMM takes no group_ids"
         return grouped_mod.batched_gemm_call(
             bspec, a, b, ft=ft, inject=inject, inj_batch=inj_batch,
-            params=params, interpret=interpret, out_dtype=out_dtype)
+            params=params, interpret=interpret, out_dtype=out_dtype,
+            key=key)
     assert a.ndim == 2 and group_ids is not None, (a.shape, group_ids)
     if b.ndim == 2:                      # tgmm: two row-aligned buffers
         assert n_groups is not None, "tgmm dispatch needs n_groups"
         return grouped_mod.tgmm_matmul_rows(
             dataclasses.replace(bspec, epilogue=(), tgmm=True), a, b,
             group_ids, n_groups=n_groups, ft=ft, inject=inject,
-            params=params, interpret=interpret, out_dtype=out_dtype)
+            params=params, interpret=interpret, out_dtype=out_dtype,
+            key=key)
     assert b.ndim == 3, (a.shape, b.shape)
     return grouped_mod.grouped_matmul_rows(
         dataclasses.replace(bspec, grouped=True), a, b, group_ids, ft=ft,
         inject=inject, params=params, interpret=interpret,
-        out_dtype=out_dtype)
+        out_dtype=out_dtype, key=key)
 
 
 def ft_matmul(a: jax.Array, b: jax.Array, *,
@@ -292,14 +302,16 @@ def ft_matmul_report(a: jax.Array, b: jax.Array, *,
                      spec: Optional[InjectionSpec] = None,
                      params: Optional[autotune.KernelParams] = None,
                      interpret: Optional[bool] = None,
-                     out_dtype=None) -> Tuple[jax.Array, jax.Array]:
+                     out_dtype=None,
+                     key: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
     """FT-GEMM returning (C, report[gm, gn, 8]) — see ftgemm.REPORT_WIDTH.
     Ragged shapes dispatch to the masked kernel; the checksum math is
     masked identically, so ABFT detection/correction works on the ragged
     edge tiles."""
     return gemm_call(KernelSpec(ft_level=ft.level), a, b, ft=ft,
                      inject=spec, params=params, interpret=interpret,
-                     out_dtype=out_dtype)
+                     out_dtype=out_dtype, key=key)
 
 
 def _flash_spec(ft: FTConfig, direction: str, dh_p: int,

@@ -305,6 +305,75 @@ def select_best(m: int, n: int, k: int, *, in_bytes: int = 4,
 
 
 # ---------------------------------------------------------------------------
+# Planner cost model (PR 10 — additive; the autotune scoring above is pinned
+# by the tune-campaign cache diff and is deliberately untouched)
+# ---------------------------------------------------------------------------
+
+#: In-kernel GEMM count per population kind: how many k-loop GEMMs one
+#: logical site launch runs (flash fwd = QK + PV; the 2-D/fused/batched/
+#: grouped/tgmm kinds are one GEMM each).
+_PLAN_GEMMS = {"flash": 2}
+
+#: Reference k-tile for the step-verify count — matches MAX_TILE so the
+#: model's verify cadence tracks what the autotuner would actually pick
+#: for a large-k problem without consulting (or populating) the tune cache.
+_PLAN_BK_REF = MAX_TILE
+
+
+def ft_plan_base(kind: str, m: int, n: int, k: int, batch: int = 1,
+                 in_bytes: int = 4) -> Tuple[float, float]:
+    """(flops, hbm_bytes) of one *unprotected* launch of a site population.
+
+    Deliberately tile-free: the planner prices sites against each other on
+    pure problem geometry (a dims-only roofline), so planning never reads —
+    or writes — the autotune cache. For ``kind == "flash"`` the convention
+    is m = query rows, n = KV rows, k = head dim, batch = batch·heads; the
+    QK and PV GEMMs both count, and K/V stream once in the model (the
+    re-stream factor cancels in the overhead *delta* the planner uses)."""
+    gemms = _PLAN_GEMMS.get(kind, 1)
+    flops = gemms * 2.0 * m * n * k * batch
+    if kind == "flash":
+        bytes_ = (m * k + 2.0 * n * k + m * k) * in_bytes * batch
+    elif kind == "tgmm":
+        # Output-stationary dw: m is the reduction (buffer-row) dim; the
+        # (k, n) output is written once per group in f32 — batch carries
+        # the group count here.
+        bytes_ = (m * k + m * n) * in_bytes + max(batch, 1) * k * n * 4.0
+    else:
+        bytes_ = (m * k + k * n + m * n) * in_bytes * batch
+        if kind == "grouped":
+            bytes_ = (m * k + m * n) * in_bytes + batch * k * n * in_bytes
+    return flops, bytes_
+
+
+def ft_plan_cost(kind: str, m: int, n: int, k: int, batch: int = 1,
+                 in_bytes: int = 4, *, action: str = "correct",
+                 verify: str = "step") -> Tuple[float, float]:
+    """(base_time_s, ft_overhead_time_s) for one site population under a
+    protection rung — the roofline *delta*, so memory-bound sites absorb
+    their checksum FLOPs for free (Kosaian & Rashmi, arXiv 2104.09455)
+    while compute-bound ones pay the full maintenance + verify price.
+
+    Maintenance (any enabled action): running column + row checksums touch
+    each streamed operand element once and fold it with a MAC —
+    ≈ 2·(M·K + K·N) FLOPs per GEMM. Verify: ≈ 3·M·N per pass (two checksum
+    reductions of the accumulator + compare), `verify="step"` paying it
+    every ⌈K/bk_ref⌉ steps vs once at `"final"`; `action="correct"` adds the
+    branchless rank-1 correction update ≈ 2·M·N per pass."""
+    flops, bytes_ = ft_plan_base(kind, m, n, k, batch, in_bytes)
+    base = roofline.kernel_time_s(flops, bytes_)
+    if action == "off":
+        return base, 0.0
+    gemms = _PLAN_GEMMS.get(kind, 1)
+    maint = gemms * 2.0 * (m * k + k * n) * batch
+    n_verify = max(1, math.ceil(k / _PLAN_BK_REF)) if verify == "step" else 1
+    per_pass = 3.0 * m * n + (2.0 * m * n if action == "correct" else 0.0)
+    verify_flops = gemms * per_pass * n_verify * batch
+    prot = roofline.kernel_time_s(flops + maint + verify_flops, bytes_)
+    return base, max(prot - base, 0.0)
+
+
+# ---------------------------------------------------------------------------
 # Ragged-tile fitting (masked dispatch)
 # ---------------------------------------------------------------------------
 

@@ -82,16 +82,19 @@ class Layout:
 
 def layout(spec: KernelSpec) -> Layout:
     if spec.tgmm:
-        # [inj?, mag?, dims, gid, row_end] | x, g | dw [, rep] |
+        # [inj?, mag?, rng?, dims, gid, row_end] | x, g | dw [, rep] |
         # acc [, colck, rowck] | [amax, bmax, t0]
         if spec.ft:
-            return Layout(5, 2, 2, 3, 3)
+            return Layout(6, 2, 2, 3, 3)
         return Layout(3, 2, 1, 1, 0)
     aux = int(spec.needs_bias) + int(spec.needs_residual)
     grp = 2 if spec.grouped else 0      # gid[num_tiles], row_end[G]
     nxo = len(spec.extra_outputs)
     if spec.ft:
-        return Layout(3 + grp, 2 + aux, 2 + nxo, 3, 2)
+        # FT scalar prefetch: [inj_idx, inj_mag, rng, dims] — rng is the
+        # PR-10 stochastic-SEU seed triple, same slot order as the flash
+        # family ([inj, mag, rng, …]).
+        return Layout(4 + grp, 2 + aux, 2 + nxo, 3, 2)
     return Layout((1 if spec.masked else 0) + grp, 2 + aux, 1 + nxo, 1, 0)
 
 
@@ -151,6 +154,14 @@ def _record(rep_ref, det, mag, row_g, col_g, d_col, d_row, tau, k_elapsed,
 # bits under interpret and compiled modes — unlike the hardware
 # `pltpu.prng_*` primitives, which have no interpret-mode lowering) seeded
 # from the campaign key via two scalar-prefetched int32 words.
+
+
+#: Per-template salts for the GEMM-template family (the flash family owns
+#: 0x51–0x54 in `kernels.flashft`): each template body draws an independent
+#: SEU stream from one campaign key.
+SALT_GEMM2D = 0x55
+SALT_BATCHED = 0x56
+SALT_TGMM = 0x57
 
 
 def _mix32(x):
@@ -221,12 +232,23 @@ def apply_seu(delta, row, col, hit_now, bit_shift: int):
 
 def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
            n_bands: int = 1, verify_step: bool = True, corrects: bool = True,
-           rel_tau: float = 64.0):
+           rel_tau: float = 64.0, inject_rate: float = 0.0,
+           bit_shift: int = 8, grid_m: int = 1, grid_n: int = 1,
+           grid_b: int = 1):
     """Instantiate the kernel body for `spec` with the given static
     parameters. Returns a function matching `layout(spec)`'s ref list.
 
     Batched specs add a leading batch grid axis (uniform batched) or a
-    scalar-prefetched tile→group map (grouped); see `BatchedKernelSpec`."""
+    scalar-prefetched tile→group map (grouped); see `BatchedKernelSpec`.
+
+    ``inject_rate`` > 0 arms the in-kernel stochastic SEU hook (PR-5's
+    flash-family hook, extended to the 2-D/batched/grouped bodies): each
+    output block draws one Bernoulli(rate) SEU from the scalar-prefetched
+    rng triple via `stochastic_seu` and lands it with `apply_seu`
+    (magnitude model = `ft.inject_bit_shift`). The draw is gated on the
+    STATIC rate, so rate-0 renders are bit-identical to pre-hook kernels.
+    ``grid_m``/``grid_n``/``grid_b`` are the launch's grid extents — they
+    make the per-block uid unique across the whole launch."""
     ft = spec.ft
     mode = spec.ft_level
     masked = spec.masked
@@ -243,10 +265,10 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
     def kernel(*refs):
         refs = list(refs)
         if ft:
-            inj_idx_ref, inj_mag_ref, dims_ref = refs[:3]
-            del refs[:3]
+            inj_idx_ref, inj_mag_ref, rng_ref, dims_ref = refs[:4]
+            del refs[:4]
         else:
-            inj_idx_ref = inj_mag_ref = None
+            inj_idx_ref = inj_mag_ref = rng_ref = None
             dims_ref = refs.pop(0) if masked else None
         gid_ref = row_end_ref = None
         if grouped:
@@ -384,6 +406,28 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
                     & hit_now)
         delta = delta + jnp.where(hit_mask, inj_mag_ref[0], 0.0)
 
+        # ---- stochastic SEU hook (PR 10: flash-family hook on the GEMM
+        # bodies). Static-rate gate: rate-0 renders stay bit-identical.
+        if inject_rate > 0.0:
+            salt = SALT_BATCHED if batched else SALT_GEMM2D
+            if batched:
+                uid = (g * grid_m + i) * grid_n + j
+            elif grouped:
+                # Grouped blocks share (i, j) across the batch-of-one grid —
+                # the row-tile index i is already launch-unique.
+                uid = i * grid_n + j
+            else:
+                uid = i * grid_n + j
+            # Live k-span: masked kernels zero loads past the true K, so the
+            # block only accumulates over ceil(tk/bk) steps — drawing over
+            # the padded span would deflate the realized rate.
+            n_live = (((dims_ref[2] + bk - 1) // bk) if masked
+                      else jnp.int32(k_steps))
+            s_hit, s_step, s_row, s_col = stochastic_seu(
+                rng_ref, salt, uid, n_live, bm, bn, inject_rate)
+            delta = apply_seu(delta, s_row, s_col, s_hit & (s == s_step),
+                              bit_shift)
+
         # ---- checksum maintenance + intermediate verification ------------
         if mode == "inner":
             # Verify this step's contribution in isolation (thread-level
@@ -482,7 +526,9 @@ def render(spec: KernelSpec, *, k_steps: int, bm: int, bn: int, bk: int,
 
 def render_tgmm(spec: KernelSpec, *, t_tiles: int, bm: int, bn: int, bk: int,
                 n_bands: int = 1, verify_step: bool = True,
-                corrects: bool = True, rel_tau: float = 64.0):
+                corrects: bool = True, rel_tau: float = 64.0,
+                inject_rate: float = 0.0, bit_shift: int = 8,
+                grid_k: int = 1, grid_n: int = 1):
     """The MoE backward-dw kernel: ``dw[g] = X_gᵀ G_g`` over a group-sorted
     buffer (see `BatchedKernelSpec` docs). Output-stationary over (G, K, N):
 
@@ -499,9 +545,10 @@ def render_tgmm(spec: KernelSpec, *, t_tiles: int, bm: int, bn: int, bk: int,
     of dw_g is (X_g e_K)ᵀ G_g and the row checksum is X_gᵀ (G_g e_N) — both
     computed from operand tiles already in VMEM, never from dw.
 
-    Ref list (see `layout`): FT — [inj_idx(4), inj_mag(1), dims(3), gid,
-    row_end | x, g | dw, rep | acc, colck, rowck | amax, bmax, t0]; non-FT —
-    [dims, gid, row_end | x, g | dw | acc]. ``dims`` is int32 [t_buf, N, K]
+    Ref list (see `layout`): FT — [inj_idx(4), inj_mag(1), rng(3), dims(3),
+    gid, row_end | x, g | dw, rep | acc, colck, rowck | amax, bmax, t0];
+    non-FT — [dims, gid, row_end | x, g | dw | acc]. ``dims`` is int32
+    [t_buf, N, K]
     (true trailing dims — K/N ragged edges are masked in-kernel); injection
     rows/cols are global (K, N) coordinates and ``k_step`` is the row-tile
     index, which selects the owning group."""
@@ -512,10 +559,10 @@ def render_tgmm(spec: KernelSpec, *, t_tiles: int, bm: int, bn: int, bk: int,
     def kernel(*refs):
         refs = list(refs)
         if ft:
-            inj_idx_ref, inj_mag_ref, dims_ref = refs[:3]
-            del refs[:3]
+            inj_idx_ref, inj_mag_ref, rng_ref, dims_ref = refs[:4]
+            del refs[:4]
         else:
-            inj_idx_ref = inj_mag_ref = None
+            inj_idx_ref = inj_mag_ref = rng_ref = None
             dims_ref = refs.pop(0)
         gid_ref = refs.pop(0)
         row_end_ref = refs.pop(0)
@@ -592,6 +639,18 @@ def render_tgmm(spec: KernelSpec, *, t_tiles: int, bm: int, bn: int, bk: int,
         hit_mask = ((_iota2((bk, bn), 0) == r_loc)
                     & (_iota2((bk, bn), 1) == c_loc) & hit)
         delta = delta + jnp.where(hit_mask, inj_mag_ref[0], 0.0)
+
+        # ---- stochastic SEU hook: one draw per stationary (group, ki, ni)
+        # output block, timed on the group-LOCAL tile step so the realized
+        # rate tracks the group's live span (not the whole buffer walk).
+        if inject_rate > 0.0:
+            t0 = t0_ref[0, 0].astype(jnp.int32)
+            n_live = (row_hi - t0 * bm + bm - 1) // bm       # group's tiles
+            uid = (gidx * grid_k + ki) * grid_n + ni
+            s_hit, s_step, s_row, s_col = stochastic_seu(
+                rng_ref, SALT_TGMM, uid, n_live, bk, bn, inject_rate)
+            delta = apply_seu(delta, s_row, s_col,
+                              s_hit & ((t - t0) == s_step), bit_shift)
 
         # ---- per-group running checksums ---------------------------------
         xsum = jnp.sum(x, axis=1, keepdims=True)             # (bm, 1): X e_K

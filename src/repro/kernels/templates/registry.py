@@ -50,6 +50,7 @@ def kernel_call(a: jax.Array, b: jax.Array,
                 residual: Optional[jax.Array] = None,
                 inj_idx: Optional[jax.Array] = None,
                 inj_mag: Optional[jax.Array] = None,
+                rng: Optional[jax.Array] = None,
                 dims: Optional[jax.Array] = None, *,
                 spec: KernelSpec, params: KernelParams,
                 ft: Optional[FTConfig] = None,
@@ -62,8 +63,10 @@ def kernel_call(a: jax.Array, b: jax.Array,
     Operand contract (enforced by `kernels.ops.gemm_call`, the padding
     front door): a (M, K), b (K, N) padded to the tile grid; bias (1, N)
     and residual (M, N) zero-padded likewise; for FT specs inj_idx int32[4]
-    / inj_mag f32[1] (see `ftgemm.encode_injection`); dims int32[3] true
-    (m, n, k) for masked specs (ignored but required for unmasked FT)."""
+    / inj_mag f32[1] (see `ftgemm.encode_injection`) and rng int32[3]
+    (`flashft.encode_rng` — [enable, seed0, seed1], zeros disable the
+    stochastic SEU draw); dims int32[3] true (m, n, k) for masked specs
+    (ignored but required for unmasked FT)."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
@@ -79,7 +82,8 @@ def kernel_call(a: jax.Array, b: jax.Array,
     kernel = emit.render(
         spec, k_steps=grid[2], bm=bm, bn=bn, bk=bk, n_bands=n_bands,
         verify_step=(ft.verify == "step"), corrects=ft.corrects,
-        rel_tau=ft.rel_tau)
+        rel_tau=ft.rel_tau, inject_rate=ft.inject_rate,
+        bit_shift=ft.inject_bit_shift, grid_m=grid[0], grid_n=grid[1])
     lay = emit.layout(spec)
 
     in_specs = [
@@ -107,9 +111,11 @@ def kernel_call(a: jax.Array, b: jax.Array,
     prefetch = []
     if spec.ft:
         assert inj_idx is not None and inj_mag is not None
+        if rng is None:
+            rng = jnp.zeros((3,), jnp.int32)
         if dims is None:
             dims = jnp.array([m, n, k], jnp.int32)
-        prefetch = [inj_idx, inj_mag, dims]
+        prefetch = [inj_idx, inj_mag, rng, dims]
         out_specs.append(pl.BlockSpec((1, 1, REPORT_WIDTH),
                                       lambda i, j, s, *_: (i, j, 0)))
         out_shape.append(jax.ShapeDtypeStruct(
@@ -405,6 +411,7 @@ def flash_dkv_call(q, k, v, g, m, l, di, inj_idx, inj_mag, rng, dims, *,
 def tgmm_kernel_call(x: jax.Array, g: jax.Array,
                      inj_idx: Optional[jax.Array] = None,
                      inj_mag: Optional[jax.Array] = None,
+                     rng: Optional[jax.Array] = None,
                      dims: Optional[jax.Array] = None,
                      gid: Optional[jax.Array] = None,
                      row_end: Optional[jax.Array] = None, *,
@@ -445,14 +452,17 @@ def tgmm_kernel_call(x: jax.Array, g: jax.Array,
     kernel = emit.render_tgmm(
         spec, t_tiles=grid[2], bm=bm, bn=bn, bk=bk, n_bands=n_bands,
         verify_step=(ft.verify == "step"), corrects=ft.corrects,
-        rel_tau=ft.rel_tau)
+        rel_tau=ft.rel_tau, inject_rate=ft.inject_rate,
+        bit_shift=ft.inject_bit_shift, grid_k=grid[0], grid_n=grid[1])
     lay = emit.layout(spec)
 
     if spec.ft:
         assert inj_idx is not None and inj_mag is not None
+        if rng is None:
+            rng = jnp.zeros((3,), jnp.int32)
         if dims is None:
             dims = jnp.array([t_buf, n, k], jnp.int32)
-        prefetch = [inj_idx, inj_mag, dims]
+        prefetch = [inj_idx, inj_mag, rng, dims]
     else:
         assert dims is not None
         prefetch = [dims]
@@ -510,6 +520,7 @@ def tgmm_kernel_call(x: jax.Array, g: jax.Array,
 def batched_kernel_call(a: jax.Array, b: jax.Array,
                         inj_idx: Optional[jax.Array] = None,
                         inj_mag: Optional[jax.Array] = None,
+                        rng: Optional[jax.Array] = None,
                         dims: Optional[jax.Array] = None,
                         gid: Optional[jax.Array] = None,
                         row_end: Optional[jax.Array] = None, *,
@@ -567,16 +578,22 @@ def batched_kernel_call(a: jax.Array, b: jax.Array,
     kernel = emit.render(
         spec, k_steps=grid[-1], bm=bm, bn=bn, bk=bk, n_bands=n_bands,
         verify_step=(ft.verify == "step"), corrects=ft.corrects,
-        rel_tau=ft.rel_tau)
+        rel_tau=ft.rel_tau, inject_rate=ft.inject_rate,
+        bit_shift=ft.inject_bit_shift,
+        grid_m=grid[0] if grouped else grid[1],
+        grid_n=grid[1] if grouped else grid[2],
+        grid_b=1 if grouped else grid[0])
     lay = emit.layout(spec)
 
     prefetch = []
     if spec.ft:
         assert inj_idx is not None and inj_mag is not None
+        if rng is None:
+            rng = jnp.zeros((3,), jnp.int32)
         if dims is None:
             dims = (jnp.array([a.shape[0], n, k], jnp.int32) if grouped
                     else jnp.array([m, n, k], jnp.int32))
-        prefetch = [inj_idx, inj_mag, dims]
+        prefetch = [inj_idx, inj_mag, rng, dims]
     elif spec.masked:
         assert dims is not None
         prefetch = [dims]

@@ -33,7 +33,8 @@ import jax.numpy as jnp
 from repro.core import ft_dot, ft_dot_fused, ft_batched_dot, telemetry
 from repro.core import loops
 from repro.core.ft_gemm import _float0
-from repro.core.policy import FTConfig, FT_OFF
+from repro.core.policy import (FTConfig, FTLike, FT_OFF, note_site,
+                               resolve_ft)
 
 
 def named_subkey(key: Optional[jax.Array], name: str) -> Optional[jax.Array]:
@@ -64,16 +65,48 @@ class Ctx:
     report must attribute every detection to exactly that site. The site
     *names* are the same labels `dot`/`dot_fused`/`bdot` record telemetry
     under ("wq", "w_gate", "attn_qk", …; the flash kernel is one fused site,
-    "attn_flash"). None (default) = campaign covers every GEMM."""
-    ft: FTConfig = FT_OFF
+    "attn_flash"). None (default) = campaign covers every GEMM. Call
+    `check_inject_sites` once per traced forward to fail loudly on labels
+    the registry never saw (a filter that silently matches nothing would
+    report a clean run AS the campaign result).
+
+    ``ft`` is either a plain `FTConfig` (uniform — legacy behavior,
+    bit-identical) or an `FTPolicy` (PR 10): every GEMM resolves its own
+    site label through `ft_for`, so one model trace can mix e.g.
+    correct/step on `moe_*` with detect/final on `attn_*` and off on the
+    rest."""
+    ft: FTLike = FT_OFF
     key: Optional[jax.Array] = None
     dtype: Any = jnp.bfloat16
     attn_shard: str = "heads"
     attn_impl: str = "auto"
     inject_sites: Optional[Tuple[str, ...]] = None
 
+    def ft_for(self, name: Optional[str]) -> FTConfig:
+        """THE per-site resolution point on the model side: the site's
+        `FTConfig` under this context's policy (identity for a bare
+        FTConfig)."""
+        return resolve_ft(self.ft, name)
+
     def site_allowed(self, name: str) -> bool:
         return self.inject_sites is None or name in self.inject_sites
+
+    def check_inject_sites(self) -> None:
+        """Validate ``inject_sites`` against the telemetry site registry —
+        call at the END of a traced forward (every site has registered by
+        then) and raise on labels no GEMM records under, instead of a
+        campaign that silently injects nothing (the PR-5 out-of-grid
+        failure mode, at the filter layer)."""
+        if self.inject_sites is None:
+            return
+        known = set(telemetry.site_labels())
+        unknown = sorted(set(self.inject_sites) - known)
+        if unknown:
+            raise ValueError(
+                f"Ctx.inject_sites names unknown telemetry sites "
+                f"{unknown}: no GEMM in this model records under them, so "
+                f"the campaign would inject nothing. Known sites: "
+                f"{sorted(known)}")
 
     def subkey(self, name: str) -> Optional[jax.Array]:
         if not self.site_allowed(name):
@@ -81,7 +114,8 @@ class Ctx:
         return named_subkey(self.key, name)
 
     def dot(self, name: str, x: jax.Array, w: jax.Array) -> jax.Array:
-        return ft_dot(x, w, ft=self.ft, key=self.subkey(name), site=name)
+        return ft_dot(x, w, ft=self.ft_for(name), key=self.subkey(name),
+                      site=name)
 
     def dot_fused(self, name: str, x: jax.Array, w: jax.Array,
                   bias: Optional[jax.Array] = None,
@@ -89,11 +123,12 @@ class Ctx:
         """Projection with a fused epilogue spec: y = act(x @ w + bias) as
         one kernel-level op (no separate bias/activation passes — see
         repro.core.ft_dot_fused / the kernels.templates subsystem)."""
-        return ft_dot_fused(x, w, bias=bias, act=act, ft=self.ft,
+        return ft_dot_fused(x, w, bias=bias, act=act, ft=self.ft_for(name),
                             key=self.subkey(name), site=name)
 
     def bdot(self, name: str, a: jax.Array, b: jax.Array) -> jax.Array:
-        ft = self.ft if self.ft.protect_attention else FT_OFF
+        ft = self.ft_for(name)
+        ft = ft if ft.protect_attention else FT_OFF
         return ft_batched_dot(a, b, ft=ft, key=self.subkey(name), site=name)
 
     def fold(self, tag: int) -> "Ctx":
@@ -375,6 +410,8 @@ def _flash_attention(q, k, v, *, causal, chunk, ft, key, q_offset):
                 "forced flash path report a clean run.")
     b, sq, h, dh = q.shape
     _, sk, kvh, _ = k.shape
+    note_site("attn_flash", "flash", sq, sk, dh, batch=b * h,
+              in_bytes=jnp.dtype(q.dtype).itemsize)
     q3 = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
     k3 = k.transpose(0, 2, 1, 3).reshape(b * kvh, sk, dh)
     v3 = v.transpose(0, 2, 1, 3).reshape(b * kvh, sk, dh)
@@ -432,13 +469,20 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         q = _shard(q, "batch", None, "heads", None)
         k = _shard(k, "batch", None, "kv_heads", None)
         v = _shard(v, "batch", None, "kv_heads", None)
-    ft = ctx.ft if ctx.ft.protect_attention else FT_OFF
-    if _use_flash(ctx, ft, causal, q.shape[1], k.shape[1], q_offset):
+    # Per-site resolution: the flash kernel is one fused site
+    # ("attn_flash"); the chunked oracle's qk/pv pair shares one resolution
+    # keyed on "attn_qk" (one kernel family, one level — the two GEMMs are
+    # not separable on the flash path either).
+    fft = ctx.ft_for("attn_flash")
+    fft = fft if fft.protect_attention else FT_OFF
+    if _use_flash(ctx, fft, causal, q.shape[1], k.shape[1], q_offset):
         # Targeted campaigns: the flash kernel is one fused injection site.
         fkey = ctx.key if ctx.site_allowed("attn_flash") else None
-        return _flash_attention(q, k, v, causal=causal, chunk=chunk, ft=ft,
+        return _flash_attention(q, k, v, causal=causal, chunk=chunk, ft=fft,
                                 key=fkey, q_offset=q_offset)
-    out, rep = _chunked_core(q, k, v, causal=causal, chunk=chunk, ft=ft,
+    cft = ctx.ft_for("attn_qk")
+    cft = cft if cft.protect_attention else FT_OFF
+    out, rep = _chunked_core(q, k, v, causal=causal, chunk=chunk, ft=cft,
                              key=ctx.key, q_offset=q_offset,
                              inject_sites=ctx.inject_sites)
     telemetry.record_report(rep)
@@ -446,20 +490,28 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                     length: jax.Array, ctx: Ctx) -> jax.Array:
+                     length: jax.Array, ctx: Ctx, *,
+                     site_prefix: str = "dec") -> jax.Array:
     """Single-position attention against a (B, Smax, KVH, dh) cache.
     Positions ≥ length are masked. q: (B, 1, H, dh). GQA is grouped — the
-    cache is never repeat-materialized."""
+    cache is never repeat-materialized.
+
+    ``site_prefix`` labels the two grouped cache GEMMs in the telemetry
+    registry (``{prefix}_qk`` / ``{prefix}_pv``): "dec" for decoder
+    self-attention, "xdec" for whisper's cross-attention over the cached
+    encoder KV, "dec_page" for the paged-cache fallback — so the planner
+    prices each decode population separately instead of one aggregate."""
     b, _, h, dh = q.shape
     s, kvh = k_cache.shape[1], k_cache.shape[2]
     n_rep = h // kvh
     qg = q.reshape(b, kvh, n_rep, dh)                    # (B, KVH, rep, dh)
     kT = jnp.swapaxes(k_cache, 1, 2).swapaxes(2, 3)      # (B, KVH, dh, S)
-    scores = ctx.bdot("dec_qk", qg, kT).astype(jnp.float32) * dh ** -0.5
+    scores = ctx.bdot(f"{site_prefix}_qk", qg, kT
+                      ).astype(jnp.float32) * dh ** -0.5
     mask = jnp.arange(s)[None, :] < length[:, None]      # (B, S)
     scores = jnp.where(mask[:, None, None, :], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    out = ctx.bdot("dec_pv", p, jnp.swapaxes(v_cache, 1, 2))
+    out = ctx.bdot(f"{site_prefix}_pv", p, jnp.swapaxes(v_cache, 1, 2))
     return out.reshape(b, 1, h, dh)
 
 
@@ -479,14 +531,22 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     kv-span clamp folded into the PV tolerance. Recorded as one fused
     telemetry site, "dec_flash". Elsewhere (and under
     ``ctx.attn_impl="chunked"``) the pages are gathered back to the dense
-    (B, S, KVH, dh) layout and `decode_attention` runs as the oracle."""
+    (B, S, KVH, dh) layout and `decode_attention` runs as the oracle,
+    recording under its own "dec_page_qk"/"dec_page_pv" labels (the paged
+    cache GEMMs are a different population than the dense decode path —
+    the planner prices them separately)."""
     b, _, h, dh = q.shape
-    ft = ctx.ft if ctx.ft.protect_attention else FT_OFF
+    ft = ctx.ft_for("dec_flash")
+    ft = ft if ft.protect_attention else FT_OFF
     use_kernel = (ctx.attn_impl != "chunked" and dh % 128 == 0
                   and (ctx.attn_impl == "flash"
                        or (ft.enabled and ft.backend == "pallas")))
     if use_kernel:
         from repro.kernels import ops as kops
+        kvh = k_pages.shape[1]
+        note_site("dec_flash", "flash", h // kvh,
+                  page_table.shape[1] * k_pages.shape[2], dh,
+                  batch=b * kvh, in_bytes=jnp.dtype(q.dtype).itemsize)
         fkey = ctx.key if ctx.site_allowed("dec_flash") else None
         out, rep = kops.flash_ft_decode(q[:, 0], k_pages, v_pages, lengths,
                                         page_table, ft=ft, key=fkey)
@@ -499,7 +559,7 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     from repro.train import kv_cache as _kvc
     kd = _kvc.gather_layer(k_pages, page_table)
     vd = _kvc.gather_layer(v_pages, page_table)
-    return decode_attention(q, kd, vd, lengths, ctx)
+    return decode_attention(q, kd, vd, lengths, ctx, site_prefix="dec_page")
 
 
 def attention(p: Dict[str, Any], x: jax.Array, cfg, ctx: Ctx, *,

@@ -115,6 +115,7 @@ def forward(params, tokens, cfg: ModelConfig, ctx: Ctx, *, remat=True,
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits, rep_h = telemetry.scoped(
         lambda: ctx.dot("lm_head", x, params["head"]["table"]))
+    ctx.check_inject_sites()
     from .transformer import AuxOut
     return logits, AuxOut(jnp.zeros((), jnp.float32), rep.merge(rep_h))
 

@@ -98,7 +98,7 @@ def ssd_chunked(x, dt, a, b_mat, c_mat, d_skip, sc: SSMConfig, ctx: Ctx,
     cb = ft_batched_dot(
         cc_h.transpose(0, 1, 3, 2, 4).reshape(-1, q, n),
         bc_h.transpose(0, 1, 3, 4, 2).reshape(-1, n, q),
-        ft=ctx.ft, key=ctx.subkey("ssd_cb"),
+        ft=ctx.ft, key=ctx.subkey("ssd_cb"), site="ssd_cb",
     ).reshape(bsz, nc, h, q, q).astype(jnp.float32)
     seg = a_cum.transpose(0, 1, 3, 2)                 # (B,nc,H,Q)
     decay = jnp.exp(jnp.clip(seg[..., :, None] - seg[..., None, :],
@@ -109,7 +109,7 @@ def ssd_chunked(x, dt, a, b_mat, c_mat, d_skip, sc: SSMConfig, ctx: Ctx,
     y_diag = ft_batched_dot(
         l_mat.astype(x.dtype).reshape(-1, q, q),
         xc.transpose(0, 1, 3, 2, 4).reshape(-1, q, p),
-        ft=ctx.ft, key=ctx.subkey("ssd_lx"),
+        ft=ctx.ft, key=ctx.subkey("ssd_lx"), site="ssd_lx",
     ).reshape(bsz, nc, h, q, p)
 
     # --- chunk boundary states (GEMM-shaped) ------------------------------
@@ -120,7 +120,7 @@ def ssd_chunked(x, dt, a, b_mat, c_mat, d_skip, sc: SSMConfig, ctx: Ctx,
     states = ft_batched_dot(
         bw.transpose(0, 1, 3, 4, 2).astype(x.dtype).reshape(-1, n, q),
         xc.transpose(0, 1, 3, 2, 4).reshape(-1, q, p),
-        ft=ctx.ft, key=ctx.subkey("ssd_state"),
+        ft=ctx.ft, key=ctx.subkey("ssd_state"), site="ssd_state",
     ).reshape(bsz, nc, h, n, p).astype(jnp.float32)
 
     # --- inter-chunk recurrence (element-wise scan) -----------------------
@@ -142,7 +142,7 @@ def ssd_chunked(x, dt, a, b_mat, c_mat, d_skip, sc: SSMConfig, ctx: Ctx,
     y_off = ft_batched_dot(
         cc_h.transpose(0, 1, 3, 2, 4).astype(x.dtype).reshape(-1, q, n),
         h_prevs.astype(x.dtype).reshape(-1, n, p),
-        ft=ctx.ft, key=ctx.subkey("ssd_ch"),
+        ft=ctx.ft, key=ctx.subkey("ssd_ch"), site="ssd_ch",
     ).reshape(bsz, nc, h, q, p).astype(jnp.float32)
     y_off = y_off * jnp.exp(jnp.clip(a_cum, -60.0, 0.0)
                             ).transpose(0, 1, 3, 2)[..., None]
@@ -278,6 +278,7 @@ def forward(params, tokens, cfg: ModelConfig, ctx: Ctx, *, remat=True,
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits, rep_h = telemetry.scoped(
         lambda: ctx.dot("lm_head", x, params["head"]["table"]))
+    ctx.check_inject_sites()
     return logits, AuxOut(jnp.zeros((), jnp.float32), rep.merge(rep_h))
 
 

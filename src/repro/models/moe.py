@@ -136,7 +136,9 @@ def apply_moe_grouped(p: Dict[str, Any], x: jax.Array, mc: MoEConfig,
     # and one scatter shared by all three GEMMs.
     expert_ids = idx.reshape(t * k)                          # (T·k,)
     rows = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)     # source token
-    bm = grouped_row_tile(t * k, f, d, x.dtype, e, ctx.ft)
+    # The layout's row tile must match the level the first buffer GEMM will
+    # resolve to — pass its site so a policy picks the same variant.
+    bm = grouped_row_tile(t * k, f, d, x.dtype, e, ctx.ft, site="moe_gate")
     lay = glayout.make_layout(expert_ids, e, bm)
     buf = glayout.scatter_rows(xt[rows], lay)                # (t_buf, d)
 

@@ -142,6 +142,7 @@ def forward(params, tokens: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
     table = (params["embed"]["table"].T if cfg.tie_embeddings
              else params["head"]["table"])
     logits, rep_h = telemetry.scoped(lambda: blocks.lm_head(x, table, ctx))
+    ctx.check_inject_sites()
     # "seq" claims the model axis first ⇒ logits stay sequence-sharded and
     # the CE loss is fully local (only the head table is gathered, once).
     return shard(logits, "batch", "seq", "vocab"), AuxOut(aux,

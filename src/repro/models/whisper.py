@@ -166,6 +166,7 @@ def forward(params, batch_or_tokens, cfg: ModelConfig, ctx: Ctx, *,
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits, rep_h = telemetry.scoped(
         lambda: ctx.dot("lm_head", x, params["head"]["table"]))
+    ctx.check_inject_sites()
     from .transformer import AuxOut
     return logits, AuxOut(jnp.zeros((), jnp.float32), rep.merge(rep_h))
 
@@ -300,8 +301,12 @@ def decode_step(params, token, cache, cfg: ModelConfig, ctx: Ctx):
         qx = lctx.dot("xwq", hn, lp["cross"]["wq"]
                       ).reshape(bsz, 1, cfg.n_heads, cfg.head_dim)
         ta = xk_c.shape[1]
+        # Cross-attention over the cached encoder KV is its own site
+        # population ("xdec_*"): full 1500-frame KV span every step, priced
+        # separately from the growing self-attention cache ("dec_*").
         attx = B.decode_attention(qx, xk_c, xv_c,
-                                  jnp.full((bsz,), ta, jnp.int32), lctx)
+                                  jnp.full((bsz,), ta, jnp.int32), lctx,
+                                  site_prefix="xdec")
         h = h + lctx.dot("xwo", attx.reshape(bsz, 1, -1), lp["cross"]["wo"])
         hn = rmsnorm(h, lp["ffn_norm"], cfg.norm_eps)
         h = h + gelu_mlp(lp["mlp"], hn, lctx)

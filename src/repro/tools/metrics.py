@@ -212,7 +212,9 @@ class MetricsSink:
         self._gauges = {}
         self._ft_totals = None
         self._ft_sites = []
-        self._alerts = []
+        # in-place: the detector callback holds a reference to this list
+        # (`on_alert(self._alerts.append)`) — rebinding would orphan it.
+        self._alerts.clear()
         return record
 
     def close(self) -> None:

@@ -130,6 +130,36 @@ def ft_site_table(metrics_path: str, top_n: int = 10) -> str:
     return "\n".join(rows)
 
 
+def policy_table(plan: Dict, metrics_path: str | None = None) -> str:
+    """Resolved per-site FT plan table from an `FTPlan.to_json` dump
+    (benchmarks/ft_plan.py writes one per config). With ``metrics_path``,
+    each planned site's row is joined with the PR-8 per-site counters from
+    the metrics JSONL, so the planned level sits next to what the level
+    actually caught."""
+    agg: Dict[str, Dict] = {}
+    if metrics_path:
+        from repro.tools import metrics as metrics_lib
+        agg = metrics_lib.aggregate_sites(
+            metrics_lib.read_jsonl(metrics_path))
+    rows = ["| site | level | verify | GFLOPs | pred. overhead µs | "
+            "detections | corrected |",
+            "|---|---|---|---|---|---|---|"]
+    for s in sorted(plan.get("sites", ()),
+                    key=lambda s: -float(s.get("flops", 0.0))):
+        a = agg.get(s["site"], {})
+        det = f"{a['detected']:.0f}" if a else "—"
+        cor = f"{a['corrected']:.0f}" if a else "—"
+        rows.append(
+            f"| {s['site']} | {s['action']} | {s['verify']} | "
+            f"{s['flops'] / 1e9:.3f} | {s['overhead_s'] * 1e6:.2f} | "
+            f"{det} | {cor} |")
+    rows.append(
+        f"\ncoverage {100 * plan.get('coverage', 0.0):.1f}% of site FLOPs, "
+        f"predicted overhead {100 * plan.get('overhead_frac', 0.0):.2f}% "
+        f"(budget {100 * plan.get('budget_frac', 0.0):.1f}%)")
+    return "\n".join(rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="benchmarks/dryrun_results.json")
@@ -137,8 +167,21 @@ def main() -> None:
     ap.add_argument("--metrics", default=None,
                     help="metrics JSONL (tools.metrics JsonlEmitter output) "
                          "— renders the per-site FT telemetry table")
+    ap.add_argument("--policy", default=None,
+                    help="FTPlan JSON (core.policy.FTPlan.to_json / "
+                         "benchmarks/ft_plan.py output) — renders the "
+                         "resolved per-site level table, joined with "
+                         "--metrics counters when both are given")
     args = ap.parse_args()
     import os
+    if args.policy:
+        with open(args.policy) as f:
+            plan = json.load(f)
+        print("## Planned FT policy (resolved per-site levels)\n")
+        print(policy_table(plan, args.metrics))
+        if not args.metrics and not os.path.exists(args.json):
+            return
+        print()
     if args.metrics:
         print("## Per-site FT telemetry\n")
         print(ft_site_table(args.metrics))

@@ -1,0 +1,313 @@
+"""Per-site FT policy (PR 10): FTPolicy resolution semantics, the
+uniform-policy ≡ legacy-FTConfig bit-identity (outputs AND tune-cache
+keys), the roofline planner's budget monotonicity, the storm-escalation
+promote/cool-down loop through a MemoryEmitter sink, and the in-kernel
+stochastic SEU hook on the 2-D / batched / grouped / tgmm template
+bodies."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy, telemetry
+from repro.core.ft_gemm import ft_dot
+from repro.core.policy import (FTConfig, FTPolicy, FT_OFF, OFFLINE_DETECT,
+                               ONLINE_BLOCK, EscalationController, SiteCost,
+                               plan_ft, promote, resolve_ft)
+from repro.kernels import ops as kops, tune_cache
+from repro.kernels.grouped import dispatch as gdisp
+from repro.kernels.templates.spec import BatchedKernelSpec
+from repro.models.blocks import Ctx
+from repro.tools import metrics as metrics_lib
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# FTPolicy resolution: precedence, fallthrough, override
+# ---------------------------------------------------------------------------
+
+
+def test_policy_first_match_wins_and_fallthrough():
+    p = FTPolicy(rules=(("moe_gate", FT_OFF),
+                        ("moe_*", OFFLINE_DETECT),
+                        ("attn_*", ONLINE_BLOCK.replace(verify="final"))),
+                 default=ONLINE_BLOCK)
+    assert p.resolve("moe_gate") is FT_OFF            # exact beats later glob
+    assert p.resolve("moe_up") is OFFLINE_DETECT
+    assert p.resolve("attn_qk").verify == "final"
+    assert p.resolve("wq") is ONLINE_BLOCK            # fallthrough
+    assert p.resolve(None) is ONLINE_BLOCK            # unlabelled call
+
+
+def test_policy_glob_classes_match_fnmatch():
+    p = FTPolicy(rules=(("dec_?k", OFFLINE_DETECT),), default=FT_OFF)
+    assert p.resolve("dec_qk") is OFFLINE_DETECT
+    assert p.resolve("dec_page_qk") is FT_OFF         # ? is single-char
+
+
+def test_policy_override_prepends_and_wins():
+    p = FTPolicy(rules=(("wq", OFFLINE_DETECT),), default=FT_OFF)
+    q = p.override(("wq", ONLINE_BLOCK))
+    assert q.resolve("wq") is ONLINE_BLOCK
+    assert p.resolve("wq") is OFFLINE_DETECT          # original untouched
+    assert q.default is FT_OFF
+
+
+def test_policy_is_hashable_and_validates_rules():
+    p = FTPolicy(rules=[("a", FT_OFF)], default=ONLINE_BLOCK)   # list coerced
+    assert isinstance(p.rules, tuple)
+    hash(p)                                           # jit-static-arg ready
+    with pytest.raises(TypeError):
+        FTPolicy(rules=(("a", "correct"),))
+    with pytest.raises(TypeError):
+        FTPolicy(default=None)
+
+
+def test_resolve_ft_identity_on_bare_config():
+    ft = ONLINE_BLOCK
+    # The legacy bit-identity guarantee: a bare FTConfig is returned AS-IS,
+    # so every downstream spec/params/cache-key derivation sees the same
+    # object it always did.
+    assert resolve_ft(ft, "anything") is ft
+    assert resolve_ft(ft, None) is ft
+    assert resolve_ft(FTPolicy.uniform(ft), "anything") is ft
+
+
+def test_promote_semantics():
+    assert promote(OFFLINE_DETECT) == OFFLINE_DETECT.replace(
+        action="correct", verify="step")
+    assert promote(FT_OFF) is FT_OFF                  # off cannot storm
+    strongest = ONLINE_BLOCK.replace(verify="step")
+    assert promote(strongest) == strongest
+
+
+# ---------------------------------------------------------------------------
+# uniform policy ≡ legacy FTConfig: outputs and tune-cache keys
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_uniform_policy_bit_identical(backend):
+    ft = ONLINE_BLOCK.replace(backend=backend)
+    x = _rand((4, 96, 128), seed=1)
+    w = _rand((128, 80), seed=2)
+    legacy = ft_dot(x, w, ft=ft, site="wq")
+    keys_after_legacy = set(tune_cache.default_cache().keys())
+    uniform = ft_dot(x, w, ft=FTPolicy.uniform(ft), site="wq")
+    assert (np.asarray(legacy) == np.asarray(uniform)).all()
+    # the policy wrapper must not mint ANY new autotune cache entries
+    assert set(tune_cache.default_cache().keys()) == keys_after_legacy
+
+
+def test_mixed_policy_switches_level_per_site():
+    x = _rand((64, 128), seed=3)
+    w = _rand((128, 64), seed=4)
+    pol = FTPolicy(rules=(("wq", OFFLINE_DETECT),), default=ONLINE_BLOCK)
+    spec = policy.InjectionSpec(row=3, col=5, magnitude=50.0)
+    hit = ft_dot(x, w, ft=pol, spec=spec, site="wk")     # default: corrected
+    np.testing.assert_allclose(np.asarray(hit), np.asarray(x @ w),
+                               rtol=1e-5, atol=1e-4)
+    # detect-only rule: the SEU is flagged but NOT corrected — it survives
+    missed = ft_dot(x, w, ft=pol, spec=spec, site="wq")
+    assert float(jnp.abs(missed - x @ w).max()) > 1.0
+
+
+# ---------------------------------------------------------------------------
+# planner: cost recording + budget monotonicity
+# ---------------------------------------------------------------------------
+
+
+def _toy_costs():
+    # one fat compute-bound projection, one medium, one memory-bound sliver
+    return [SiteCost("big", "2d", 4096, 4096, 4096, in_bytes=2, count=4),
+            SiteCost("mid", "2d", 1024, 1024, 1024, in_bytes=2, count=4),
+            SiteCost("thin", "batched", 128, 128, 64, batch=32, in_bytes=2)]
+
+
+def test_record_site_costs_via_eval_shape():
+    with policy.record_site_costs() as costs:
+        jax.eval_shape(lambda x, w: ft_dot(x, w, ft=ONLINE_BLOCK, site="wq"),
+                       jax.ShapeDtypeStruct((32, 64), jnp.float32),
+                       jax.ShapeDtypeStruct((64, 16), jnp.float32))
+    assert policy._SITE_COSTS is None                 # closed cleanly
+    [c] = costs.values()
+    assert (c.site, c.kind, c.m, c.n, c.k) == ("wq", "2d", 32, 16, 64)
+    assert c.flops > 0
+
+
+def test_note_site_noop_outside_recorder():
+    policy.note_site("wq", "2d", 8, 8, 8)             # must not raise
+
+
+def test_plan_budget_monotone():
+    costs = _toy_costs()
+    rung = {("off", "final"): -1, ("off", "step"): -1}
+    rung.update({r: i for i, r in enumerate(policy.LADDER)})
+    prev = None
+    for plan in policy.pareto_curve(costs, (0.0, 1e-4, 1e-3, 1e-2, 0.1, 1.0)):
+        cur = {s.site: rung[(s.action, s.verify)] for s in plan.sites}
+        if prev is not None:
+            for site, lvl in cur.items():
+                assert lvl >= prev["levels"][site], (site, plan.budget_frac)
+            assert plan.coverage >= prev["coverage"] - 1e-12
+        assert plan.overhead_s <= plan.budget_frac * plan.base_time_s + 1e-12
+        prev = {"levels": cur, "coverage": plan.coverage}
+
+
+def test_plan_off_sites_fall_through_to_off():
+    # compute-bound sites only: their overhead is strictly positive, so a
+    # zero budget covers nothing (memory-bound sites would ride in free)
+    plan = plan_ft(_toy_costs()[:2], budget_frac=0.0)
+    assert plan.coverage == 0.0
+    assert not plan.policy.resolve("big").enabled
+    assert not plan.policy.resolve("never_seen").enabled  # honest default
+
+
+def test_plan_generous_budget_covers_everything_and_empty_costs_ok():
+    plan = plan_ft(_toy_costs(), budget_frac=10.0)
+    assert plan.coverage == 1.0
+    for s in plan.sites:
+        assert (s.action, s.verify) == ("correct", "step")
+    assert plan_ft([], budget_frac=0.1).sites == ()
+
+
+def test_plan_json_round_trips():
+    import json
+    plan = plan_ft(_toy_costs(), budget_frac=0.05)
+    d = json.loads(plan.to_json())
+    assert d["coverage"] == plan.coverage
+    assert {s["site"] for s in d["sites"]} == {"big", "mid", "thin"}
+
+
+# ---------------------------------------------------------------------------
+# storm escalation: promote / cool-down through the MemoryEmitter sink
+# ---------------------------------------------------------------------------
+
+
+def _mk_report(site, det, cor=0.0, mr=1.0):
+    sid = telemetry.site_id(site)
+    z = jnp.zeros((1, telemetry.site_width()), jnp.float32)
+    return telemetry.FTReport(
+        detected=jnp.float32(det), corrected=jnp.float32(cor),
+        max_residual=jnp.float32(mr),
+        site_detected=z.at[0, sid].add(det),
+        site_corrected=z.at[0, sid].add(cor),
+        site_max_residual=z.at[0, sid].max(mr))
+
+
+def test_escalation_promote_and_cooldown_via_memory_emitter():
+    base = FTPolicy(rules=(("stormy", OFFLINE_DETECT),), default=ONLINE_BLOCK)
+    mem = metrics_lib.MemoryEmitter()
+    sink = metrics_lib.MetricsSink(
+        emitters=[mem],
+        detector=telemetry.StormDetector(window=4, min_detections=3.0))
+    esc = EscalationController(base, cooldown_steps=3).attach(sink)
+    v0 = esc.version
+
+    promoted_step = None
+    for step in range(12):
+        det = 4.0 if step < 3 else 0.0                # burst, then quiet
+        sink.record_ft(_mk_report("stormy", det), step=step)
+        rec = sink.step_end(step)
+        if promoted_step is None and "stormy" in esc.promoted_sites:
+            promoted_step = step
+            assert rec.get("alerts"), "alert must land in this step's record"
+            assert rec["alerts"][0]["site"] == "stormy"
+            lvl = esc.current_policy().resolve("stormy")
+            assert lvl.corrects and lvl.verify == "step"
+            assert esc.version > v0
+        esc.step_end(step)
+
+    assert promoted_step is not None
+    # cool-down expired: the resolved level is back to the base rule
+    assert esc.promoted_sites == {}
+    assert esc.current_policy().resolve("stormy") is OFFLINE_DETECT
+    assert any(r.get("alerts") for r in mem.records)
+
+
+def test_escalation_ignores_unpromotable_sites():
+    base = FTPolicy(rules=(("dark", FT_OFF),), default=ONLINE_BLOCK)
+    esc = EscalationController(base, cooldown_steps=8)
+    alert = telemetry.StormAlert(site="dark", step=0, window_steps=4,
+                                 detections=9.0, rate=2.0,
+                                 background_rate=0.0, threshold_rate=0.5)
+    esc.handle_alert(alert)
+    assert esc.promoted_sites == {}                   # off stays off
+    assert esc.current_policy() is base               # no needless retrace
+
+
+def test_escalation_attach_rejects_non_detector():
+    with pytest.raises(TypeError):
+        EscalationController(ONLINE_BLOCK).attach(object())
+
+
+# ---------------------------------------------------------------------------
+# in-kernel stochastic SEU hook: 2-D / batched / grouped / tgmm bodies
+# ---------------------------------------------------------------------------
+
+_FT_HOT = FTConfig(action="correct", level="block", verify="step",
+                   inject_rate=0.9)
+
+
+def test_stochastic_hook_2d_detects_and_corrects():
+    a, b = _rand((256, 256), seed=5), _rand((256, 256), seed=6)
+    out, rep = kops.ft_matmul_report(a, b, ft=_FT_HOT, key=KEY)
+    assert float(rep[..., 0].sum()) > 0
+    # corrected elements are reconstructed from checksums: ~eps*K residual
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                               rtol=1e-4, atol=5e-3)
+
+
+def test_stochastic_hook_rate_zero_bit_identical():
+    a, b = _rand((256, 256), seed=5), _rand((256, 256), seed=6)
+    ft = _FT_HOT.replace(inject_rate=0.0)
+    out0, rep0 = kops.ft_matmul_report(a, b, ft=ft)
+    out1, rep1 = kops.ft_matmul_report(a, b, ft=ft, key=KEY)
+    assert (np.asarray(out0) == np.asarray(out1)).all()
+    assert (np.asarray(rep0) == np.asarray(rep1)).all()
+
+
+def test_stochastic_hook_batched():
+    a = _rand((4, 128, 128), seed=7)
+    b = _rand((4, 128, 128), seed=8)
+    out, rep = gdisp.batched_gemm_call(BatchedKernelSpec(ft_level="block"),
+                                       a, b, ft=_FT_HOT, key=KEY)
+    assert float(rep[..., 0].sum()) > 0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                               rtol=1e-4, atol=5e-3)
+
+
+def test_stochastic_hook_grouped_and_tgmm():
+    x = _rand((512, 128), seed=9)
+    w = _rand((4, 128, 128), seed=10)
+    g = _rand((512, 128), seed=11)
+    gids = jnp.sort(jax.random.randint(jax.random.PRNGKey(4), (512,), 0, 4))
+    _, repg = gdisp.grouped_matmul_rows(
+        BatchedKernelSpec(ft_level="block", grouped=True), x, w, gids,
+        ft=_FT_HOT, key=KEY)
+    assert float(repg[..., 0].sum()) > 0
+    _, rept = gdisp.tgmm_matmul_rows(
+        BatchedKernelSpec(ft_level="block", tgmm=True), x, g, gids,
+        n_groups=4, ft=_FT_HOT, key=KEY)
+    assert float(rept[..., 0].sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# Ctx.inject_sites validation
+# ---------------------------------------------------------------------------
+
+
+def test_ctx_rejects_unknown_inject_sites():
+    telemetry.site_id("wq")                           # ensure one known label
+    Ctx(ft=ONLINE_BLOCK, key=KEY, dtype=jnp.float32,
+        inject_sites=("wq",)).check_inject_sites()    # known: fine
+    with pytest.raises(ValueError, match="unknown"):
+        Ctx(ft=ONLINE_BLOCK, key=KEY, dtype=jnp.float32,
+            inject_sites=("wq", "definitely_not_a_site")
+            ).check_inject_sites()
